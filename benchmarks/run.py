@@ -1,0 +1,57 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (set BENCH_QUICK=1 for the
+reduced sizes used in CI-style runs).
+
+  table1   Table 1  — KV %, cost, TTFT across 3 workloads x 6 routers
+  fig3     Fig. 3   — predictor NMAE (latency / cost / quality)
+  fig4     Fig. 4   — cumulative social welfare over turns
+  fig5     Fig. 5   — truthful vs strategic bidding utility
+  fig6     Fig. 6   — welfare & solver time vs hub count K
+  fig7     Fig. 7   — Full-Mix / Ideal / Task-Mix / Agent-Mix economics
+  mcmf     §4.3     — naive vs warm-start VCG payment computation
+  kernels  —        — kernel validation-path timings + batched-LCP speedup
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    only = set(sys.argv[1:])
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    def want(name):
+        return not only or name in only
+
+    if want("fig5"):
+        from benchmarks import fig5_truthfulness
+        fig5_truthfulness.run()
+    if want("fig6"):
+        from benchmarks import fig6_clustering
+        fig6_clustering.run()
+    if want("fig7"):
+        from benchmarks import fig7_schemes
+        fig7_schemes.run()
+    if want("mcmf"):
+        from benchmarks import mcmf_scaling
+        mcmf_scaling.run()
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        kernel_bench.run()
+    if want("fig3"):
+        from benchmarks import fig3_predictor
+        fig3_predictor.run()
+    if want("fig4"):
+        from benchmarks import fig4_welfare
+        fig4_welfare.run()
+    if want("table1"):
+        from benchmarks import table1_efficiency
+        table1_efficiency.run()
+    print(f"# total_s={time.time() - t0:.0f}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end serving driver (the paper's deployment, reduced scale).
+
+Serves three workloads through a 6-agent cluster with IEMAS routing and
+batched requests, with failures and stragglers injected — prints the
+Table-1-style metrics plus the market accounts, demonstrating:
+  * cache-affinity routing (KV hit rate),
+  * VCG payments covering agent costs (weak budget balance),
+  * fault tolerance (failed agents quarantined, requests re-auctioned).
+
+Run:  PYTHONPATH=src python examples/serve_cluster.py
+"""
+import json
+
+from repro.core import IEMASRouter
+from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
+
+for workload in ("coqa_like", "quac_like", "hotpot_like"):
+    cluster = SimCluster(n_agents=6, seed=0, max_new_tokens=4,
+                         fail_prob=0.02, straggle_prob=0.05, warmup=True)
+    router = IEMASRouter(cluster.agent_infos(), n_hubs=2)
+    dialogues = generate(WorkloadSpec(workload, n_dialogues=10, seed=1))
+    metrics = run_workload(cluster, router, dialogues, max_rounds=3000)
+    metrics["accounts"] = {k: round(float(v), 3)
+                           for k, v in router.accounts.items()}
+    metrics["quarantined_now"] = sorted(router.quarantined)
+    print(f"== {workload} ==")
+    print(json.dumps(metrics, indent=2, default=float))
+    assert metrics["accounts"]["payments"] >= metrics["accounts"]["agent_costs"] - 1e-6
+print("OK: all workloads served; budget balance held under failures.")

@@ -1,0 +1,15 @@
+"""repro — IEMAS (Incentive-Efficiency Mechanism for Multi-Agent Systems) on JAX.
+
+A production-grade reproduction + extension of:
+  "IEMAS: An Incentive-Efficiency Routing Framework for Open Agentic Web
+   Ecosystems" (CS.NI 2026).
+
+Public API highlights:
+  repro.configs.get_config(arch_id)     -- the 10 assigned architecture configs
+  repro.models.build_model(cfg)         -- JAX model (init / loss / prefill / decode)
+  repro.core.IEMASRouter                -- the paper's Algorithm 1
+  repro.serving.SimCluster              -- simulated heterogeneous agent cluster
+  repro.launch.mesh.make_production_mesh
+"""
+
+__version__ = "0.1.0"

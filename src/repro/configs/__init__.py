@@ -1,0 +1,56 @@
+"""Architecture registry: ``get_config("<arch-id>")`` for every assigned arch."""
+from __future__ import annotations
+
+from repro.configs.base import (
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    cell_supported,
+    model_flops,
+    param_counts,
+)
+
+from repro.configs import (  # noqa: E402
+    rwkv6_3b,
+    mixtral_8x22b,
+    deepseek_v2_lite_16b,
+    seamless_m4t_medium,
+    deepseek_coder_33b,
+    qwen2_72b,
+    qwen3_8b,
+    qwen2_5_32b,
+    llava_next_34b,
+    zamba2_7b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        rwkv6_3b,
+        mixtral_8x22b,
+        deepseek_v2_lite_16b,
+        seamless_m4t_medium,
+        deepseek_coder_33b,
+        qwen2_72b,
+        qwen3_8b,
+        qwen2_5_32b,
+        llava_next_34b,
+        zamba2_7b,
+    )
+}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+__all__ = [
+    "ARCHS", "SHAPES", "ModelConfig", "ShapeConfig", "get_config",
+    "list_archs", "cell_supported", "model_flops", "param_counts",
+]

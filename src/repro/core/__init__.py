@@ -1,0 +1,16 @@
+"""IEMAS core: the paper's primary contribution.
+
+Cache-aware prediction (PrefixLedger + Hoeffding QoS), VCG/MCMF matching
+(run_auction), proxy hubs, and the Algorithm-1 router (IEMASRouter).
+"""
+from repro.core.affinity import PrefixLedger, lcp_length
+from repro.core.auction import AuctionResult, run_auction, solve_allocation
+from repro.core.baselines import BASELINES
+from repro.core.hoeffding import HoeffdingTreeClassifier, HoeffdingTreeRegressor
+from repro.core.hub import Hub, cluster_agents, route_to_hub
+from repro.core.mechanism import (AgentInfo, CompletionObs, IEMASRouter,
+                                  Request, RouteDecision)
+from repro.core.predictor import (AgentPredictor, PredictorInput,
+                                  PredictorPool, QoSEstimate)
+from repro.core.pricing import TokenPrices, observed_cost, predicted_cost
+from repro.core.valuation import ValuationConfig, client_value, welfare_weights

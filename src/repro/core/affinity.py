@@ -1,0 +1,123 @@
+"""Prefix ledger + cache-affinity scores o_ij (Eq. 4).
+
+The proxy maintains, per (agent, dialogue-session), the token sequence of the
+last prompt that agent executed. Affinity of a new prompt p_j to agent i is
+
+    o_ij = LCP(p_j, ledger[i, d(j)]) / max(1, |p_j|)          (Eq. 4)
+
+Arch-aware semantics (DESIGN.md §Arch-applicability): attention agents can
+reuse ANY common prefix; recurrent agents (rwkv/zamba backbones) can only
+reuse an EXACT extension of the previous prompt (the state cannot be rewound),
+so their affinity is |prev| / |p_j| if p_j extends prev, else 0.
+
+``affinity_matrix`` computes the full N x M request-agent matrix; the padded
+batched form is backed by the Pallas LCP kernel (repro.kernels) when
+``use_kernel=True`` — the beyond-paper fast path benchmarked in §Perf.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def lcp_length(a: np.ndarray, b: np.ndarray) -> int:
+    n = min(len(a), len(b))
+    if n == 0:
+        return 0
+    neq = np.nonzero(a[:n] != b[:n])[0]
+    return int(neq[0]) if len(neq) else n
+
+
+class PrefixLedger:
+    def __init__(self):
+        self._store: dict[tuple, np.ndarray] = {}
+        self._touch: dict[tuple, int] = {}
+        self._clock = 0
+
+    def update(self, agent_id: str, dialogue_id: str, prompt_tokens) -> None:
+        self._clock += 1
+        self._store[(agent_id, dialogue_id)] = np.asarray(prompt_tokens,
+                                                          dtype=np.int32)
+        self._touch[(agent_id, dialogue_id)] = self._clock
+
+    def recent_sessions(self, agent_id: str, limit: int) -> set:
+        """The ``limit`` most-recently-served sessions of an agent — a local
+        LRU model of the backend's cache (the hub's 'compact cache-state
+        summary', §4.4). Sessions beyond it are presumed evicted."""
+        items = [(self._touch[k], k[1]) for k in self._store
+                 if k[0] == agent_id]
+        items.sort(reverse=True)
+        return {d for _, d in items[:limit]}
+
+    def get(self, agent_id: str, dialogue_id: str):
+        return self._store.get((agent_id, dialogue_id))
+
+    def evict(self, agent_id: str, dialogue_id: str | None = None) -> None:
+        """Drop ledger entries (agent cache eviction resync, Appx C.2.2)."""
+        if dialogue_id is not None:
+            self._store.pop((agent_id, dialogue_id), None)
+        else:
+            for key in [k for k in self._store if k[0] == agent_id]:
+                self._store.pop(key)
+
+    def sessions(self, agent_id: str) -> list[str]:
+        return [d for (a, d) in self._store if a == agent_id]
+
+    def affinity(self, agent_id: str, dialogue_id: str, prompt_tokens,
+                 *, extension_only: bool = False) -> float:
+        prev = self.get(agent_id, dialogue_id)
+        p = np.asarray(prompt_tokens, dtype=np.int32)
+        if prev is None or len(p) == 0:
+            return 0.0
+        if extension_only:
+            if len(prev) <= len(p) and lcp_length(prev, p) == len(prev):
+                return len(prev) / max(1, len(p))
+            return 0.0
+        return lcp_length(p, prev) / max(1, len(p))
+
+    def affinity_matrix(self, prompts: list, dialogue_ids: list,
+                        agent_ids: list, extension_only_mask=None,
+                        use_kernel: bool = False) -> np.ndarray:
+        """o[j, i] for every (request j, agent i)."""
+        n, m = len(prompts), len(agent_ids)
+        if use_kernel:
+            return self._affinity_matrix_kernel(prompts, dialogue_ids,
+                                                agent_ids, extension_only_mask)
+        out = np.zeros((n, m))
+        for j, (p, d) in enumerate(zip(prompts, dialogue_ids)):
+            for i, a in enumerate(agent_ids):
+                ext = bool(extension_only_mask[i]) if extension_only_mask is not None else False
+                out[j, i] = self.affinity(a, d, p, extension_only=ext)
+        return out
+
+    def _affinity_matrix_kernel(self, prompts, dialogue_ids, agent_ids,
+                                extension_only_mask):
+        """Batched LCP via the Pallas kernel (padded token matrices)."""
+        from repro.kernels.ops import lcp_affinity_op
+
+        n, m = len(prompts), len(agent_ids)
+        max_p = max((len(p) for p in prompts), default=1)
+        ledgers = [[self.get(a, d) for a in agent_ids] for d in dialogue_ids]
+        max_l = max((len(l) for row in ledgers for l in row if l is not None),
+                    default=1)
+        length = max(max_p, max_l, 8)
+        pmat = np.full((n, length), -1, np.int32)
+        plen = np.zeros((n,), np.int32)
+        for j, p in enumerate(prompts):
+            pmat[j, : len(p)] = p
+            plen[j] = len(p)
+        lmat = np.full((n, m, length), -2, np.int32)  # -2 never matches -1
+        llen = np.zeros((n, m), np.int32)
+        for j in range(n):
+            for i in range(m):
+                led = ledgers[j][i]
+                if led is not None:
+                    lmat[j, i, : len(led)] = led
+                    llen[j, i] = len(led)
+        lcp = np.asarray(lcp_affinity_op(pmat, lmat))  # [N, M]
+        lcp = np.minimum(lcp, np.minimum(plen[:, None], llen))
+        o = lcp / np.maximum(plen[:, None], 1)
+        if extension_only_mask is not None:
+            ext = np.asarray(extension_only_mask, bool)[None, :]
+            full_prev = (lcp == llen) & (llen > 0)
+            o = np.where(ext, np.where(full_prev, llen / np.maximum(plen[:, None], 1), 0.0), o)
+        return o

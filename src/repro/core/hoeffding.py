@@ -1,0 +1,222 @@
+"""Hoeffding trees (VFDT) — online regressor & classifier, dependency-free.
+
+The paper's QoS predictors (§4.1) use river's HoeffdingTreeRegressor /
+HoeffdingTreeClassifier; river is not available offline so this implements
+the same algorithmic family: leaves accumulate sufficient statistics per
+feature bin; a leaf splits when the Hoeffding bound separates the best from
+the second-best split gain with confidence 1-delta.
+
+API mirrors river: ``learn_one(x, y)`` / ``predict_one(x)`` with x a 1-D
+numpy array (the framework's feature vectors are fixed-length, Eq. 5).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+class _LeafStats:
+    """Per-leaf sufficient statistics with per-feature binned sub-stats."""
+
+    __slots__ = ("n", "s", "ss", "cls", "bins_lo", "bins_hi", "bin_n",
+                 "bin_s", "bin_ss", "bin_cls", "n_feat", "n_bins", "frozen")
+
+    def __init__(self, n_feat: int, n_bins: int = 8):
+        self.n = 0
+        self.s = 0.0
+        self.ss = 0.0
+        self.cls = np.zeros(2)  # class counts (classifier)
+        self.n_feat = n_feat
+        self.n_bins = n_bins
+        self.bins_lo = np.full(n_feat, np.inf)
+        self.bins_hi = np.full(n_feat, -np.inf)
+        self.bin_n = np.zeros((n_feat, n_bins))
+        self.bin_s = np.zeros((n_feat, n_bins))
+        self.bin_ss = np.zeros((n_feat, n_bins))
+        self.bin_cls = np.zeros((n_feat, n_bins, 2))
+
+    def add(self, x: np.ndarray, y: float, y_cls: int | None = None):
+        self.n += 1
+        self.s += y
+        self.ss += y * y
+        if y_cls is not None:
+            self.cls[y_cls] += 1
+        self.bins_lo = np.minimum(self.bins_lo, x)
+        self.bins_hi = np.maximum(self.bins_hi, x)
+        span = np.maximum(self.bins_hi - self.bins_lo, 1e-12)
+        idx = np.clip(((x - self.bins_lo) / span * self.n_bins).astype(int),
+                      0, self.n_bins - 1)
+        f = np.arange(self.n_feat)
+        self.bin_n[f, idx] += 1
+        self.bin_s[f, idx] += y
+        self.bin_ss[f, idx] += y * y
+        if y_cls is not None:
+            self.bin_cls[f, idx, y_cls] += 1
+
+    # -- split gain evaluation --
+    def _var(self, n, s, ss):
+        n = np.maximum(n, 1e-12)
+        return np.maximum(ss / n - (s / n) ** 2, 0.0)
+
+    def best_splits_regression(self):
+        """Per feature: best variance-reduction split over bin boundaries."""
+        total_var = self._var(self.n, self.s, self.ss)
+        best_gain = np.zeros(self.n_feat)
+        best_thresh = np.zeros(self.n_feat)
+        cn = np.cumsum(self.bin_n, axis=1)
+        cs = np.cumsum(self.bin_s, axis=1)
+        css = np.cumsum(self.bin_ss, axis=1)
+        for f in range(self.n_feat):
+            for b in range(self.n_bins - 1):
+                nl, nr = cn[f, b], self.n - cn[f, b]
+                if nl < 2 or nr < 2:
+                    continue
+                vl = self._var(nl, cs[f, b], css[f, b])
+                vr = self._var(nr, self.s - cs[f, b], self.ss - css[f, b])
+                gain = total_var - (nl * vl + nr * vr) / self.n
+                if gain > best_gain[f]:
+                    best_gain[f] = gain
+                    span = self.bins_hi[f] - self.bins_lo[f]
+                    best_thresh[f] = self.bins_lo[f] + span * (b + 1) / self.n_bins
+        return best_gain, best_thresh
+
+    @staticmethod
+    def _entropy(counts):
+        tot = counts.sum()
+        if tot <= 0:
+            return 0.0
+        p = counts / tot
+        p = p[p > 0]
+        return float(-(p * np.log2(p)).sum())
+
+    def best_splits_classification(self):
+        base = self._entropy(self.cls)
+        best_gain = np.zeros(self.n_feat)
+        best_thresh = np.zeros(self.n_feat)
+        ccls = np.cumsum(self.bin_cls, axis=1)  # [F, bins, 2]
+        for f in range(self.n_feat):
+            for b in range(self.n_bins - 1):
+                left = ccls[f, b]
+                right = self.cls - left
+                nl, nr = left.sum(), right.sum()
+                if nl < 2 or nr < 2:
+                    continue
+                gain = base - (nl * self._entropy(left)
+                               + nr * self._entropy(right)) / self.n
+                if gain > best_gain[f]:
+                    best_gain[f] = gain
+                    span = self.bins_hi[f] - self.bins_lo[f]
+                    best_thresh[f] = self.bins_lo[f] + span * (b + 1) / self.n_bins
+        return best_gain, best_thresh
+
+
+class _Node:
+    __slots__ = ("stats", "feature", "threshold", "left", "right", "depth")
+
+    def __init__(self, n_feat, depth):
+        self.stats = _LeafStats(n_feat)
+        self.feature = -1
+        self.threshold = 0.0
+        self.left = None
+        self.right = None
+        self.depth = depth
+
+    @property
+    def is_leaf(self):
+        return self.feature < 0
+
+
+class _HoeffdingTreeBase:
+    def __init__(self, n_features: int, *, delta: float = 1e-4,
+                 grace_period: int = 40, max_depth: int = 7,
+                 tie_threshold: float = 0.05, classification: bool = False):
+        self.n_features = n_features
+        self.delta = delta
+        self.grace = grace_period
+        self.max_depth = max_depth
+        self.tau = tie_threshold
+        self.classification = classification
+        self.root = _Node(n_features, 0)
+        self.n_seen = 0
+        self._y_min = np.inf
+        self._y_max = -np.inf
+
+    def _sort(self, x) -> _Node:
+        node = self.root
+        while not node.is_leaf:
+            node = node.left if x[node.feature] <= node.threshold else node.right
+        return node
+
+    def learn_one(self, x, y):
+        x = np.asarray(x, dtype=np.float64)
+        self.n_seen += 1
+        self._y_min = min(self._y_min, float(y))
+        self._y_max = max(self._y_max, float(y))
+        node = self._sort(x)
+        node.stats.add(x, float(y),
+                       int(y > 0.5) if self.classification else None)
+        if (node.stats.n % self.grace == 0 and node.depth < self.max_depth):
+            self._try_split(node)
+        return self
+
+    def _try_split(self, node: _Node):
+        st = node.stats
+        if self.classification:
+            gains, thresholds = st.best_splits_classification()
+            value_range = 1.0  # entropy gain range for binary
+        else:
+            gains, thresholds = st.best_splits_regression()
+            value_range = max(self._y_max - self._y_min, 1e-9) ** 2
+        order = np.argsort(gains)[::-1]
+        g1, g2 = gains[order[0]], gains[order[1]] if len(order) > 1 else 0.0
+        eps = math.sqrt(value_range ** 2 * math.log(1.0 / self.delta)
+                        / (2.0 * st.n))
+        if g1 > 0 and (g1 - g2 > eps or eps < self.tau * value_range):
+            f = int(order[0])
+            node.feature = f
+            node.threshold = float(thresholds[f])
+            node.left = _Node(self.n_features, node.depth + 1)
+            node.right = _Node(self.n_features, node.depth + 1)
+            node.stats = None  # freed; children start fresh
+
+
+class HoeffdingTreeRegressor(_HoeffdingTreeBase):
+    def __init__(self, n_features: int, **kw):
+        super().__init__(n_features, classification=False, **kw)
+        self._global_s = 0.0
+
+    def learn_one(self, x, y):
+        self._global_s += float(y)
+        return super().learn_one(x, y)
+
+    def predict_one(self, x) -> float:
+        if self.n_seen == 0:
+            return 0.0
+        node = self._sort(np.asarray(x, dtype=np.float64))
+        # walk up conceptually: empty fresh leaves fall back to global mean
+        if node.stats is not None and node.stats.n > 0:
+            return node.stats.s / node.stats.n
+        return self._global_s / self.n_seen
+
+
+class HoeffdingTreeClassifier(_HoeffdingTreeBase):
+    """Binary classifier; predict_one returns P(class=1)."""
+
+    def __init__(self, n_features: int, **kw):
+        super().__init__(n_features, classification=True, **kw)
+        self._global_cls = np.zeros(2)
+
+    def learn_one(self, x, y):
+        self._global_cls[int(y > 0.5)] += 1
+        return super().learn_one(x, y)
+
+    def predict_one(self, x) -> float:
+        if self.n_seen == 0:
+            return 0.5
+        node = self._sort(np.asarray(x, dtype=np.float64))
+        if node.stats is not None and node.stats.n > 0:
+            c = node.stats.cls
+            return float((c[1] + 1.0) / (c.sum() + 2.0))  # Laplace
+        g = self._global_cls
+        return float((g[1] + 1.0) / (g.sum() + 2.0))

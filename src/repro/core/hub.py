@@ -1,0 +1,84 @@
+"""Proxy-hub architecture (§4.4): a-priori agent clustering + coarse routing.
+
+Agents are clustered on static capability signals (domain specialization,
+model scale); requests are routed to a hub with a lightweight domain
+classifier; the fine-grained IEMAS auction then runs inside the hub only.
+This bounds the MCMF problem size (Fig. 6) and reduces the agent
+heterogeneity that drives Green-Laffont IR violations (Appendix B.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import zlib
+
+import numpy as np
+
+
+@dataclass
+class Hub:
+    hub_id: int
+    agent_indices: list
+    domains: tuple = ()
+
+    # periodically published, privacy-preserving metadata (§4.4)
+    published: dict = field(default_factory=dict)
+
+    def publish(self, *, price_signal: float, free_capacity: int,
+                cache_sessions: int) -> None:
+        self.published = {
+            "price_signal": price_signal,
+            "free_capacity": free_capacity,
+            "cache_sessions": cache_sessions,
+        }
+
+
+def cluster_agents(agent_domains: list, agent_scales: list, k: int,
+                   scheme: str = "domain", seed: int = 0) -> list[Hub]:
+    """Partition agents into k hubs.
+
+    schemes: ``domain`` (group by primary specialization — the paper's
+    choice), ``scale`` (by model-size quantiles), ``random``.
+    """
+    m = len(agent_domains)
+    k = max(1, min(k, m))
+    rng = np.random.default_rng(seed)
+    if scheme == "random":
+        perm = rng.permutation(m)
+        parts = np.array_split(perm, k)
+        return [Hub(h, sorted(int(i) for i in p)) for h, p in enumerate(parts)]
+    if scheme == "scale":
+        order = np.argsort(np.asarray(agent_scales, dtype=float))
+        parts = np.array_split(order, k)
+        return [Hub(h, sorted(int(i) for i in p)) for h, p in enumerate(parts)]
+    # domain scheme: hash primary domain into k buckets, then balance
+    buckets: dict[int, list] = {h: [] for h in range(k)}
+    domains_of: dict[int, set] = {h: set() for h in range(k)}
+    order = sorted(range(m), key=lambda i: (agent_domains[i][0] if agent_domains[i] else "", i))
+    for i in order:
+        primary = agent_domains[i][0] if agent_domains[i] else ""
+        h = zlib.crc32(primary.encode()) % k
+        # balance: spill to the smallest bucket when 2x over average
+        if len(buckets[h]) >= 2 * max(1, m // k):
+            h = min(buckets, key=lambda b: len(buckets[b]))
+        buckets[h].append(i)
+        domains_of[h].update(agent_domains[i])
+    hubs = [Hub(h, sorted(buckets[h]), tuple(sorted(domains_of[h])))
+            for h in range(k) if buckets[h]]
+    return hubs
+
+
+def route_to_hub(request_domain: str, hubs: list[Hub],
+                 agent_domains: list) -> int:
+    """Coarse-grained classifier: pick the hub with the best domain overlap;
+    ties broken by published free capacity then hub size."""
+    best, best_score = 0, -1.0
+    for idx, hub in enumerate(hubs):
+        match = sum(1 for i in hub.agent_indices
+                    if request_domain in agent_domains[i])
+        score = match / max(1, len(hub.agent_indices))
+        cap = hub.published.get("free_capacity", 0)
+        score += 1e-3 * cap + 1e-6 * len(hub.agent_indices)
+        if score > best_score:
+            best, best_score = idx, score
+    return best

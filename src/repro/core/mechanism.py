@@ -1,0 +1,253 @@
+"""IEMAS router — the paper's Algorithm 1 as a deployable component.
+
+Per micro-batch of requests:
+  Phase 1  cache-aware prediction & valuation (ledger LCP -> o_ij; Hoeffding
+           QoS -> (L,C,P); Eq. 1 -> v_ij; w_ij = v_ij - c_ij, pruned).
+  Phase 2  welfare maximization: MCMF per proxy hub (Eq. 7 / Thm 4.1).
+  Phase 3  VCG Clarke-pivot payments (Eq. 8) + dispatch.
+  Phase 4  execution feedback: predictor updates + prefix-ledger updates.
+
+The router never touches engine internals — it sees only the telemetry the
+proxy layer exposes (Appendix C), so it drops onto any backend that reports
+(latency, usage, quality) per completed request.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.affinity import PrefixLedger
+from repro.core.auction import AuctionResult, run_auction
+from repro.core.hub import Hub, cluster_agents, route_to_hub
+from repro.core.predictor import PredictorInput, PredictorPool, QoSEstimate
+from repro.core.pricing import TokenPrices, observed_cost
+from repro.core.valuation import ValuationConfig, client_value
+
+
+@dataclass
+class AgentInfo:
+    agent_id: str
+    prices: TokenPrices
+    capacity: int
+    domains: tuple
+    scale: float = 1.0
+    recurrent: bool = False  # extension-only cache semantics (rwkv/zamba)
+    cache_slots: int = 0     # published cache capacity (0 = unknown/unbounded)
+
+
+@dataclass
+class Request:
+    request_id: str
+    dialogue_id: str
+    tokens: np.ndarray          # prompt token ids (full conversation so far)
+    turn: int
+    domain: str = ""
+    max_new_tokens: int = 32
+    meta: dict = field(default_factory=dict)
+
+
+@dataclass
+class RouteDecision:
+    request: Request
+    agent_id: str | None
+    payment: float
+    estimate: QoSEstimate | None
+    welfare_weight: float
+    hub_id: int
+
+
+@dataclass
+class CompletionObs:
+    latency: float          # TTFT seconds (paper's Lat)
+    n_prompt: int
+    n_hit: int              # cached prompt tokens reported by the engine
+    n_gen: int
+    quality: float          # evaluator score in [0,1]
+    failed: bool = False
+
+
+class IEMASRouter:
+    name = "iemas"
+
+    def __init__(self, agents: list[AgentInfo], *,
+                 valuation: ValuationConfig | None = None,
+                 payment_mode: str = "warmstart",
+                 n_hubs: int = 1, hub_scheme: str = "domain",
+                 use_kernel_affinity: bool = False,
+                 predictor_kw: dict | None = None):
+        self.agents = list(agents)
+        self.valuation = valuation or ValuationConfig()
+        self.payment_mode = payment_mode
+        self.use_kernel_affinity = use_kernel_affinity
+        self.ledger = PrefixLedger()
+        self.pool = PredictorPool({a.agent_id: a.prices for a in agents},
+                                  **(predictor_kw or {}))
+        self._pending: dict[str, tuple] = {}  # request_id -> (x, agent, req)
+        self.accounts = {"payments": 0.0, "agent_costs": 0.0,
+                         "welfare_realized": 0.0, "surplus": 0.0,
+                         "matched": 0, "unmatched": 0}
+        self.n_hubs = n_hubs
+        self.hub_scheme = hub_scheme
+        self._rebuild_hubs()
+        self.quarantined: set[str] = set()
+
+    # ---------------- elastic membership ----------------
+    def _rebuild_hubs(self):
+        self.hubs = cluster_agents([a.domains for a in self.agents],
+                                   [a.scale for a in self.agents],
+                                   self.n_hubs, self.hub_scheme)
+
+    def add_agent(self, agent: AgentInfo) -> None:
+        self.agents.append(agent)
+        self.pool.add_agent(agent.agent_id, agent.prices)
+        self._rebuild_hubs()
+
+    def remove_agent(self, agent_id: str) -> None:
+        self.agents = [a for a in self.agents if a.agent_id != agent_id]
+        self.pool.remove_agent(agent_id)
+        self.ledger.evict(agent_id)
+        self.quarantined.discard(agent_id)
+        self._rebuild_hubs()
+
+    def quarantine(self, agent_id: str) -> None:
+        """Fault isolation: exclude a failed/timing-out agent from auctions."""
+        self.quarantined.add(agent_id)
+
+    def reinstate(self, agent_id: str) -> None:
+        self.quarantined.discard(agent_id)
+
+    # ---------------- Algorithm 1 ----------------
+    def route_batch(self, requests: list[Request], telemetry: dict,
+                    free_slots: dict | None = None) -> list[RouteDecision]:
+        """telemetry: router_inflight, router_rps, per-agent inflight/rps.
+        free_slots (optional) caps per-agent concurrency below capacity."""
+        if not requests:
+            return []
+        live = [a for a in self.agents if a.agent_id not in self.quarantined]
+        if not live:
+            return [RouteDecision(r, None, 0.0, None, 0.0, -1) for r in requests]
+        idx_of = {a.agent_id: k for k, a in enumerate(self.agents)}
+
+        # Phase 1a: affinity matrix over LIVE agents
+        prompts = [r.tokens for r in requests]
+        dlg = [r.dialogue_id for r in requests]
+        o = self.ledger.affinity_matrix(
+            prompts, dlg, [a.agent_id for a in live],
+            extension_only_mask=[a.recurrent for a in live],
+            use_kernel=self.use_kernel_affinity)
+        # LRU cache model (§4.4 published cache summaries): zero the affinity
+        # of sessions the backend has presumably evicted, so the auction does
+        # not pay for dead caches (and Eq.6 predictions stay calibrated under
+        # the paper's constrained-memory / frequent-eviction regime).
+        for i, a in enumerate(live):
+            if a.cache_slots > 0:
+                recent = self.ledger.recent_sessions(a.agent_id, a.cache_slots)
+                for j, d in enumerate(dlg):
+                    if o[j, i] > 0 and d not in recent:
+                        o[j, i] = 0.0
+
+        # Phase 1b: QoS prediction per candidate pair
+        n, m = len(requests), len(live)
+        lat = np.zeros((n, m)); cst = np.zeros((n, m)); qual = np.zeros((n, m))
+        xs: list[list[PredictorInput]] = []
+        for j, r in enumerate(requests):
+            row = []
+            for i, a in enumerate(live):
+                util = telemetry.get("agent_inflight", {}).get(a.agent_id, 0) \
+                    / max(1, a.capacity)
+                x = PredictorInput(
+                    prompt_len=float(len(r.tokens)), turn=float(r.turn),
+                    affinity=float(o[j, i]),
+                    router_inflight=float(telemetry.get("router_inflight", 0)),
+                    router_rps=float(telemetry.get("router_rps", 0.0)),
+                    agent_inflight=float(telemetry.get("agent_inflight", {})
+                                         .get(a.agent_id, 0)),
+                    agent_rps=float(telemetry.get("agent_rps", {})
+                                    .get(a.agent_id, 0.0)),
+                    capacity=float(a.capacity), utilization=float(util),
+                    domain_match=float(r.domain in a.domains),
+                )
+                est = self.pool[a.agent_id].predict(x)
+                lat[j, i], cst[j, i], qual[j, i] = est.latency, est.cost, est.quality
+                row.append((x, est))
+            xs.append(row)
+
+        values = client_value(qual, lat, self.valuation)
+
+        # Phase 1c/2/3 per hub
+        caps = []
+        for a in live:
+            free = (free_slots or {}).get(a.agent_id, a.capacity)
+            caps.append(max(0, int(free)))
+        decisions: list[RouteDecision] = [None] * n  # type: ignore
+        live_pos = {a.agent_id: i for i, a in enumerate(live)}
+        hub_of_agent = {}
+        for h, hub in enumerate(self.hubs):
+            for gi in hub.agent_indices:
+                aid = self.agents[gi].agent_id
+                if aid in live_pos:
+                    hub_of_agent[live_pos[aid]] = h
+
+        req_hub = [route_to_hub(r.domain, self.hubs,
+                                [a.domains for a in self.agents])
+                   for r in requests]
+        for h in range(len(self.hubs)):
+            r_idx = [j for j in range(n) if req_hub[j] == h]
+            a_idx = [i for i in range(m) if hub_of_agent.get(i, -1) == h]
+            if not r_idx:
+                continue
+            if not a_idx:
+                for j in r_idx:
+                    decisions[j] = RouteDecision(requests[j], None, 0.0, None,
+                                                 0.0, h)
+                continue
+            vv = values[np.ix_(r_idx, a_idx)]
+            cc = cst[np.ix_(r_idx, a_idx)]
+            result = run_auction(vv, cc, [caps[i] for i in a_idx],
+                                 payment_mode=self.payment_mode)
+            for local_j, j in enumerate(r_idx):
+                li = result.assignment[local_j]
+                if li < 0:
+                    decisions[j] = RouteDecision(requests[j], None, 0.0, None,
+                                                 0.0, h)
+                    self.accounts["unmatched"] += 1
+                    continue
+                i = a_idx[li]
+                agent = live[i]
+                x, est = xs[j][i]
+                pay = result.payments[local_j]
+                decisions[j] = RouteDecision(requests[j], agent.agent_id, pay,
+                                             est, result.weights[local_j, li], h)
+                self._pending[requests[j].request_id] = (x, agent, requests[j],
+                                                         pay, cc[local_j, li])
+                self.accounts["matched"] += 1
+        return decisions
+
+    # ---------------- Phase 4: feedback ----------------
+    def on_complete(self, request_id: str, obs: CompletionObs) -> None:
+        entry = self._pending.pop(request_id, None)
+        if entry is None:
+            return
+        x, agent, req, payment, pred_cost = entry
+        if obs.failed:
+            # fault path: no payment, quarantine the agent; the request is
+            # re-auctioned by the cluster layer.
+            self.quarantine(agent.agent_id)
+            return
+        cost = observed_cost(agent.prices, obs.n_prompt, obs.n_hit, obs.n_gen)
+        self.pool[agent.agent_id].update(x, obs.latency, cost, obs.quality)
+        pred = self.pool[agent.agent_id]
+        pred.ewma_gen = 0.9 * pred.ewma_gen + 0.1 * obs.n_gen
+        # eviction resync (Appendix C.2.2): the engine reported zero cached
+        # tokens despite a confident ledger match -> the backend evicted its
+        # KV; drop our record so affinity reflects reality next round.
+        if obs.n_hit == 0 and x.affinity > 0.3:
+            self.ledger.evict(agent.agent_id, req.dialogue_id)
+        self.ledger.update(agent.agent_id, req.dialogue_id, req.tokens)
+        # market accounting (weak budget balance bookkeeping, Thm 4.3)
+        true_value = client_value(obs.quality, obs.latency, self.valuation)
+        self.accounts["payments"] += payment
+        self.accounts["agent_costs"] += cost
+        self.accounts["surplus"] += payment - cost
+        self.accounts["welfare_realized"] += float(true_value) - cost

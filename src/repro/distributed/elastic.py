@@ -1,0 +1,46 @@
+"""Elastic scaling: re-mesh + reshard state when the device pool changes.
+
+Checkpoints store full (unsharded) arrays, so elasticity is: rebuild the
+mesh at the new size, re-derive shardings from the same logical-axis rules
+(divisibility fallback handles non-power-of-two survivors), and device_put
+the restored state. Serving-side elasticity (agents joining/leaving the
+market) lives in core.mechanism.add_agent/remove_agent.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import ShardingPolicy, param_shardings
+
+
+def remesh(n_devices: int, *, data_model_ratio: float = 1.0,
+           devices=None) -> Mesh:
+    """Largest (data, model) mesh fitting n_devices, preferring square-ish
+    factorizations scaled by ``data_model_ratio`` (= data/model)."""
+    devices = list(devices or jax.devices())[:n_devices]
+    n = len(devices)
+    best = (1, n)
+    best_score = -1.0
+    for d in range(1, n + 1):
+        if n % d:
+            continue
+        m = n // d
+        ratio = d / m
+        score = -abs(np.log(ratio / data_model_ratio))
+        if score > best_score:
+            best, best_score = (d, m), score
+    d, m = best
+    return jax.make_mesh((d, m), ("data", "model"), devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def reshard_state(state, param_axes, mesh: Mesh, rules_acts: dict,
+                  rules_params: dict):
+    """device_put a restored pytree onto a new mesh using logical rules."""
+    policy = ShardingPolicy(mesh, acts=rules_acts, params=rules_params)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(np.shape(x), x.dtype), state)
+    shardings = param_shardings(policy, abstract, param_axes)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)

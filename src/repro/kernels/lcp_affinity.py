@@ -1,0 +1,60 @@
+"""Pallas kernel: batched longest-common-prefix (the router's affinity hot loop).
+
+The IEMAS proxy computes an N x M LCP matrix per micro-batch (every request
+against every agent's prefix ledger, Eq. 4). On TPU there are no divergent
+branches for early exit, so the kernel uses the cumulative-product-of-equality
+trick: LCP(a, b) = sum_t prod_{u<=t} [a_u == b_u] — one VPU pass, no control
+flow (DESIGN.md §3).
+
+Tiling: grid over (N/bn, M/bm); each program holds a [bn, L] prompt tile and
+a [bn, bm, L] ledger tile in VMEM. With bn=8, bm=8, L=1024 int32 that is
+8*1024*4 + 8*8*1024*4 = 288 KiB — comfortably within a v5e core's VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN, BM = 8, 8
+
+
+def _lcp_kernel(p_ref, l_ref, o_ref):
+    p = p_ref[...]            # [bn, L]
+    led = l_ref[...]          # [bn, bm, L]
+    eq = (p[:, None, :] == led).astype(jnp.int32)
+    prefix = jnp.cumprod(eq, axis=-1)
+    o_ref[...] = prefix.sum(axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def lcp_affinity(prompts, ledgers, *, interpret: bool = True):
+    """prompts: [N, L] int32; ledgers: [N, M, L] int32 -> lcp [N, M] int32.
+
+    N and M are padded to the block sizes internally.
+    """
+    n, l = prompts.shape
+    m = ledgers.shape[1]
+    pn = (-n) % BN
+    pm = (-m) % BM
+    if pn:
+        prompts = jnp.pad(prompts, ((0, pn), (0, 0)), constant_values=-1)
+        ledgers = jnp.pad(ledgers, ((0, pn), (0, 0), (0, 0)), constant_values=-2)
+    if pm:
+        ledgers = jnp.pad(ledgers, ((0, 0), (0, pm), (0, 0)), constant_values=-2)
+    nn, mm = prompts.shape[0], ledgers.shape[1]
+
+    out = pl.pallas_call(
+        _lcp_kernel,
+        grid=(nn // BN, mm // BM),
+        in_specs=[
+            pl.BlockSpec((BN, l), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, BM, l), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((BN, BM), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nn, mm), jnp.int32),
+        interpret=interpret,
+    )(prompts, ledgers)
+    return out[:n, :m]

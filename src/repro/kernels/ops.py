@@ -1,0 +1,43 @@
+"""Dispatch wrappers: Pallas on TPU, interpret-mode on CPU, oracles for tests.
+
+Every op takes the same arguments as its kernel; ``interpret`` defaults to
+True off-TPU so the whole framework runs (slowly but correctly) on CPU while
+targeting compiled Pallas on real hardware.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lcp_affinity import lcp_affinity
+from repro.kernels.ssd import ssd
+from repro.kernels.wkv6 import wkv6
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def lcp_affinity_op(prompts, ledgers):
+    """prompts [N, L], ledgers [N, M, L] -> lcp [N, M]."""
+    return lcp_affinity(prompts, ledgers, interpret=_interpret())
+
+
+def flash_attention_op(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    return flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                           bk=bk, interpret=_interpret())
+
+
+def decode_attention_op(q, k_cache, v_cache, valid, *, bk=256):
+    return decode_attention(q, k_cache, v_cache, valid, bk=bk,
+                            interpret=_interpret())
+
+
+def wkv6_op(r, k, v, log_w, u, *, chunk=16):
+    return wkv6(r, k, v, log_w, u, chunk=chunk, interpret=_interpret())
+
+
+def ssd_op(x, bmat, cmat, dt, a_log, d_skip, *, chunk=16):
+    return ssd(x, bmat, cmat, dt, a_log, d_skip, chunk=chunk,
+               interpret=_interpret())

@@ -1,0 +1,282 @@
+"""Multi-pod dry run: lower + compile every (arch x shape x mesh) cell.
+
+NOTE: the first two executable lines below MUST set XLA_FLAGS before any
+other import — jax locks the device count on first initialization.
+
+For each cell this produces (artifacts/dryrun/<arch>__<shape>__<mesh>.json):
+  * proof of shardability: .lower().compile() success on the production mesh,
+  * memory_analysis() per-device bytes (the "fits" check),
+  * cost_analysis() flops/bytes + HLO collective wire bytes,
+  * unrolled L=1/L=2 variant costs -> exact per-layer extrapolation
+    (cost_analysis counts a lax.scan body once; see DESIGN.md §6),
+  * analytic MODEL_FLOPS cross-check.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  python -m repro.launch.dryrun --all                  # single-pod, variants
+  python -m repro.launch.dryrun --all --multi-pod      # 512-chip pass
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (SHAPES, cell_supported, get_config, list_archs,
+                           model_flops, param_counts)
+from repro.distributed.sharding import (DECODE_PARAM_RULES, DECODE_RULES,
+                                        TRAIN_PARAM_RULES, TRAIN_RULES,
+                                        ShardingPolicy, apply_policy,
+                                        param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model
+from repro.models.registry import cache_axes, decode_state_specs, input_specs
+from repro.models.scan_config import unrolled
+from repro.training.loop import make_train_step
+from repro.training.optimizer import OptConfig
+from repro.utils.hlo import collective_wire_bytes
+
+
+def build_policy(mesh, kind: str, shape_name: str) -> ShardingPolicy:
+    if kind == "train":
+        acts, params = dict(TRAIN_RULES), dict(TRAIN_PARAM_RULES)
+    else:
+        acts, params = dict(DECODE_RULES), dict(DECODE_PARAM_RULES)
+        if kind == "prefill":
+            acts["seq"] = "model"  # sequence-parallel residual stream
+        # long caches shard on sequence (8 KV heads can't divide 16)
+        acts["cache_seq"] = "model"
+        acts["kv_heads"] = None
+    return ShardingPolicy(mesh, acts=acts, params=params)
+
+
+def _with_shardings(specs, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs, shardings)
+
+
+def _abstract_params(model, policy):
+    abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = param_shardings(policy, abstract, model.param_axes())
+    return _with_shardings(abstract, shardings)
+
+
+def _batch_specs(cfg, shape, policy):
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, s in specs.items():
+        if name == "tokens":
+            axes = ("batch", "seq")
+        elif name == "patches":
+            axes = ("batch", "patches", "embed")
+        else:  # frames
+            axes = ("batch", "src_seq", "embed")
+        out[name] = jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=policy.act_sharding(axes, s.shape))
+    return out
+
+
+def _cache_specs(model, shape, policy):
+    specs, tok = decode_state_specs(model, shape)
+    axes = cache_axes(model)
+
+    def attach(spec, ax):
+        return jax.ShapeDtypeStruct(
+            spec.shape, spec.dtype,
+            sharding=policy.act_sharding(tuple(ax.split()), spec.shape))
+
+    specs = jax.tree.map(attach, specs, axes)
+    tok = jax.ShapeDtypeStruct(
+        tok.shape, tok.dtype, sharding=policy.act_sharding(("batch",), tok.shape))
+    return specs, tok
+
+
+def _opt_specs(params_specs):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32, sharding=s.sharding)
+    adam = {
+        "master": jax.tree.map(f32, params_specs),
+        "m": jax.tree.map(f32, params_specs),
+        "v": jax.tree.map(f32, params_specs),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    return {"adam": adam}
+
+
+TRAIN_ACCUM = 4
+
+
+def _lower_cell(cfg, shape, mesh, kind, accum: int = TRAIN_ACCUM):
+    model = build_model(cfg)
+    policy = build_policy(mesh, kind, shape.name)
+    with apply_policy(policy):
+        params = _abstract_params(model, policy)
+        if kind == "train":
+            # 4 sequential microbatches: bounds activation memory at the
+            # same global batch (EXPERIMENTS.md §Perf iteration 3)
+            step = make_train_step(model, OptConfig(), accum_steps=accum)
+            opt = _opt_specs(params)
+            batch = _batch_specs(cfg, shape, policy)
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(params, opt, batch)
+        elif kind == "prefill":
+            batch = _batch_specs(cfg, shape, policy)
+            # constrain the produced KV cache's shardings (otherwise GSPMD
+            # may replicate multi-GB caches per device; §Perf iteration 1)
+            cache_sds, _ = _cache_specs(model, shape, policy)
+            cache_out = jax.tree.map(lambda s: s.sharding, cache_sds)
+            logits_out = policy.act_sharding(("batch", "vocab"),
+                                             (shape.global_batch, cfg.vocab_size))
+            lowered = jax.jit(
+                lambda p, b: model.prefill(p, b),
+                out_shardings=(logits_out, cache_out)).lower(params, batch)
+        else:  # decode
+            cache, tok = _cache_specs(model, shape, policy)
+            lowered = jax.jit(model.decode_step,
+                              donate_argnums=(1,)).lower(params, cache, tok)
+    return lowered, model
+
+
+def _cost_of(lowered):
+    compiled = lowered.compile()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_wire_bytes(hlo)
+    ma = compiled.memory_analysis()
+    mem = dict(argument=ma.argument_size_in_bytes, output=ma.output_size_in_bytes,
+               temp=ma.temp_size_in_bytes, alias=ma.alias_size_in_bytes)
+    return compiled, {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "collectives": coll,
+        "memory": mem,
+    }
+
+
+def variant_plan(cfg) -> list[tuple[dict, float]]:
+    """[(config overrides, coefficient)]; corrected = sum coeff * C(variant)."""
+    if cfg.is_encdec:
+        le, ld = cfg.enc_layers, cfg.n_layers
+        return [({"enc_layers": 1, "n_layers": 1}, 1.0 - (le - 1) - (ld - 1)),
+                ({"enc_layers": 2, "n_layers": 1}, float(le - 1)),
+                ({"enc_layers": 1, "n_layers": 2}, float(ld - 1))]
+    if cfg.attn_every:  # zamba: unit = group of attn_every mamba + shared attn
+        g = cfg.n_layers // cfg.attn_every
+        tail = cfg.n_layers - g * cfg.attn_every
+        units = g + tail / cfg.attn_every  # tail ~ fractional group
+        return [({"n_layers": cfg.attn_every}, 2.0 - units),
+                ({"n_layers": 2 * cfg.attn_every}, units - 1.0)]
+    lf = cfg.n_layers
+    return [({"n_layers": 1}, 2.0 - lf), ({"n_layers": 2}, float(lf - 1))]
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             *, variants: bool = True, out_dir: str = "artifacts/dryrun",
+             verbose: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_supported(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": shape.kind, "supported": ok}
+    if not ok:
+        rec["skip_reason"] = reason
+        _save(rec, out_dir)
+        return rec
+    counts = param_counts(cfg)
+    rec["params_total"] = counts["total"]
+    rec["params_active"] = counts["active"]
+    rec["model_flops"] = model_flops(cfg, shape)
+    try:
+        t0 = time.time()
+        lowered, _ = _lower_cell(cfg, shape, mesh, shape.kind)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t0 = time.time()
+        _, cost = _cost_of(lowered)
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["full"] = cost
+        if variants:
+            vcosts = []
+            for overrides, coeff in variant_plan(cfg):
+                vcfg = dataclasses.replace(cfg, **overrides)
+                with unrolled():
+                    vlow, _ = _lower_cell(vcfg, shape, mesh, shape.kind)
+                    _, vc = _cost_of(vlow)
+                vcosts.append({"overrides": overrides, "coeff": coeff,
+                               "flops": vc["flops"], "bytes": vc["bytes"],
+                               "coll": vc["collectives"]["total"]})
+            rec["variants"] = vcosts
+            rec["corrected"] = {
+                "flops": sum(v["coeff"] * v["flops"] for v in vcosts),
+                "bytes": sum(v["coeff"] * v["bytes"] for v in vcosts),
+                "coll": sum(v["coeff"] * v["coll"] for v in vcosts),
+            }
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — a failed cell is a bug report
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _save(rec, out_dir)
+    if verbose:
+        if rec.get("ok"):
+            mem = rec["full"]["memory"]
+            tot = (mem["argument"] + mem["temp"] + mem["output"]) / 1e9
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:10s} OK "
+                  f"flops/dev={rec['full']['flops']:.2e} mem/dev={tot:.1f}GB "
+                  f"coll/dev={rec['full']['collectives']['total']/1e9:.2f}GB "
+                  f"({rec.get('lower_s', 0)}+{rec.get('compile_s', 0)}s)",
+                  flush=True)
+        elif not rec["supported"]:
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:10s} SKIP "
+                  f"({rec['skip_reason'][:60]}...)", flush=True)
+        else:
+            print(f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:10s} FAIL "
+                  f"{rec['error'][:160]}", flush=True)
+    return rec
+
+
+def _save(rec: dict, out_dir: str):
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-variants", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    variants = not args.no_variants and not args.multi_pod
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    t0 = time.time()
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            results.append(run_cell(arch, shape_name, mesh, mesh_name,
+                                    variants=variants, out_dir=args.out))
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if not r["supported"])
+    n_fail = len(results) - n_ok - n_skip
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED "
+          f"in {time.time() - t0:.0f}s")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Single pod: (16, 16) = 256 TPU v5e chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+carries pure data parallelism whose gradient all-reduce crosses DCI.
+
+Functions, not module constants: importing this module must never touch jax
+device state (smoke tests see 1 device; only dryrun forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} "
+            "(the dry-run launcher forces XLA_FLAGS="
+            "--xla_force_host_platform_device_count=512 before importing jax)")
+    return jax.make_mesh(shape, axes, devices=devices,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many local devices exist (tests)."""
+    return jax.make_mesh((data, model), ("data", "model"),
+                         devices=jax.devices()[: data * model],
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

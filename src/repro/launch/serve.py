@@ -1,0 +1,55 @@
+"""Serving launcher: IEMAS (or a baseline) routing over the simulated cluster.
+
+``python -m repro.launch.serve --router iemas --workload coqa_like``
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.core import IEMASRouter
+from repro.core.baselines import BASELINES
+from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
+
+
+def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
+                 seed: int = 0):
+    if name == "iemas":
+        return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode)
+    return BASELINES[name](infos, seed=seed)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--router", default="iemas",
+                    choices=["iemas", *BASELINES])
+    ap.add_argument("--workload", default="coqa_like")
+    ap.add_argument("--agents", type=int, default=9)
+    ap.add_argument("--dialogues", type=int, default=16)
+    ap.add_argument("--hubs", type=int, default=1)
+    ap.add_argument("--fail-prob", type=float, default=0.0)
+    ap.add_argument("--straggle-prob", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cluster = SimCluster(n_agents=args.agents, seed=args.seed,
+                         fail_prob=args.fail_prob,
+                         straggle_prob=args.straggle_prob,
+                         warmup=not args.no_warmup)
+    router = build_router(args.router, cluster.agent_infos(), n_hubs=args.hubs,
+                          seed=args.seed)
+    dialogues = generate(WorkloadSpec(args.workload, n_dialogues=args.dialogues,
+                                      seed=args.seed + 1))
+    metrics = run_workload(cluster, router, dialogues)
+    if hasattr(router, "accounts"):
+        metrics["accounts"] = dict(router.accounts)
+    print(json.dumps(metrics, indent=2, default=float))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(metrics, f, indent=2, default=float)
+
+
+if __name__ == "__main__":
+    main()

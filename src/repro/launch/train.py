@@ -1,0 +1,75 @@
+"""Training launcher: ``python -m repro.launch.train --arch qwen3-8b ...``.
+
+Runs on whatever devices exist: full configs train on the production mesh
+(real TPUs); ``--smoke`` trains the reduced config of the same family on CPU
+(used by examples/train_small.py for the ~100M-scale demonstration run).
+Fault tolerance: atomic checkpoints + resume-from-latest (``--ckpt-dir``).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.distributed.sharding import (TRAIN_PARAM_RULES, TRAIN_RULES,
+                                        ShardingPolicy, apply_policy)
+from repro.models import build_model
+from repro.training.compress import CompressionConfig
+from repro.training.data import SyntheticLM
+from repro.training.loop import train_loop
+from repro.training.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config of the same family (CPU-runnable)")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="width multiplier on the reduced config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--compress", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        s = args.scale
+        cfg = cfg.scaled(dtype="float32",
+                         d_model=int(64 * s), d_ff=int(128 * s),
+                         head_dim=int(16 * s))
+    model = build_model(cfg)
+    data = SyntheticLM(cfg.vocab_size, args.seq_len, args.batch,
+                       seed=args.seed)
+    comp = CompressionConfig(enabled=args.compress)
+    opt = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                    total_steps=args.steps)
+
+    n_dev = len(jax.devices())
+    policy = None
+    if n_dev > 1:
+        from repro.distributed.elastic import remesh
+        policy = ShardingPolicy(remesh(n_dev), acts=TRAIN_RULES,
+                                params=TRAIN_PARAM_RULES)
+
+    ctx = apply_policy(policy) if policy else apply_policy(None)
+    with ctx:
+        out = train_loop(model, data, steps=args.steps, opt_cfg=opt,
+                         compression=comp, accum_steps=args.accum,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         seed=args.seed)
+    for step, loss in out["losses"]:
+        print(f"step {step:5d}  loss {loss:.4f}")
+    print(f"done: {args.steps} steps in {out['wall_s']:.1f}s "
+          f"({args.steps * args.batch * args.seq_len / out['wall_s']:.0f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Encoder-decoder LM (seamless-m4t backbone).
+
+The speech frontend is a STUB per the assignment: the model consumes
+precomputed frame embeddings ``frames`` [B, src_len, D]. Encoder is
+bidirectional; decoder is causal with cross-attention. The cross K/V are the
+session-reusable state for the serving layer (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+
+def _res(x):
+    if x.ndim == 3:
+        return shard(x, "batch", "seq", "embed")
+    return shard(x, "batch", "embed")
+from repro.models import attention as attn
+from repro.models.scan_config import indexed_layer_loop, layer_scan
+from repro.models.layers import (FFN_AXES, apply_rope, ffn_apply, ffn_init,
+                                 next_token_loss, normal_init, rms_norm)
+
+
+def _xattn_init(key, cfg, dtype):
+    return attn.gqa_init(key, cfg, dtype)
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.gqa_init(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": ffn_init(k2, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.gqa_init(k1, cfg, dtype),
+            "lnx": jnp.ones((cfg.d_model,), dtype),
+            "xattn": _xattn_init(k2, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "mlp": ffn_init(k3, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _block_axes(cfg, cross: bool):
+    ax = {"ln1": "embed", "attn": attn.gqa_axes(cfg), "ln2": "embed",
+          "mlp": dict(FFN_AXES)}
+    if cross:
+        ax["lnx"] = "embed"
+        ax["xattn"] = attn.gqa_axes(cfg)
+    return ax
+
+
+def _enc_block(p, x, cfg):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn._qkv(p["attn"], h, cfg)
+    pos = jnp.arange(x.shape[1])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    o = attn.attend_parallel(q, k, v, causal=False)
+    x = _res(x + _res(jnp.einsum("...hk,hkd->...d", o, p["attn"]["wo"])))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return _res(x + ffn_apply(p["mlp"], h))
+
+
+def _cross_kv(p, enc_out, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn"]["wv"])
+    return k, v
+
+
+def _cross_attend(p, h, xk, xv, cfg):
+    q = jnp.einsum("...d,dhk->...hk", h, p["xattn"]["wq"])
+    if h.ndim == 2:  # decode step
+        o = attn.attend_decode(q, xk, xv,
+                               jnp.zeros(xk.shape[:2], jnp.int32),
+                               jnp.full((h.shape[0],), xk.shape[1], jnp.int32))
+    else:
+        o = attn.attend_parallel(q, xk, xv, causal=False)
+    return jnp.einsum("...hk,hkd->...d", o, p["xattn"]["wo"])
+
+
+def _dec_block_parallel(p, x, xk, xv, cfg, lens=None):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    o, kv = attn.gqa_parallel(p["attn"], h, cfg, lens=lens)
+    x = _res(x + _res(o))
+    h = rms_norm(x, p["lnx"], cfg.norm_eps)
+    x = _res(x + _res(_cross_attend(p, h, xk, xv, cfg)))
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return _res(x + ffn_apply(p["mlp"], h)), kv
+
+
+def _dec_block_step(p, x, cache_layer, xk, xv, cfg):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    o, nc = attn.gqa_decode(p["attn"], h, cache_layer, cfg)
+    x = x + o
+    h = rms_norm(x, p["lnx"], cfg.norm_eps)
+    x = x + _cross_attend(p, h, xk, xv, cfg)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + ffn_apply(p["mlp"], h), nc
+
+
+def build_encdec(cfg):
+    dtype = jnp.dtype(cfg.dtype)
+
+    def init(key):
+        ks = jax.random.split(key, 6)
+        enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+        dec_keys = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "embed": normal_init(ks[2], (cfg.vocab_size, cfg.d_model),
+                                 cfg.d_model, dtype),
+            "frame_proj": normal_init(ks[3], (cfg.d_model, cfg.d_model),
+                                      cfg.d_model, dtype),
+            "encoder": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(enc_keys),
+            "enc_norm": jnp.ones((cfg.d_model,), dtype),
+            "decoder": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(dec_keys),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+            "lm_head": normal_init(ks[4], (cfg.d_model, cfg.vocab_size),
+                                   cfg.d_model, dtype),
+        }
+
+    def param_axes():
+        pre = lambda ax: jax.tree.map(lambda s: "layers " + s, ax)
+        return {
+            "embed": "vocab embed",
+            "frame_proj": "embed embed",
+            "encoder": pre(_block_axes(cfg, cross=False)),
+            "enc_norm": "embed",
+            "decoder": pre(_block_axes(cfg, cross=True)),
+            "final_norm": "embed",
+            "lm_head": "embed vocab",
+        }
+
+    def encode(params, frames, *, remat=False):
+        x = jnp.einsum("bsd,de->bse", frames.astype(dtype), params["frame_proj"])
+        x = shard(x, "batch", "seq", "embed")
+
+        def body(c, p_l):
+            return _enc_block(p_l, c, cfg), None
+        f = jax.checkpoint(body) if remat else body
+        x, _ = layer_scan(f, x, params["encoder"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _decoder_forward(params, x, enc_out, *, remat, collect, lens=None):
+        def body(c, p_l):
+            xk, xv = _cross_kv(p_l, enc_out, cfg)
+            y, kv = _dec_block_parallel(p_l, c, xk, xv, cfg, lens=lens)
+            return y, ((kv, (xk, xv)) if collect else None)
+        f = jax.checkpoint(body) if remat else body
+        x, parts = layer_scan(f, x, params["decoder"])
+        return x, parts
+
+    def loss(params, batch):
+        enc_out = encode(params, batch["frames"], remat=True)
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        x = shard(x, "batch", "seq", "embed")
+        x, _ = _decoder_forward(params, x, enc_out, remat=True, collect=False)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+        logits = shard(logits, "batch", "logit_seq", "vocab")
+        return next_token_loss(logits, tokens)
+
+    def init_cache(b: int, max_len: int):
+        return {
+            "k": jnp.zeros((cfg.n_layers, b, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "v": jnp.zeros((cfg.n_layers, b, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "xk": jnp.zeros((cfg.n_layers, b, cfg.src_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "xv": jnp.zeros((cfg.n_layers, b, cfg.src_len, cfg.n_kv_heads, cfg.hd), dtype),
+            "slot_pos": jnp.full((b, max_len), -1, jnp.int32),
+            "pos": jnp.zeros((b,), jnp.int32),
+        }
+
+    def prefill(params, batch):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        lens = batch.get("lens", jnp.full((b,), s, jnp.int32))
+        max_len = int(batch.get("max_len", s))
+        enc_out = encode(params, batch["frames"])
+        x = params["embed"][tokens]
+        x = shard(x, "batch", "seq", "embed")
+        x, parts = _decoder_forward(params, x, enc_out, remat=False,
+                                    collect=True, lens=lens)
+        (k_l, v_l), (xk_l, xv_l) = parts
+        x_last = jnp.take_along_axis(
+            x, jnp.maximum(lens - 1, 0)[:, None, None], axis=1)[:, 0]
+        x_last = rms_norm(x_last, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x_last, params["lm_head"])
+
+        cache = init_cache(b, max_len)
+        lay = jax.vmap(lambda kk, vv: attn.prefill_cache_layout(kk, vv, lens, max_len))
+        kc, vc, sp = lay(k_l, v_l)
+        cache.update(k=kc, v=vc, xk=xk_l, xv=xv_l, slot_pos=sp[0], pos=lens)
+        return logits, cache
+
+    def decode_step(params, cache, tokens):
+        x = params["embed"][tokens]
+        pos = cache["pos"]
+        idx = lambda a, l: jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+        put = lambda a, u, l: jax.lax.dynamic_update_index_in_dim(a, u, l, 0)
+
+        def body(l, carry):
+            y, kc, vc, sp = carry
+            p_l = jax.tree.map(lambda a: idx(a, l), params["decoder"])
+            cl = {"k": idx(kc, l), "v": idx(vc, l),
+                  "slot_pos": cache["slot_pos"], "pos": pos}
+            y, nc = _dec_block_step(p_l, y, cl, idx(cache["xk"], l),
+                                    idx(cache["xv"], l), cfg)
+            return (y, put(kc, nc["k"], l), put(vc, nc["v"], l),
+                    nc["slot_pos"])
+
+        x, k_n, v_n, sp_n = indexed_layer_loop(
+            cfg.n_layers, body, (x, cache["k"], cache["v"], cache["slot_pos"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+        new_cache = dict(cache)
+        new_cache.update(k=k_n, v=v_n, slot_pos=sp_n, pos=pos + 1)
+        return logits, new_cache
+
+    def extend(params, cache, tokens, lens_new):
+        raise NotImplementedError(
+            "enc-dec extend: cross-cache is session-static; the engine "
+            "re-prefills the decoder (see serving/engine.py)")
+
+    return {"init": init, "param_axes": param_axes, "loss": loss,
+            "prefill": prefill, "decode_step": decode_step, "extend": extend,
+            "init_cache": init_cache, "family": "encdec", "encode": encode}

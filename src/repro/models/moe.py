@@ -1,0 +1,161 @@
+"""Mixture-of-Experts FFN with capacity-bounded, sort-based dispatch.
+
+TPU adaptation (see DESIGN.md §3): instead of CUDA grouped-GEMM/ragged
+dispatch, tokens are bucketed per expert with a *row-local* argsort (no
+cross-device sort) and experts run as one batched einsum over [E, C, D]
+buckets — MXU-friendly and exact up to capacity drops. Dropped tokens
+pass through the residual stream (standard GShard semantics).
+
+Two dispatch modes:
+  * ``sort``   (default): gather-based, no one-hot matmuls, flops ~ k/E of
+    the dense-all-experts lowering.
+  * ``onehot``: GShard einsum dispatch, kept for comparison in §Perf.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.layers import normal_init
+
+
+def moe_init(key, cfg, dtype):
+    d = cfg.d_model
+    e_ff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal_init(ks[0], (d, cfg.n_experts), d, dtype),
+        "wg": normal_init(ks[1], (cfg.n_experts, d, e_ff), d, dtype),
+        "wu": normal_init(ks[2], (cfg.n_experts, d, e_ff), d, dtype),
+        "wd": normal_init(ks[3], (cfg.n_experts, e_ff, d), e_ff, dtype,
+                          scale=1.0 / max(2 * cfg.n_layers, 1) ** 0.5),
+    }
+    if cfg.n_shared_experts:
+        sf = cfg.n_shared_experts * e_ff
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "wg": normal_init(kg, (d, sf), d, dtype),
+            "wu": normal_init(ku, (d, sf), d, dtype),
+            "wd": normal_init(kd, (sf, d), sf, dtype),
+        }
+    return p
+
+
+def moe_axes(cfg):
+    ax = {
+        "router": "embed expert",
+        "wg": "expert embed ff",
+        "wu": "expert embed ff",
+        "wd": "expert ff embed",
+    }
+    if cfg.n_shared_experts:
+        ax["shared"] = {"wg": "embed ff", "wu": "embed ff", "wd": "ff embed"}
+    return ax
+
+
+def _capacity(s: int, k: int, e: int, cf: float) -> int:
+    return max(1, int(math.ceil(s * k / e * cf)))
+
+
+def _route(p, x, cfg):
+    """Router: top-k normalized gates. x: [B,S,D] -> (gates, idx) [B,S,k]."""
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def _expert_ffn(p, xe):
+    """xe: [B, E, C, D] -> [B, E, C, D]."""
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xe, p["wg"]))
+    h = h * jnp.einsum("becd,edf->becf", xe, p["wu"])
+    h = shard(h, "batch", "expert", "expert_capacity", "ff")
+    return jnp.einsum("becf,efd->becd", h, p["wd"])
+
+
+def moe_ffn_sort(p, x, cfg):
+    """Gather-based dispatch, row-local capacity. x: [B, S, D]."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(s, k, e, cfg.capacity_factor)
+    gates, idx = _route(p, x, cfg)  # [B,S,k]
+
+    flat_idx = idx.reshape(b, s * k)  # expert of each (token, slot)
+    flat_gate = gates.reshape(b, s * k)
+
+    # rank of each (token,slot) within its expert, per row
+    order = jnp.argsort(flat_idx, axis=-1, stable=True)  # [B, S*k]
+    sorted_e = jnp.take_along_axis(flat_idx, order, axis=-1)
+    onehot = jax.nn.one_hot(flat_idx, e, dtype=jnp.int32)  # [B,S*k,E]
+    counts = onehot.sum(axis=1)  # [B,E]
+    starts = jnp.cumsum(counts, axis=-1) - counts  # exclusive
+    rank = jnp.arange(s * k)[None, :] - jnp.take_along_axis(starts, sorted_e, axis=-1)
+    ok = rank < c
+    dest = jnp.where(ok, sorted_e * c + rank, e * c)  # overflow slot
+
+    # invert: destination bucket slot of each flat (token,slot)
+    dest_of_flat = jnp.zeros((b, s * k), jnp.int32)
+    dest_of_flat = jax.vmap(lambda dof, o, de: dof.at[o].set(de))(dest_of_flat, order, dest)
+
+    token_of_sorted = order // k  # token index of each sorted slot
+    # bucket -> source token (E*C + 1 with dummy overflow row)
+    src = jnp.full((b, e * c + 1), s, jnp.int32)
+    src = jax.vmap(lambda sr, de, to: sr.at[de].set(to))(src, dest, token_of_sorted)
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    xe = jax.vmap(lambda xp, sr: xp[sr])(x_pad, src[:, : e * c])  # [B, E*C, D]
+    xe = xe.reshape(b, e, c, d)
+    xe = shard(xe, "batch", "expert", "expert_capacity", "embed")
+
+    ye = _expert_ffn(p, xe).reshape(b, e * c, d)
+    ye = jnp.concatenate([ye, jnp.zeros((b, 1, d), ye.dtype)], axis=1)
+    contrib = jax.vmap(lambda yp, df: yp[df])(ye, dest_of_flat)  # [B,S*k,D]
+    out = (contrib.reshape(b, s, k, d)
+           * flat_gate.reshape(b, s, k, 1).astype(contrib.dtype)).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sp["wg"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, sp["wu"])
+        out = out + jnp.einsum("bsf,fd->bsd", h, sp["wd"])
+    return out
+
+
+def moe_ffn_onehot(p, x, cfg):
+    """GShard einsum dispatch (comparison path for §Perf)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(s, k, e, cfg.capacity_factor)
+    gates, idx = _route(p, x, cfg)
+
+    # position-in-expert via cumulative sums over sequence, per k-slot
+    out = jnp.zeros_like(x)
+    dispatch = jnp.zeros((b, s, e, c), x.dtype)
+    combine = jnp.zeros((b, s, e, c), jnp.float32)
+    prev = jnp.zeros((b, e), jnp.int32)
+    for slot in range(k):
+        oh = jax.nn.one_hot(idx[:, :, slot], e, dtype=jnp.int32)  # [B,S,E]
+        pos = jnp.cumsum(oh, axis=1) - 1 + prev[:, None, :]
+        prev = prev + oh.sum(axis=1)
+        ok = (pos < c) & (oh > 0)
+        pc = jax.nn.one_hot(jnp.where(ok, pos, c), c + 1, dtype=x.dtype)[..., :c]
+        dispatch = dispatch + oh.astype(x.dtype)[..., None] * pc
+        combine = combine + (gates[:, :, slot][..., None, None]
+                             * oh.astype(jnp.float32)[..., None] * pc.astype(jnp.float32))
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, x)
+    ye = _expert_ffn(p, xe)
+    out = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), ye)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, sp["wg"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, sp["wu"])
+        out = out + jnp.einsum("bsf,fd->bsd", h, sp["wd"])
+    return out
+
+
+def moe_ffn(p, x, cfg, mode: str = "sort"):
+    return moe_ffn_sort(p, x, cfg) if mode == "sort" else moe_ffn_onehot(p, x, cfg)

@@ -1,0 +1,359 @@
+"""Linear-recurrence token mixers: RWKV6 ("Finch") and Mamba2 (SSD).
+
+TPU adaptation (DESIGN.md §3): the GPU reference kernels are warp-level
+sequential scans. Here the parallel (train/prefill) form is *chunkwise*:
+within a chunk of C=16 tokens everything is masked matmuls with RELATIVE
+decays (every exponent <= 0, so no 1/w-style overflow paths anywhere), and
+the state is propagated across chunks with a small lax.scan. Decode is the
+exact one-step recurrence. ``repro/kernels/wkv6.py`` / ``ssd.py`` implement
+the same chunk math as Pallas kernels; these jnp forms are their oracles'
+twins (tests cross-check all three).
+
+RWKV6 recurrence (per head; r,k,w,u in R^dk, v in R^dv, state S in R^{dk,dv}):
+    o_t = r_t @ (S_{t-1} + (u * k_t)^T v_t)
+    S_t = diag(w_t) @ S_{t-1} + k_t^T v_t,     w_t = exp(-exp(w_raw_t))
+
+Mamba2/SSD (per head; scalar decay a_t, x_t in R^hd, B_t,C_t in R^dstate):
+    S_t = a_t S_{t-1} + dt_t (x_t outer B_t)
+    y_t = S_t @ C_t + D * x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.scan_config import chunk_scan_checkpointed
+from repro.models.layers import group_norm_heads, normal_init, rms_norm
+
+CHUNK = 16
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def _pad_chunks(x, c: int, axis: int = 1):
+    s = x.shape[axis]
+    pad = (-s) % c
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, pad
+
+
+# =====================================================================
+# RWKV6
+# =====================================================================
+
+def rwkv6_init(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.ssm_heads, cfg.ssm_state
+    ks = jax.random.split(key, 20)
+    loras = {}
+    for i, name in enumerate(("r", "k", "v", "g", "w")):
+        rank = LORA_DECAY if name == "w" else LORA_MIX
+        loras[f"A_{name}"] = normal_init(ks[i], (d, rank), d, dtype)
+        loras[f"B_{name}"] = normal_init(ks[5 + i], (rank, d), rank, dtype)
+        loras[f"mu_{name}"] = jnp.zeros((d,), dtype)
+    return {
+        "mu_x": jnp.zeros((d,), dtype),
+        **loras,
+        "w0": jnp.full((d,), -0.6, dtype),  # decay ~ exp(-exp(-0.6)) ~ 0.58
+        "u": normal_init(ks[10], (h, hd), hd, dtype),
+        "wr": normal_init(ks[11], (d, d), d, dtype),
+        "wk": normal_init(ks[12], (d, d), d, dtype),
+        "wv": normal_init(ks[13], (d, d), d, dtype),
+        "wgate": normal_init(ks[14], (d, d), d, dtype),
+        "wo": normal_init(ks[15], (d, d), d, dtype,
+                          scale=1.0 / max(2 * cfg.n_layers, 1) ** 0.5),
+        "gn_w": jnp.ones((d,), dtype),
+        "gn_b": jnp.zeros((d,), dtype),
+        # channel mix
+        "cm_mu_k": jnp.zeros((d,), dtype),
+        "cm_mu_r": jnp.zeros((d,), dtype),
+        "cm_k": normal_init(ks[16], (d, cfg.d_ff), d, dtype),
+        "cm_v": normal_init(ks[17], (cfg.d_ff, d), cfg.d_ff, dtype),
+        "cm_r": normal_init(ks[18], (d, d), d, dtype),
+    }
+
+
+def rwkv6_axes(cfg):
+    ax = {
+        "mu_x": "embed", "w0": "embed",
+        "u": "heads head_dim",
+        "wr": "embed inner", "wk": "embed inner", "wv": "embed inner",
+        "wgate": "embed inner", "wo": "inner embed",
+        "gn_w": "embed", "gn_b": "embed",
+        "cm_mu_k": "embed", "cm_mu_r": "embed",
+        "cm_k": "embed ff", "cm_v": "ff embed", "cm_r": "embed inner",
+    }
+    for name in ("r", "k", "v", "g", "w"):
+        ax[f"A_{name}"] = "embed lora_rank"
+        ax[f"B_{name}"] = "lora_rank embed"
+        ax[f"mu_{name}"] = "embed"
+    return ax
+
+
+def _rwkv6_projections(p, x, xx, cfg):
+    """Data-dependent token-shift mixes + projections.
+
+    x: [..., D] current; xx: [..., D] previous token's x (shift).
+    Returns r,k,v [.., H, hd], gate [.., D], log_w [.., H, hd].
+    """
+    h, hd = cfg.ssm_heads, cfg.ssm_state
+    sx = xx - x
+    xbase = x + sx * p["mu_x"]
+    mixed = {}
+    for name in ("r", "k", "v", "g", "w"):
+        lora = jnp.einsum("...r,rd->...d", jnp.tanh(
+            jnp.einsum("...d,dr->...r", xbase, p[f"A_{name}"])), p[f"B_{name}"])
+        mixed[name] = x + sx * (p[f"mu_{name}"] + lora)
+    r = jnp.einsum("...d,de->...e", mixed["r"], p["wr"])
+    k = jnp.einsum("...d,de->...e", mixed["k"], p["wk"])
+    v = jnp.einsum("...d,de->...e", mixed["v"], p["wv"])
+    gate = jax.nn.silu(jnp.einsum("...d,de->...e", mixed["g"], p["wgate"]))
+    w_raw = p["w0"] + jnp.einsum("...r,rd->...d", jnp.tanh(
+        jnp.einsum("...d,dr->...r", mixed["w"], p[f"A_w"])), p["B_w"])
+    log_w = -jnp.exp(w_raw.astype(jnp.float32))  # log of decay in (-inf, 0)
+    split = lambda t: t.reshape(*t.shape[:-1], h, hd)
+    return split(r), split(k), split(v), gate, split(log_w)
+
+
+def wkv6_chunked(r, k, v, log_w, u, s0):
+    """Chunkwise-parallel WKV6. r,k,v,log_w: [B,S,H,hd] (fp32 math),
+    u: [H,hd], s0: [B,H,hd,hd] initial state. Returns (o [B,S,H,hd], sT)."""
+    b, s, h, hd = r.shape
+    c = CHUNK
+    (r, _), (k, _), (v, _) = _pad_chunks(r, c), _pad_chunks(k, c), _pad_chunks(v, c)
+    log_w, pad = _pad_chunks(log_w, c)  # padded log_w = 0 -> w = 1 (identity)
+    n = r.shape[1] // c
+    f32 = lambda t: t.astype(jnp.float32)
+    # keep scan inputs in the model dtype (halves the saved-for-backward
+    # buffers); convert to f32 inside the chunk body. log_w stays f32 for
+    # decay precision.
+    rc = r.reshape(b, n, c, h, hd).transpose(1, 0, 3, 2, 4)  # [n,B,H,C,hd]
+    kc = k.reshape(b, n, c, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n, c, h, hd).transpose(1, 0, 3, 2, 4)
+    lw = f32(log_w).reshape(b, n, c, h, hd).transpose(1, 0, 3, 2, 4)
+
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)  # strict lower: s < t
+
+    def chunk_step(state, inp):
+        rc_, kc_, vc_, lw_ = inp  # [B,H,C,hd]
+        rc_, kc_, vc_ = f32(rc_), f32(kc_), f32(vc_)
+        p = jnp.cumsum(lw_, axis=2)          # inclusive  Σ_{u<=t}
+        p_shift = p - lw_                    # exclusive  Σ_{u<t}
+        # inter-chunk: o_t += (r_t * exp(p_shift_t)) @ S_in
+        r_dec = rc_ * jnp.exp(p_shift)
+        o = jnp.einsum("bhtd,bhdv->bhtv", r_dec, state)
+        # intra-chunk: decay(t,s) = exp(p_shift[t] - p[s]), s < t (all <= 0)
+        dec = jnp.exp(
+            jnp.where(tri[None, None, :, :, None],
+                      p_shift[:, :, :, None, :] - p[:, :, None, :, :], -jnp.inf))
+        a = jnp.einsum("bhtd,bhsd,bhtsd->bhts", rc_, kc_, dec)
+        # bonus diagonal: r_t . (u * k_t)
+        diag = jnp.einsum("bhtd,hd,bhtd->bht", rc_, u.astype(jnp.float32), kc_)
+        a = a + diag[..., None] * jnp.eye(c, dtype=jnp.float32)
+        o = o + jnp.einsum("bhts,bhsv->bhtv", a, vc_)
+        # state update: S_out = diag(exp(p_last)) S_in + sum_s (k_s*exp(p_last-p_s))^T v_s
+        p_last = p[:, :, -1:, :]             # [B,H,1,hd]
+        k_dec = kc_ * jnp.exp(p_last - p)
+        new_state = state * jnp.exp(p_last[:, :, 0, :])[..., None] + jnp.einsum(
+            "bhsd,bhsv->bhdv", k_dec, vc_)
+        return new_state, o
+
+    sT, o = chunk_scan_checkpointed(chunk_step, f32(s0), (rc, kc, vc, lw), n)
+    o = o.transpose(1, 0, 3, 2, 4).reshape(b, n * c, h, hd)
+    return o[:, :s], sT
+
+
+def wkv6_step(r, k, v, log_w, u, state):
+    """Exact one-token recurrence. r,k,v,log_w: [B,H,hd]; state: [B,H,hd,hd]."""
+    f32 = lambda t: t.astype(jnp.float32)
+    r, k, v, log_w = f32(r), f32(k), f32(v), f32(log_w)
+    kv = jnp.einsum("bhd,bhv->bhdv", k, v)
+    o = jnp.einsum("bhd,bhdv->bhv", r, state + u.astype(jnp.float32)[None, :, :, None] * kv)
+    new_state = state * jnp.exp(log_w)[..., None] + kv
+    return o, new_state
+
+
+def rwkv6_time_mix(p, x, cfg, *, shift_state=None, wkv_state=None, parallel=True):
+    """Full time-mix block. Parallel: x [B,S,D]; step: x [B,D]."""
+    h, hd = cfg.ssm_heads, cfg.ssm_state
+    if parallel:
+        b, s, d = x.shape
+        prev = jnp.zeros((b, 1, d), x.dtype) if shift_state is None else shift_state[:, None]
+        xx = jnp.concatenate([prev, x[:, :-1]], axis=1)
+        r, k, v, gate, log_w = _rwkv6_projections(p, x, xx, cfg)
+        s0 = (jnp.zeros((b, h, hd, hd), jnp.float32) if wkv_state is None
+              else wkv_state)
+        o, sT = wkv6_chunked(r, k, v, log_w, p["u"], s0)
+        o = o.reshape(b, s, h * hd).astype(x.dtype)
+        o = group_norm_heads(o, p["gn_w"], p["gn_b"], h)
+        out = jnp.einsum("bse,ed->bsd", o * gate, p["wo"])
+        return out, (x[:, -1], sT)
+    else:
+        b, d = x.shape
+        xx = shift_state
+        r, k, v, gate, log_w = _rwkv6_projections(p, x, xx, cfg)
+        o, sT = wkv6_step(r, k, v, log_w, p["u"], wkv_state)
+        o = o.reshape(b, h * hd).astype(x.dtype)
+        o = group_norm_heads(o, p["gn_w"], p["gn_b"], h)
+        out = jnp.einsum("be,ed->bd", o * gate, p["wo"])
+        return out, (x, sT)
+
+
+def rwkv6_channel_mix(p, x, *, shift_state=None, parallel=True):
+    if parallel:
+        b, s, d = x.shape
+        prev = jnp.zeros((b, 1, d), x.dtype) if shift_state is None else shift_state[:, None]
+        xx = jnp.concatenate([prev, x[:, :-1]], axis=1)
+        new_shift = x[:, -1]
+    else:
+        xx = shift_state
+        new_shift = x
+    sx = xx - x
+    xk = x + sx * p["cm_mu_k"]
+    xr = x + sx * p["cm_mu_r"]
+    kk = jnp.square(jax.nn.relu(jnp.einsum("...d,df->...f", xk, p["cm_k"])))
+    kv = jnp.einsum("...f,fd->...d", kk, p["cm_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["cm_r"]))
+    return rr * kv, new_shift
+
+
+# =====================================================================
+# Mamba2 (SSD)
+# =====================================================================
+
+def mamba2_init(key, cfg, dtype):
+    d = cfg.d_model
+    di = 2 * d
+    ds = cfg.ssm_state
+    h = cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": normal_init(ks[0], (d, 2 * di + 2 * ds + h), d, dtype),
+        "conv_w": normal_init(ks[1], (4, di), 4, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),  # a = exp(-exp(A_log)*dt)
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "gn_w": jnp.ones((di,), dtype),
+        "out_proj": normal_init(ks[2], (di, d), di, dtype,
+                                scale=1.0 / max(2 * cfg.n_layers, 1) ** 0.5),
+    }
+
+
+def mamba2_axes(cfg):
+    return {
+        "in_proj": "embed inner", "conv_w": "conv_k inner", "conv_b": "inner",
+        "A_log": "heads", "D": "heads", "dt_bias": "heads",
+        "gn_w": "inner", "out_proj": "inner embed",
+    }
+
+
+def _mamba2_split(p, xz, cfg):
+    d = cfg.d_model
+    di, ds, h = 2 * d, cfg.ssm_state, cfg.ssm_heads
+    z, xr, bmat, cmat, dt = jnp.split(xz, [di, 2 * di, 2 * di + ds, 2 * di + 2 * ds], axis=-1)
+    return z, xr, bmat, cmat, dt
+
+
+def ssd_chunked(xh, bmat, cmat, dt, a_log, d_skip, s0):
+    """Chunkwise SSD. xh: [B,S,H,hd]; bmat,cmat: [B,S,ds]; dt: [B,S,H] (post-
+    softplus); a_log: [H] (A_log); s0: [B,H,hd,ds]. Returns (y, sT)."""
+    b, s, h, hd = xh.shape
+    ds = bmat.shape[-1]
+    c = CHUNK
+    f32 = lambda t: t.astype(jnp.float32)
+    xh, _ = _pad_chunks(xh, c)
+    bmat, _ = _pad_chunks(bmat, c)
+    cmat, _ = _pad_chunks(cmat, c)
+    dt, _ = _pad_chunks(f32(dt), c)  # padded dt = 0 -> la = 0 (identity), contribution 0
+    n = xh.shape[1] // c
+    la = -jnp.exp(a_log.astype(jnp.float32))[None, None, :] * dt  # [B,S',H] log decay <= 0
+
+    xc = xh.reshape(b, n, c, h, hd).transpose(1, 0, 3, 2, 4)     # [n,B,H,C,hd]
+    dtc = dt.reshape(b, n, c, h).transpose(1, 0, 3, 2)           # [n,B,H,C]
+    lac = la.reshape(b, n, c, h).transpose(1, 0, 3, 2)           # [n,B,H,C]
+    bc = bmat.reshape(b, n, c, ds).transpose(1, 0, 2, 3)         # [n,B,C,ds]
+    cc = cmat.reshape(b, n, c, ds).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))  # inclusive: s <= t
+
+    def chunk_step(state, inp):
+        xc_, dtc_, lac_, bc_, cc_ = inp
+        xc_, bc_, cc_ = f32(xc_), f32(bc_), f32(cc_)
+        p = jnp.cumsum(lac_, axis=-1)  # [B,H,C] inclusive
+        # intra: M[t,s] = exp(p_t - p_s) * (C_t . B_s) * dt_s, s <= t
+        cb = jnp.einsum("btn,bsn->bts", cc_, bc_)  # [B,C,C]
+        dec = jnp.exp(jnp.where(tri[None, None], p[:, :, :, None] - p[:, :, None, :],
+                                -jnp.inf))  # [B,H,C,C]
+        m = cb[:, None] * dec * dtc_[:, :, None, :]
+        y = jnp.einsum("bhts,bhsd->bhtd", m, xc_)
+        # inter: y_t += exp(p_t) * (S_in @ C_t)
+        y = y + jnp.einsum("bhdn,btn,bht->bhtd", state, cc_, jnp.exp(p))
+        # state: S_out = exp(p_last) S_in + sum_s exp(p_last - p_s) dt_s x_s (x) B_s
+        p_last = p[:, :, -1:]
+        w = jnp.exp(p_last - p) * dtc_  # [B,H,C]
+        new_state = (state * jnp.exp(p[:, :, -1])[..., None, None]
+                     + jnp.einsum("bhs,bhsd,bsn->bhdn", w, xc_, bc_))
+        return new_state, y
+
+    sT, y = chunk_scan_checkpointed(chunk_step, f32(s0), (xc, dtc, lac, bc, cc), n)
+    y = y.transpose(1, 0, 3, 2, 4).reshape(b, n * c, h, hd)
+    y = y + d_skip.astype(jnp.float32)[None, None, :, None] * xh  # xh already padded
+    return y[:, :s], sT
+
+
+def ssd_step(xh, bmat, cmat, dt, a_log, d_skip, state):
+    """One-token SSD. xh: [B,H,hd]; bmat,cmat: [B,ds]; dt: [B,H]."""
+    f32 = lambda t: t.astype(jnp.float32)
+    xh, bmat, cmat, dt = f32(xh), f32(bmat), f32(cmat), f32(dt)
+    a = jnp.exp(-jnp.exp(a_log.astype(jnp.float32))[None] * dt)  # [B,H]
+    new_state = (state * a[..., None, None]
+                 + jnp.einsum("bh,bhd,bn->bhdn", dt, xh, bmat))
+    y = jnp.einsum("bhdn,bn->bhd", new_state, cmat)
+    y = y + d_skip.astype(jnp.float32)[None, :, None] * xh
+    return y, new_state
+
+
+def mamba2_block(p, x, cfg, *, conv_state=None, ssm_state=None, parallel=True):
+    """Full Mamba2 mixer. Parallel: x [B,S,D]; step: x [B,D]."""
+    d = cfg.d_model
+    di, ds, h = 2 * d, cfg.ssm_state, cfg.ssm_heads
+    hd = di // h
+    if parallel:
+        b, s, _ = x.shape
+        xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+        z, xr, bmat, cmat, dt_raw = _mamba2_split(p, xz, cfg)
+        xr = shard(xr, "batch", "seq", "inner")
+        # causal depthwise conv (kernel 4) over xr
+        prev = (jnp.zeros((b, 3, di), xr.dtype) if conv_state is None else conv_state)
+        xr_pad = jnp.concatenate([prev, xr], axis=1)
+        xr_conv = sum(xr_pad[:, i : i + s] * p["conv_w"][i] for i in range(4))
+        xr_conv = jax.nn.silu(xr_conv + p["conv_b"])
+        new_conv = xr_pad[:, s : s + 3]
+
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        xh = xr_conv.reshape(b, s, h, hd)
+        s0 = (jnp.zeros((b, h, hd, ds), jnp.float32) if ssm_state is None else ssm_state)
+        y, sT = ssd_chunked(xh, bmat, cmat, dt, p["A_log"], p["D"], s0)
+        y = y.reshape(b, s, di).astype(x.dtype)
+        y = rms_norm(y * jax.nn.silu(z), p["gn_w"], cfg.norm_eps)
+        out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+        return out, (new_conv, sT)
+    else:
+        b, _ = x.shape
+        xz = jnp.einsum("bd,de->be", x, p["in_proj"])
+        z, xr, bmat, cmat, dt_raw = _mamba2_split(p, xz, cfg)
+        conv_in = jnp.concatenate([conv_state, xr[:, None]], axis=1)  # [B,4,di]
+        xr_conv = jnp.einsum("bki,ki->bi", conv_in, p["conv_w"])
+        xr_conv = jax.nn.silu(xr_conv + p["conv_b"])
+        new_conv = conv_in[:, 1:]
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        xh = xr_conv.reshape(b, h, hd)
+        y, sT = ssd_step(xh, bmat, cmat, dt, p["A_log"], p["D"], ssm_state)
+        y = y.reshape(b, di).astype(x.dtype)
+        y = rms_norm(y * jax.nn.silu(z), p["gn_w"], cfg.norm_eps)
+        out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+        return out, (new_conv, sT)

@@ -1,0 +1,5 @@
+from repro.serving.cluster import SimCluster, run_workload
+from repro.serving.engine import AgentEngine, ServeResult
+from repro.serving.evaluator import SimulatedSkillEvaluator, TokenSpanEvaluator
+from repro.serving.telemetry import TelemetryTracker
+from repro.serving.workload import WORKLOADS, DialogueScript, WorkloadSpec, generate

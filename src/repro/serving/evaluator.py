@@ -1,0 +1,45 @@
+"""Response-quality evaluation (ground truth for the performance predictor).
+
+Two evaluators, mirroring Appendix C.2.5:
+  * TokenSpanEvaluator — deterministic: does the gold token span appear as a
+    contiguous subsequence of the output? (exact reproduction of the paper's
+    TokenSpanCoqaEvaluator at token level).
+  * SimulatedSkillEvaluator — the reduced CPU models generate noise, so the
+    benchmark quality signal is drawn from a (domain x agent-scale) skill
+    matrix modulated by request difficulty. This preserves the statistical
+    structure the predictor must learn (documented in DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class TokenSpanEvaluator:
+    def score(self, output_tokens, gold_tokens) -> float:
+        o = np.asarray(output_tokens)
+        g = np.asarray(gold_tokens)
+        if len(g) == 0 or len(o) < len(g):
+            return 0.0
+        for s in range(len(o) - len(g) + 1):
+            if np.array_equal(o[s : s + len(g)], g):
+                return 1.0
+        return 0.0
+
+
+class SimulatedSkillEvaluator:
+    """P(correct) = sigmoid(a*scale + b*domain_match - c*difficulty)."""
+
+    def __init__(self, seed: int = 0, a=0.18, b=1.2, c=2.2, bias=0.2):
+        self.rng = np.random.default_rng(seed)
+        self.a, self.b, self.c, self.bias = a, b, c, bias
+
+    def prob_correct(self, agent_scale: float, domain_match: bool,
+                     difficulty: float) -> float:
+        z = (self.a * agent_scale + self.b * float(domain_match)
+             - self.c * difficulty + self.bias)
+        return float(1.0 / (1.0 + np.exp(-z)))
+
+    def score(self, agent_scale: float, domain_match: bool,
+              difficulty: float) -> float:
+        return float(self.rng.random()
+                     < self.prob_correct(agent_scale, domain_match, difficulty))

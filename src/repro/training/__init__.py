@@ -1,0 +1,5 @@
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+from repro.training.data import SyntheticLM
+from repro.training.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.training.compress import CompressionConfig, compress_with_feedback
+from repro.training.loop import make_train_step, train_loop

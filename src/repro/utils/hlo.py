@@ -1,0 +1,153 @@
+"""Optimized-HLO text analysis: collective op inventory and wire-byte estimates.
+
+``compiled.cost_analysis()`` does not report collective traffic, so the
+roofline analyzer parses ``compiled.as_text()`` (post-SPMD-partitioning HLO)
+and sums the bytes moved by every collective op.
+
+Wire-byte model (ring algorithms over a group of k participants, per device):
+    all-reduce        2 * S * (k-1)/k     (reduce-scatter + all-gather phases)
+    all-gather        R * (k-1)/k         (R = gathered result bytes)
+    reduce-scatter    S * (k-1)/k         (S = operand bytes)
+    all-to-all        S * (k-1)/k
+    collective-permute  R                 (point-to-point)
+
+Notes:
+  * cost_analysis / HLO text are PER-PARTITION under SPMD, so these are
+    per-device wire bytes already.
+  * A ``while`` (lax.scan) body appears once in the HLO regardless of trip
+    count; callers that scan over layers account for that via the unrolled
+    L=1/L=2 extrapolation in repro.roofline.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.5 = bf16[16,256,8192]{2,1,0} all-gather(%param.3), ...
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<type>\([^=]*?\)|[\w\[\],{}\s]+?)\s+"
+    r"(?P<op>[\w\-]+)\((?P<operands>[^)]*)\)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Sum bytes over every dtype[shape] group found in a type string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]<=[...]
+        return int(m.group(2))
+    return default
+
+
+@dataclass
+class CollectiveOp:
+    op: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+    computation: str
+    line: str = field(repr=False, default="")
+
+    @property
+    def wire_bytes(self) -> float:
+        k = max(self.group_size, 1)
+        ring = (k - 1) / k if k > 1 else 0.0
+        if self.op == "all-reduce":
+            return 2.0 * self.operand_bytes * ring
+        if self.op == "all-gather":
+            return self.result_bytes * ring
+        if self.op == "reduce-scatter":
+            return self.operand_bytes * ring
+        if self.op == "all-to-all":
+            return self.operand_bytes * ring
+        if self.op == "collective-permute":
+            return float(self.result_bytes)
+        return float(self.result_bytes)
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> list[CollectiveOp]:
+    """Extract every collective op from optimized HLO text.
+
+    Handles async pairs (``all-reduce-start``/``-done``) by counting only the
+    ``-start`` op. Returns ops tagged with the computation they live in, so a
+    caller can attribute while-body collectives separately if desired.
+    """
+    shapes: dict[str, int] = {}
+    ops: list[CollectiveOp] = []
+    computation = "<module>"
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # computation headers look like:  %body.42 (arg.1: ...) -> ... {   or  ENTRY %main ... {
+        if stripped.endswith("{") and ("(" in stripped) and "=" not in stripped.split("(")[0]:
+            header = stripped.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+            if header:
+                computation = header
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.group("name"), m.group("type"), m.group("op")
+        shapes[name] = _shape_bytes(type_str)
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base not in _COLLECTIVES:
+            continue
+        operand_bytes = 0
+        for operand in m.group("operands").split(","):
+            oname = operand.strip().lstrip("%").split(" ")[0]
+            operand_bytes += shapes.get(oname, 0)
+        result_bytes = shapes[name]
+        if operand_bytes == 0:
+            operand_bytes = result_bytes
+        ops.append(
+            CollectiveOp(
+                op=base,
+                result_bytes=result_bytes,
+                operand_bytes=operand_bytes,
+                group_size=_group_size(line, default_group),
+                computation=computation,
+                line=stripped[:160],
+            )
+        )
+    return ops
+
+
+def collective_wire_bytes(hlo_text: str, default_group: int = 1) -> dict:
+    """Per-collective-type wire bytes (per device) + total, from HLO text."""
+    ops = parse_collectives(hlo_text, default_group)
+    by_type: dict[str, float] = {}
+    for c in ops:
+        by_type[c.op] = by_type.get(c.op, 0.0) + c.wire_bytes
+    by_type["total"] = sum(by_type.values())
+    by_type["count"] = len(ops)
+    return by_type

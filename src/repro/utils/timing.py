@@ -1,0 +1,34 @@
+"""Lightweight timing helpers for benchmarks (CPU wall-clock)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def lap(self) -> float:
+        t = time.perf_counter()
+        dt = t - self.t0
+        self.t0 = t
+        return dt
+
+
+def bench_call(fn, *args, warmup: int = 2, iters: int = 5, block: bool = True) -> float:
+    """Median wall-clock microseconds per call."""
+    for _ in range(warmup):
+        out = fn(*args)
+        if block:
+            jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if block:
+            jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

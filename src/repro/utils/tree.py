@@ -1,0 +1,39 @@
+"""Pytree utilities used across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree) -> int:
+    """Total number of parameters in a pytree (works on ShapeDtypeStructs too)."""
+    return int(sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree)))
+
+
+def param_bytes(tree) -> int:
+    return int(
+        sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(tree))
+    )
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def tree_zeros_like_f32(tree):
+    """f32 zeros with the same structure/shape — used for optimizer state."""
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+def tree_global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)

@@ -1,0 +1,12 @@
+import os
+
+# tests must see 1 device (the dry-run forces 512 in its own process only)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

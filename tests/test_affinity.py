@@ -1,0 +1,67 @@
+"""Prefix ledger / LCP affinity (Eq. 4) incl. recurrent extension-only mode."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.affinity import PrefixLedger, lcp_length
+
+
+def test_lcp_basic():
+    assert lcp_length(np.array([1, 2, 3]), np.array([1, 2, 4])) == 2
+    assert lcp_length(np.array([1, 2]), np.array([1, 2, 3])) == 2
+    assert lcp_length(np.array([], dtype=np.int32), np.array([1])) == 0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(0, 5), max_size=30),
+       st.lists(st.integers(0, 5), max_size=30))
+def test_lcp_is_prefix(a, b):
+    a, b = np.array(a, np.int32), np.array(b, np.int32)
+    l = lcp_length(a, b)
+    assert np.array_equal(a[:l], b[:l])
+    if l < min(len(a), len(b)):
+        assert a[l] != b[l]
+
+
+def test_affinity_semantics():
+    led = PrefixLedger()
+    prev = np.arange(10, dtype=np.int32)
+    led.update("a1", "d1", prev)
+    # exact extension
+    ext = np.concatenate([prev, np.array([99, 98], np.int32)])
+    assert led.affinity("a1", "d1", ext) == 10 / 12
+    assert led.affinity("a1", "d1", ext, extension_only=True) == 10 / 12
+    # divergence after 5 tokens
+    div = prev.copy()
+    div[5] = 77
+    assert led.affinity("a1", "d1", div) == 0.5
+    assert led.affinity("a1", "d1", div, extension_only=True) == 0.0
+    # other agent / session: zero (paper: switching agents loses locality)
+    assert led.affinity("a2", "d1", ext) == 0.0
+    assert led.affinity("a1", "d2", ext) == 0.0
+    # eviction resync
+    led.evict("a1", "d1")
+    assert led.affinity("a1", "d1", ext) == 0.0
+
+
+def test_affinity_matrix_python_vs_kernel():
+    rng = np.random.default_rng(0)
+    led = PrefixLedger()
+    agents = [f"a{i}" for i in range(4)]
+    prompts, dialogues = [], []
+    for j in range(5):
+        d = f"d{j}"
+        dialogues.append(d)
+        base = rng.integers(1, 9, size=rng.integers(4, 24)).astype(np.int32)
+        prompts.append(base)
+        for i, a in enumerate(agents):
+            if (i + j) % 3 == 0:
+                led.update(a, d, base[: max(1, len(base) // 2)])
+    py = led.affinity_matrix(prompts, dialogues, agents)
+    kr = led.affinity_matrix(prompts, dialogues, agents, use_kernel=True)
+    assert np.allclose(py, kr, atol=1e-6)
+    ext_mask = [True, False, True, False]
+    py2 = led.affinity_matrix(prompts, dialogues, agents,
+                              extension_only_mask=ext_mask)
+    kr2 = led.affinity_matrix(prompts, dialogues, agents,
+                              extension_only_mask=ext_mask, use_kernel=True)
+    assert np.allclose(py2, kr2, atol=1e-6)

@@ -1,0 +1,94 @@
+"""VCG mechanism: payment modes agree; DSIC (Thm 4.2); weak budget balance
+(Thm 4.3); individual rationality of truthful clients."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.auction import client_utilities, run_auction
+
+
+@st.composite
+def markets(draw):
+    n = draw(st.integers(1, 6))
+    m = draw(st.integers(1, 4))
+    values = np.array([[round(draw(st.floats(0, 5, allow_nan=False)), 3)
+                        for _ in range(m)] for _ in range(n)])
+    costs = np.array([[round(draw(st.floats(0, 3, allow_nan=False)), 3)
+                       for _ in range(m)] for _ in range(n)])
+    caps = [draw(st.integers(1, 2)) for _ in range(m)]
+    return values, costs, caps
+
+
+@settings(max_examples=80, deadline=None)
+@given(markets())
+def test_warmstart_equals_naive_payments(mkt):
+    values, costs, caps = mkt
+    r1 = run_auction(values, costs, caps, payment_mode="naive")
+    r2 = run_auction(values, costs, caps, payment_mode="warmstart")
+    assert r1.assignment == r2.assignment
+    assert np.allclose(r1.payments, r2.payments, atol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(markets(), st.integers(0, 5), st.floats(-2, 2))
+def test_truthfulness_dominant_strategy(mkt, j_idx, deviation):
+    """Misreporting v_j never increases client j's utility (DSIC)."""
+    values, costs, caps = mkt
+    n = values.shape[0]
+    j = j_idx % n
+    honest = run_auction(values, costs, caps)
+    u_honest = client_utilities(honest, values)[j]
+
+    lied = values.copy()
+    lied[j] = np.maximum(lied[j] + deviation, 0.0)
+    strategic = run_auction(lied, costs, caps)
+    u_lied = client_utilities(strategic, values)[j]  # utility at TRUE values
+    assert u_lied <= u_honest + 1e-6
+
+
+@settings(max_examples=80, deadline=None)
+@given(markets())
+def test_weak_budget_balance_and_ir(mkt):
+    values, costs, caps = mkt
+    r = run_auction(values, costs, caps)
+    total_pay = sum(r.payments)
+    total_cost = sum(costs[j, i] for j, i in enumerate(r.assignment) if i >= 0)
+    assert total_pay >= total_cost - 1e-6  # Theorem 4.3
+    # individual rationality under truthful reporting
+    u = client_utilities(r, values)
+    assert (u >= -1e-6).all()
+    # per-transaction non-negative platform surplus (Appendix A.3)
+    for j, i in enumerate(r.assignment):
+        if i >= 0:
+            assert r.payments[j] >= costs[j, i] - 1e-6
+
+
+def test_payment_equals_externality_simple():
+    # two clients compete for one slot: winner pays the displaced welfare
+    values = np.array([[10.0], [7.0]])
+    costs = np.array([[1.0], [1.0]])
+    r = run_auction(values, costs, [1])
+    assert r.assignment == [0, -1]
+    # w = [9, 6]; p_0 = W(C\{0}) - (W - w_00) + c = 6 - 0 + 1
+    assert r.payments[0] == pytest.approx(7.0)
+
+
+@settings(max_examples=40, deadline=None)
+@given(markets())
+def test_welfare_monotone_in_agents(mkt):
+    """Adding an agent never reduces optimal welfare (market expansion)."""
+    values, costs, caps = mkt
+    r_full = run_auction(values, costs, caps)
+    if values.shape[1] > 1:
+        r_less = run_auction(values[:, :-1], costs[:, :-1], caps[:-1])
+        assert r_full.welfare >= r_less.welfare - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(markets())
+def test_unmatched_pay_nothing(mkt):
+    values, costs, caps = mkt
+    r = run_auction(values, costs, caps)
+    for j, i in enumerate(r.assignment):
+        if i < 0:
+            assert r.payments[j] == 0.0

@@ -1,0 +1,46 @@
+"""Hoeffding trees learn simple structure online."""
+import numpy as np
+
+from repro.core.hoeffding import HoeffdingTreeClassifier, HoeffdingTreeRegressor
+
+
+def test_regressor_learns_threshold_function():
+    rng = np.random.default_rng(0)
+    tree = HoeffdingTreeRegressor(3)
+    f = lambda x: 5.0 if x[0] > 0.5 else 1.0
+    for _ in range(1500):
+        x = rng.random(3)
+        tree.learn_one(x, f(x) + rng.normal(0, 0.1))
+    lo = np.mean([tree.predict_one([0.2, rng.random(), rng.random()])
+                  for _ in range(50)])
+    hi = np.mean([tree.predict_one([0.8, rng.random(), rng.random()])
+                  for _ in range(50)])
+    assert hi - lo > 2.0  # split found and leaves separate the regimes
+
+
+def test_regressor_tracks_linear_feature():
+    rng = np.random.default_rng(1)
+    tree = HoeffdingTreeRegressor(2)
+    for _ in range(3000):
+        x = rng.random(2)
+        tree.learn_one(x, 10.0 * x[1])
+    lo, hi = tree.predict_one([0.5, 0.05]), tree.predict_one([0.5, 0.95])
+    assert hi > lo + 2.0  # splits on the informative feature
+
+
+def test_classifier_learns_boundary():
+    rng = np.random.default_rng(2)
+    tree = HoeffdingTreeClassifier(2)
+    for _ in range(2000):
+        x = rng.random(2)
+        tree.learn_one(x, float(x[1] > 0.6))
+    p_hi = tree.predict_one([0.5, 0.9])
+    p_lo = tree.predict_one([0.5, 0.2])
+    assert p_hi > 0.7 and p_lo < 0.3
+
+
+def test_cold_start_safe():
+    tree = HoeffdingTreeRegressor(4)
+    assert tree.predict_one([0, 0, 0, 0]) == 0.0
+    cls = HoeffdingTreeClassifier(4)
+    assert cls.predict_one([0, 0, 0, 0]) == 0.5

@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.lcp_affinity import lcp_affinity
+from repro.kernels.ref import (attention_ref, decode_attention_ref, lcp_ref,
+                               ssd_ref, wkv6_ref)
+from repro.kernels.ssd import ssd
+from repro.kernels.wkv6 import wkv6
+
+
+@pytest.mark.parametrize("n,m,l", [(3, 5, 17), (8, 8, 64), (10, 3, 33),
+                                   (1, 1, 8), (9, 17, 128)])
+def test_lcp_kernel(n, m, l, rng):
+    p = rng.integers(0, 4, (n, l)).astype(np.int32)
+    led = rng.integers(0, 4, (n, m, l)).astype(np.int32)
+    led[0, 0] = p[0]
+    got = np.asarray(lcp_affinity(jnp.asarray(p), jnp.asarray(led)))
+    assert np.array_equal(got, lcp_ref(p, led))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,h,hkv,d,causal,win", [
+    (2, 64, 4, 2, 32, True, 0),
+    (1, 100, 4, 4, 16, True, 0),
+    (2, 128, 8, 2, 64, True, 48),
+    (1, 37, 2, 1, 32, False, 0),
+    (1, 256, 4, 4, 128, True, 0),
+])
+def test_flash_attention_kernel(b, sq, h, hkv, d, causal, win, dtype, rng):
+    q = rng.standard_normal((b, sq, h, d)).astype(dtype)
+    k = rng.standard_normal((b, sq, hkv, d)).astype(dtype)
+    v = rng.standard_normal((b, sq, hkv, d)).astype(dtype)
+    got = np.asarray(flash_attention(q, k, v, causal=causal, window=win,
+                                     bq=32, bk=32), np.float32)
+    want = np.asarray(attention_ref(q, k, v, causal=causal, window=win),
+                      np.float32)
+    tol = 2e-5 if dtype == np.float32 else 3e-2
+    assert np.max(np.abs(got - want)) < tol
+
+
+@pytest.mark.parametrize("b,h,hkv,d,m,bk", [
+    (2, 4, 2, 32, 100, 32), (1, 8, 8, 64, 257, 64), (3, 6, 2, 16, 48, 16)])
+def test_decode_attention_kernel(b, h, hkv, d, m, bk, rng):
+    q = rng.standard_normal((b, h, d)).astype(np.float32)
+    kc = rng.standard_normal((b, m, hkv, d)).astype(np.float32)
+    vc = rng.standard_normal((b, m, hkv, d)).astype(np.float32)
+    valid = rng.random((b, m)) < 0.7
+    valid[:, 0] = True
+    got = np.asarray(decode_attention(q, kc, vc, jnp.asarray(valid), bk=bk))
+    want = np.asarray(decode_attention_ref(q, kc, vc, jnp.asarray(valid)))
+    assert np.max(np.abs(got - want)) < 2e-5
+
+
+@pytest.mark.parametrize("b,s,h,dk", [(2, 48, 3, 16), (1, 35, 2, 32),
+                                      (2, 16, 1, 8)])
+def test_wkv6_kernel_vs_recurrence(b, s, h, dk, rng):
+    r, k, v = (rng.standard_normal((b, s, h, dk)).astype(np.float32)
+               for _ in range(3))
+    lw = -np.exp(rng.standard_normal((b, s, h, dk))).astype(np.float32)
+    lw = np.clip(lw, -4.0, -0.001)
+    u = rng.standard_normal((h, dk)).astype(np.float32)
+    s0 = np.zeros((b, h, dk, dk), np.float32)
+    got_o, got_s = wkv6(r, k, v, lw, u)
+    want_o, want_s = wkv6_ref(r, k, v, lw, u, s0)
+    assert np.max(np.abs(np.asarray(got_o) - np.asarray(want_o))) < 1e-3
+    assert np.max(np.abs(np.asarray(got_s) - np.asarray(want_s))) < 1e-3
+
+
+@pytest.mark.parametrize("b,s,h,hd,ds", [(2, 48, 3, 16, 8), (1, 37, 2, 32, 16)])
+def test_ssd_kernel_vs_recurrence(b, s, h, hd, ds, rng):
+    x = rng.standard_normal((b, s, h, hd)).astype(np.float32)
+    bm = rng.standard_normal((b, s, ds)).astype(np.float32)
+    cm = rng.standard_normal((b, s, ds)).astype(np.float32)
+    dt = np.abs(rng.standard_normal((b, s, h))).astype(np.float32) * 0.5
+    a_log = rng.standard_normal(h).astype(np.float32) * 0.3
+    dsk = rng.standard_normal(h).astype(np.float32)
+    s0 = np.zeros((b, h, hd, ds), np.float32)
+    got_y, got_s = ssd(x, bm, cm, dt, a_log, dsk)
+    want_y, want_s = ssd_ref(x, bm, cm, dt, a_log, dsk, s0)
+    assert np.max(np.abs(np.asarray(got_y) - np.asarray(want_y))) < 1e-3
+    assert np.max(np.abs(np.asarray(got_s) - np.asarray(want_s))) < 1e-3
+
+
+def test_model_chunked_paths_match_kernels(rng):
+    """models/ssm chunked jnp forms == Pallas kernels == stepwise oracle."""
+    from repro.models.ssm import ssd_chunked, wkv6_chunked
+
+    b, s, h, dk = 2, 40, 2, 16
+    r, k, v = (rng.standard_normal((b, s, h, dk)).astype(np.float32)
+               for _ in range(3))
+    lw = np.clip(-np.exp(rng.standard_normal((b, s, h, dk))), -4, -1e-3
+                 ).astype(np.float32)
+    u = rng.standard_normal((h, dk)).astype(np.float32)
+    s0 = np.zeros((b, h, dk, dk), np.float32)
+    o_jnp, s_jnp = wkv6_chunked(r, k, v, lw, u, s0)
+    o_ker, s_ker = wkv6(r, k, v, lw, u)
+    assert np.max(np.abs(np.asarray(o_jnp) - np.asarray(o_ker))) < 1e-3
+    assert np.max(np.abs(np.asarray(s_jnp) - np.asarray(s_ker))) < 1e-3

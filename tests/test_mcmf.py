@@ -1,0 +1,53 @@
+"""MCMF solver: exactness vs brute force (Theorem 4.1), integrality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.auction import solve_allocation
+from repro.core.mcmf import brute_force_matching
+
+
+@st.composite
+def instances(draw):
+    n = draw(st.integers(1, 6))
+    m = draw(st.integers(1, 4))
+    w = [[round(draw(st.floats(-1, 3, allow_nan=False)), 3) for _ in range(m)]
+         for _ in range(n)]
+    caps = [draw(st.integers(1, 2)) for _ in range(m)]
+    return np.array(w), caps
+
+
+@settings(max_examples=120, deadline=None)
+@given(instances())
+def test_mcmf_matches_brute_force(inst):
+    w, caps = inst
+    wp = np.where(w > 0, w, 0.0)
+    bf_w, _ = brute_force_matching(wp.tolist(), caps)
+    assignment, wf, _ = solve_allocation(wp, caps)
+    assert wf == pytest.approx(bf_w, abs=1e-6)
+    # feasibility: request matched at most once, capacities respected
+    used = {}
+    for j, i in enumerate(assignment):
+        if i >= 0:
+            assert wp[j, i] > 0
+            used[i] = used.get(i, 0) + 1
+    for i, c in used.items():
+        assert c <= caps[i]
+
+
+def test_welfare_monotone_in_capacity():
+    rng = np.random.default_rng(3)
+    w = rng.uniform(0, 2, (8, 3))
+    _, w1, _ = solve_allocation(w, [1, 1, 1])
+    _, w2, _ = solve_allocation(w, [2, 2, 2])
+    _, w3, _ = solve_allocation(w, [8, 8, 8])
+    assert w1 <= w2 + 1e-9 <= w3 + 2e-9
+    # with unlimited capacity every request takes its best agent
+    assert w3 == pytest.approx(np.maximum(w, 0).max(axis=1).sum())
+
+
+def test_prunes_nonpositive_edges():
+    w = np.array([[-5.0, -1.0], [-2.0, -3.0]])
+    assignment, wf, _ = solve_allocation(np.where(w > 0, w, 0.0), [1, 1])
+    assert assignment == [-1, -1]
+    assert wf == 0.0

@@ -1,0 +1,122 @@
+"""IEMAS router (Algorithm 1) end-to-end + hubs + predictors + properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AgentInfo, CompletionObs, IEMASRouter, Request,
+                        TokenPrices, ValuationConfig)
+from repro.core.hub import cluster_agents, route_to_hub
+from repro.core.predictor import AgentPredictor, PredictorInput
+from repro.core.pricing import observed_cost, predicted_cost
+
+
+def _agents(m=4, cap=2):
+    return [AgentInfo(f"a{i}", TokenPrices(0.01, 0.001, 0.03), cap,
+                      ("dialogue",) if i % 2 == 0 else ("reasoning",),
+                      scale=4.0 + i) for i in range(m)]
+
+
+def _requests(n=6, domain="dialogue"):
+    rng = np.random.default_rng(0)
+    return [Request(f"r{j}", f"d{j % 3}", rng.integers(1, 50, 20).astype(np.int32),
+                    turn=j // 3, domain=domain) for j in range(n)]
+
+
+def test_route_batch_respects_capacity():
+    router = IEMASRouter(_agents(2, cap=1))
+    decisions = router.route_batch(_requests(6), {})
+    per_agent = {}
+    for d in decisions:
+        if d.agent_id:
+            per_agent[d.agent_id] = per_agent.get(d.agent_id, 0) + 1
+    assert all(v <= 1 for v in per_agent.values())
+
+
+def test_feedback_updates_predictor_and_ledger():
+    router = IEMASRouter(_agents(), predictor_kw={"warm_n": 1})
+    reqs = _requests(3)
+    decisions = router.route_batch(reqs, {})
+    d0 = next(d for d in decisions if d.agent_id)
+    router.on_complete(d0.request.request_id, CompletionObs(
+        latency=0.05, n_prompt=20, n_hit=0, n_gen=8, quality=1.0))
+    assert router.pool[d0.agent_id].n_obs == 1
+    # ledger recorded the prompt -> affinity next turn
+    o = router.ledger.affinity(d0.agent_id, d0.request.dialogue_id,
+                               np.concatenate([d0.request.tokens,
+                                               np.array([1, 2], np.int32)]))
+    assert o == pytest.approx(20 / 22)
+
+
+def test_affinity_steers_routing():
+    """Turn 2 of a dialogue routes to the agent holding the cache."""
+    router = IEMASRouter(_agents(4), predictor_kw={"warm_n": 99})
+    req1 = _requests(1)
+    d1 = router.route_batch(req1, {})[0]
+    router.on_complete(req1[0].request_id, CompletionObs(0.05, 20, 0, 8, 1.0))
+    follow = Request("r-next", req1[0].dialogue_id,
+                     np.concatenate([req1[0].tokens,
+                                     np.arange(1, 9, dtype=np.int32)]),
+                     turn=1, domain="dialogue")
+    d2 = router.route_batch([follow], {})[0]
+    assert d2.agent_id == d1.agent_id
+
+
+def test_quarantine_excludes_failed_agent():
+    router = IEMASRouter(_agents(2))
+    reqs = _requests(2)
+    decisions = router.route_batch(reqs, {})
+    victim = next(d.agent_id for d in decisions if d.agent_id)
+    router.on_complete(
+        next(d.request.request_id for d in decisions if d.agent_id == victim),
+        CompletionObs(0, 10, 0, 0, 0, failed=True))
+    assert victim in router.quarantined
+    d3 = router.route_batch(_requests(4), {})
+    assert all(d.agent_id != victim for d in d3)
+    router.reinstate(victim)
+    assert victim not in router.quarantined
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 12))
+def test_hub_partition_is_exact(k, m):
+    domains = [("dialogue",) if i % 2 else ("reasoning",) for i in range(m)]
+    scales = [float(i + 1) for i in range(m)]
+    hubs = cluster_agents(domains, scales, k)
+    seen = sorted(i for h in hubs for i in h.agent_indices)
+    assert seen == list(range(m))  # partition: no loss, no duplication
+    h = route_to_hub("dialogue", hubs, domains)
+    assert 0 <= h < len(hubs)
+
+
+def test_predictor_prior_uses_affinity():
+    p = AgentPredictor("a", TokenPrices(0.01, 0.001, 0.03), warm_n=10)
+    base = dict(prompt_len=100, turn=1, router_inflight=0, router_rps=0,
+                agent_inflight=0, agent_rps=0, capacity=4, utilization=0,
+                domain_match=1)
+    cold = p.predict(PredictorInput(affinity=0.0, **base))
+    hot = p.predict(PredictorInput(affinity=0.9, **base))
+    assert hot.cost < cold.cost      # cached tokens are cheaper (Eq. 6)
+    assert hot.latency < cold.latency  # and faster (prefill skipped)
+
+
+def test_pricing_eq6():
+    prices = TokenPrices(0.01, 0.001, 0.03)
+    assert observed_cost(prices, 100, 60, 10) == pytest.approx(
+        0.01 * 40 + 0.001 * 60 + 0.03 * 10)
+    assert predicted_cost(prices, 100, 0.6, 10) == pytest.approx(
+        observed_cost(prices, 100, 60, 10))
+
+
+def test_hub_auction_welfare_close_to_global():
+    """K=2 hubs lose little welfare vs K=1 on a domain-structured market."""
+    agents = _agents(8)
+    reqs = _requests(8, domain="dialogue") + _requests(4, domain="reasoning")
+    for i, r in enumerate(reqs):
+        r.meta["i"] = i
+    g = IEMASRouter(agents, n_hubs=1, predictor_kw={"warm_n": 99})
+    h = IEMASRouter(agents, n_hubs=2, predictor_kw={"warm_n": 99})
+    dg = g.route_batch(list(reqs), {})
+    dh = h.route_batch(list(reqs), {})
+    wg = sum(d.welfare_weight for d in dg if d.agent_id)
+    wh = sum(d.welfare_weight for d in dh if d.agent_id)
+    assert wh >= 0.75 * wg

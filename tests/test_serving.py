@@ -1,0 +1,125 @@
+"""Serving engine + cluster: prefix reuse accounting, TTFT causality,
+fault tolerance, straggler pricing, elastic membership."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import IEMASRouter
+from repro.core.baselines import RandomRouter
+from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
+from repro.serving.engine import AgentEngine
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("qwen3-8b").scaled(dtype="float32", vocab_size=64,
+                                        qk_norm=False)
+    return AgentEngine(cfg, seed=0, max_len=256, max_new_tokens=3)
+
+
+def test_prefix_reuse_accounting(engine):
+    rng = np.random.default_rng(0)
+    p1 = rng.integers(1, 60, 40).astype(np.int32)
+    r1 = engine.serve("dlg", p1)
+    assert r1.n_hit == 0 and r1.n_prompt == 40 and r1.n_gen == 3
+
+    # turn 2 extends turn 1's prompt + the engine's actual answer
+    p2 = np.concatenate([p1, r1.output_tokens,
+                         rng.integers(1, 60, 7).astype(np.int32)])
+    r2 = engine.serve("dlg", p2)
+    assert r2.n_hit == 43  # prompt + generated tokens were cached
+    assert r2.n_prompt == 50
+
+    # unrelated prompt in the same session: partial/zero reuse only
+    p3 = rng.integers(1, 60, 40).astype(np.int32)
+    r3 = engine.serve("dlg", p3)
+    assert r3.n_hit < 5
+
+
+def test_cache_hit_reduces_ttft(engine):
+    rng = np.random.default_rng(1)
+    base = rng.integers(1, 60, 200).astype(np.int32)
+    engine.drop_session("t")
+    fresh = [engine.serve("t2%d" % i, base, max_new_tokens=1).ttft
+             for i in range(3)]
+    ext = []
+    prev = base
+    for i in range(3):
+        prev = np.concatenate([prev, rng.integers(1, 60, 4).astype(np.int32)])
+        ext.append(engine.serve("t20", prev, max_new_tokens=1).ttft)
+    # warm the session first
+    engine.serve("t20", base, max_new_tokens=1)
+    assert np.median(ext) < np.median(fresh)
+
+
+def test_lru_eviction(engine):
+    engine.sessions.clear()
+    engine.cache_slots = 3
+    rng = np.random.default_rng(2)
+    for i in range(5):
+        engine.serve(f"s{i}", rng.integers(1, 60, 20).astype(np.int32),
+                     now=float(i))
+    assert len(engine.sessions) == 3
+    assert "s0" not in engine.sessions and "s4" in engine.sessions
+
+
+def test_failure_quarantine_and_retry():
+    cluster = SimCluster(n_agents=3, seed=0, max_new_tokens=2, fail_prob=0.3)
+    router = IEMASRouter(cluster.agent_infos())
+    dialogues = generate(WorkloadSpec("coqa_like", n_dialogues=3, seed=2))
+    m = run_workload(cluster, router, dialogues, max_rounds=2500)
+    # every turn eventually completes despite 30% failure injection
+    expected = sum(len(d.turns) for d in dialogues)
+    assert m["n"] == expected
+
+
+def test_straggler_priced_out():
+    """The latency predictor learns per-agent slowness and the auction
+    shifts traffic away (paper's mechanism IS the mitigation)."""
+    cluster = SimCluster(n_agents=4, seed=1, max_new_tokens=2)
+    # make one agent a permanent straggler
+    straggler = list(cluster.agents)[0]
+    cluster.agents[straggler].straggle_prob = 1.0
+    cluster.agents[straggler].straggle_factor = 25.0
+    router = IEMASRouter(cluster.agent_infos(),
+                         predictor_kw={"warm_n": 3})
+    dialogues = generate(WorkloadSpec("coqa_like", n_dialogues=6, seed=3))
+    run_workload(cluster, router, dialogues, max_rounds=1500)
+    share = (sum(1 for r in cluster.records if r.agent_id == straggler)
+             / max(len(cluster.records), 1))
+    late = [r.agent_id for r in cluster.records[len(cluster.records) // 2:]]
+    late_share = late.count(straggler) / max(len(late), 1)
+    assert late_share <= share + 1e-9
+    assert late_share < 0.25  # well below uniform 1/4 by the end
+
+
+def test_elastic_add_remove():
+    cluster = SimCluster(n_agents=3, seed=0, max_new_tokens=2)
+    router = IEMASRouter(cluster.agent_infos())
+    from repro.configs.iemas_cluster import agent_profiles
+    new_prof = agent_profiles(5, seed=9)[4]
+    cluster.add_agent(new_prof, router)
+    assert new_prof.agent_id in [a.agent_id for a in router.agents]
+    dialogues = generate(WorkloadSpec("coqa_like", n_dialogues=2, seed=4))
+    m = run_workload(cluster, router, dialogues, max_rounds=800)
+    assert m["n"] > 0
+    cluster.remove_agent(new_prof.agent_id, router)
+    assert new_prof.agent_id not in [a.agent_id for a in router.agents]
+    # routing continues after removal
+    d2 = generate(WorkloadSpec("coqa_like", n_dialogues=2, seed=5))
+    cluster.records.clear()
+    m2 = run_workload(cluster, router, d2, max_rounds=800)
+    assert m2["n"] > 0
+
+
+def test_iemas_beats_random_on_cache_and_cost():
+    results = {}
+    for name, mk in (("iemas", lambda a: IEMASRouter(a)),
+                     ("random", lambda a: RandomRouter(a))):
+        cluster = SimCluster(n_agents=4, seed=0, max_new_tokens=3)
+        router = mk(cluster.agent_infos())
+        dialogues = generate(WorkloadSpec("coqa_like", n_dialogues=5, seed=6))
+        results[name] = run_workload(cluster, router, dialogues,
+                                     max_rounds=1200)
+    assert results["iemas"]["kv_hit_rate"] > 1.3 * results["random"]["kv_hit_rate"]
+    assert results["iemas"]["cost_mean"] < 0.8 * results["random"]["cost_mean"]

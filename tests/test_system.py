@@ -1,0 +1,70 @@
+"""End-to-end behaviour: full IEMAS stack vs the paper's headline claims,
+on a reduced workload (quantitative versions live in benchmarks/)."""
+import numpy as np
+
+from repro.core import IEMASRouter
+from repro.core.baselines import LeastLoadedRouter
+from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
+
+
+def _run(router_fn, workload="coqa_like", n_dialogues=5, seed=0):
+    cluster = SimCluster(n_agents=4, seed=seed, max_new_tokens=3)
+    router = router_fn(cluster.agent_infos())
+    dialogues = generate(WorkloadSpec(workload, n_dialogues=n_dialogues,
+                                      seed=seed + 1))
+    metrics = run_workload(cluster, router, dialogues, max_rounds=1500)
+    metrics["router"] = router
+    return metrics
+
+
+def test_iemas_dominates_load_balancing_on_multiturn():
+    """P1 claim: naive load balancing destroys cache locality. (Baselines
+    still get partial-prefix hits — the paper's Table 1 shows 26-53% — so
+    the margins are on both hit rate and realized cost.)"""
+    m_ie = _run(lambda a: IEMASRouter(a))
+    m_ll = _run(lambda a: LeastLoadedRouter(a))
+    assert m_ie["kv_hit_rate"] > m_ll["kv_hit_rate"] + 0.08
+    assert m_ie["cost_mean"] < 0.75 * m_ll["cost_mean"]
+
+
+def test_market_accounts_consistent():
+    """Payments cover agent costs (weak budget balance, realized)."""
+    m = _run(lambda a: IEMASRouter(a))
+    acc = m["router"].accounts
+    assert acc["matched"] > 0
+    assert acc["payments"] >= acc["agent_costs"] - 1e-6
+    assert acc["surplus"] >= -1e-6
+
+
+def test_predictions_converge_to_observations():
+    """NMAE of the latency/cost predictors drops as feedback accumulates
+    (Fig. 3 behaviour). cache_slots sized so sessions fit: chronic LRU
+    thrash makes the proxy's cache model diverge from the backend's true
+    LRU order, which is a capacity problem, not a learning one."""
+    cluster = SimCluster(n_agents=3, seed=2, max_new_tokens=3,
+                         cache_slots=12)
+    router = IEMASRouter(cluster.agent_infos(), predictor_kw={"warm_n": 4})
+    dialogues = generate(WorkloadSpec("coqa_like", n_dialogues=8, seed=3))
+    errs = []
+
+    orig = router.on_complete
+
+    def tracked(request_id, obs):
+        entry = router._pending.get(request_id)
+        if entry is not None and not obs.failed:
+            x, agent, req, payment, pred_cost = entry
+            est = router.pool[agent.agent_id].predict(x)
+            from repro.core.pricing import observed_cost
+            cost = observed_cost(agent.prices, obs.n_prompt, obs.n_hit,
+                                 obs.n_gen)
+            errs.append(abs(est.cost - cost) / max(cost, 1e-6))
+        return orig(request_id, obs)
+
+    router.on_complete = tracked
+    run_workload(cluster, router, dialogues, max_rounds=1500)
+    assert len(errs) > 30
+    # medians: the tail has unavoidable one-off eviction surprises (the
+    # proxy's LRU model can lag the backend's true LRU by one request)
+    early = np.median(errs[: len(errs) // 3])
+    late = np.median(errs[-len(errs) // 3:])
+    assert late < early  # predictor improves online
