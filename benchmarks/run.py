@@ -9,7 +9,8 @@ reduced sizes used in CI-style runs).
   fig5     Fig. 5   — truthful vs strategic bidding utility
   fig6     Fig. 6   — welfare & solver time vs hub count K
   fig7     Fig. 7   — Full-Mix / Ideal / Task-Mix / Agent-Mix economics
-  mcmf     §4.3     — naive vs warm-start VCG payment computation
+  mcmf     §4.3     — Phase-2 solver comparison: mcmf (naive/warm-start VCG)
+                      vs dense ε-scaling auction (+ jit variant)
   kernels  —        — kernel validation-path timings + batched-LCP speedup
 """
 from __future__ import annotations

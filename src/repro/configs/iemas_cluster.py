@@ -28,6 +28,27 @@ class AgentProfile:
     speed: float = 1.0    # relative hardware speed (4090 vs 6000 heterogeneity)
 
 
+@dataclass(frozen=True)
+class RouterConfig:
+    """Mechanism-side knobs plumbed from configs/CLI into IEMASRouter.
+
+    ``solver`` picks the Phase-2 welfare maximizer: ``"mcmf"`` is the exact
+    pure-Python oracle, ``"dense"`` the vectorized ε-scaling auction (hot
+    path at scale), ``"dense-jax"`` its jax.jit-staged variant."""
+    solver: str = "mcmf"
+    payment_mode: str = "warmstart"
+    n_hubs: int = 1
+    hub_scheme: str = "domain"
+    use_kernel_affinity: bool = False
+
+    def router_kwargs(self) -> dict:
+        import dataclasses
+
+        return dataclasses.asdict(self)
+
+
+DEFAULT_ROUTER = RouterConfig()
+
 MODEL_CLASSES = {
     # name: (n_layers, d_model, n_heads, d_ff, relative scale)
     # sized so CPU prefill compute dominates dispatch noise, preserving the

@@ -5,6 +5,10 @@ Cache-aware prediction (PrefixLedger + Hoeffding QoS), VCG/MCMF matching
 """
 from repro.core.affinity import PrefixLedger, lcp_length
 from repro.core.auction import AuctionResult, run_auction, solve_allocation
+from repro.core.auction_dense import (DenseAuctionResult,
+                                      dense_clarke_payments,
+                                      solve_dense_auction,
+                                      solve_dense_auction_jax)
 from repro.core.baselines import BASELINES
 from repro.core.hoeffding import HoeffdingTreeClassifier, HoeffdingTreeRegressor
 from repro.core.hub import Hub, cluster_agents, route_to_hub

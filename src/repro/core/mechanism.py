@@ -3,7 +3,8 @@
 Per micro-batch of requests:
   Phase 1  cache-aware prediction & valuation (ledger LCP -> o_ij; Hoeffding
            QoS -> (L,C,P); Eq. 1 -> v_ij; w_ij = v_ij - c_ij, pruned).
-  Phase 2  welfare maximization: MCMF per proxy hub (Eq. 7 / Thm 4.1).
+  Phase 2  welfare maximization per proxy hub (Eq. 7 / Thm 4.1): exact MCMF
+           or the vectorized dense ε-scaling auction (``solver=`` kwarg).
   Phase 3  VCG Clarke-pivot payments (Eq. 8) + dispatch.
   Phase 4  execution feedback: predictor updates + prefix-ledger updates.
 
@@ -73,12 +74,14 @@ class IEMASRouter:
     def __init__(self, agents: list[AgentInfo], *,
                  valuation: ValuationConfig | None = None,
                  payment_mode: str = "warmstart",
+                 solver: str = "mcmf",
                  n_hubs: int = 1, hub_scheme: str = "domain",
                  use_kernel_affinity: bool = False,
                  predictor_kw: dict | None = None):
         self.agents = list(agents)
         self.valuation = valuation or ValuationConfig()
         self.payment_mode = payment_mode
+        self.solver = solver
         self.use_kernel_affinity = use_kernel_affinity
         self.ledger = PrefixLedger()
         self.pool = PredictorPool({a.agent_id: a.prices for a in agents},
@@ -205,7 +208,8 @@ class IEMASRouter:
             vv = values[np.ix_(r_idx, a_idx)]
             cc = cst[np.ix_(r_idx, a_idx)]
             result = run_auction(vv, cc, [caps[i] for i in a_idx],
-                                 payment_mode=self.payment_mode)
+                                 payment_mode=self.payment_mode,
+                                 solver=self.solver)
             for local_j, j in enumerate(r_idx):
                 li = result.assignment[local_j]
                 if li < 0:

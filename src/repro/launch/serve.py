@@ -13,9 +13,10 @@ from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
 
 
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
-                 seed: int = 0):
+                 solver: str = "mcmf", seed: int = 0):
     if name == "iemas":
-        return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode)
+        return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
+                           solver=solver)
     return BASELINES[name](infos, seed=seed)
 
 
@@ -27,6 +28,10 @@ def main():
     ap.add_argument("--agents", type=int, default=9)
     ap.add_argument("--dialogues", type=int, default=16)
     ap.add_argument("--hubs", type=int, default=1)
+    ap.add_argument("--solver", default="mcmf",
+                    choices=["mcmf", "dense", "dense-jax"])
+    ap.add_argument("--payment-mode", default="warmstart",
+                    choices=["warmstart", "naive"])
     ap.add_argument("--fail-prob", type=float, default=0.0)
     ap.add_argument("--straggle-prob", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -39,6 +44,7 @@ def main():
                          straggle_prob=args.straggle_prob,
                          warmup=not args.no_warmup)
     router = build_router(args.router, cluster.agent_infos(), n_hubs=args.hubs,
+                          payment_mode=args.payment_mode, solver=args.solver,
                           seed=args.seed)
     dialogues = generate(WorkloadSpec(args.workload, n_dialogues=args.dialogues,
                                       seed=args.seed + 1))

@@ -1,4 +1,4 @@
-from repro.serving.cluster import SimCluster, run_workload
+from repro.serving.cluster import SimCluster, make_router, run_workload
 from repro.serving.engine import AgentEngine, ServeResult
 from repro.serving.evaluator import SimulatedSkillEvaluator, TokenSpanEvaluator
 from repro.serving.telemetry import TelemetryTracker

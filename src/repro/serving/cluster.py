@@ -22,8 +22,10 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.configs.iemas_cluster import MODEL_CLASSES, AgentProfile, agent_profiles
-from repro.core.mechanism import AgentInfo, CompletionObs, Request
+from repro.configs.iemas_cluster import (DEFAULT_ROUTER, MODEL_CLASSES,
+                                         AgentProfile, RouterConfig,
+                                         agent_profiles)
+from repro.core.mechanism import AgentInfo, CompletionObs, IEMASRouter, Request
 from repro.core.pricing import TokenPrices
 from repro.serving.engine import AgentEngine
 from repro.serving.evaluator import SimulatedSkillEvaluator
@@ -211,6 +213,18 @@ class SimCluster:
             "cost_mean": float(cost.mean()),
             "quality_mean": float(qual.mean()),
         }
+
+
+def make_router(cluster: SimCluster, config: RouterConfig | None = None,
+                **overrides) -> IEMASRouter:
+    """Build the IEMAS router for a cluster from a RouterConfig.
+
+    ``overrides`` land on top of the config and are passed straight to
+    IEMASRouter (e.g. ``solver="dense"``, ``predictor_kw={...}``), so the
+    Phase-2 solver choice threads from configs/CLI down to run_auction."""
+    kwargs = (config or DEFAULT_ROUTER).router_kwargs()
+    kwargs.update(overrides)
+    return IEMASRouter(cluster.agent_infos(), **kwargs)
 
 
 def run_workload(cluster: SimCluster, router, dialogues: list[DialogueScript],

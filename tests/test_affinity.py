@@ -1,6 +1,6 @@
 """Prefix ledger / LCP affinity (Eq. 4) incl. recurrent extension-only mode."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.affinity import PrefixLedger, lcp_length
 

@@ -2,7 +2,7 @@
 (Thm 4.3); individual rationality of truthful clients."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.auction import client_utilities, run_auction
 

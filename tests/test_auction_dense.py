@@ -1,0 +1,229 @@
+"""Dense ε-scaling auction solver: welfare parity with the MCMF oracle and
+brute force, certified gap, batched Clarke-pivot payment correctness, DSIC
+under the dense payment rule, and jax-variant parity."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.auction import client_utilities, run_auction, solve_allocation
+from repro.core.auction_dense import (dense_clarke_payments,
+                                      solve_dense_auction)
+from repro.core.mcmf import brute_force_matching
+
+ATOL = 1e-6
+
+
+def _instance(rng, n_max=32, m_max=32):
+    """Random market with varying size, caps and sparsity."""
+    n = int(rng.integers(1, n_max + 1))
+    m = int(rng.integers(1, m_max + 1))
+    sparsity = rng.uniform(0.0, 0.7)
+    values = rng.uniform(0, 6, (n, m)) * (rng.random((n, m)) > sparsity)
+    costs = rng.uniform(0, 3, (n, m))
+    caps = rng.integers(1, 5, m).tolist()
+    return values, costs, caps
+
+
+# ---------------------------------------------------------------- welfare --
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 10**6))
+def test_dense_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 7))
+    m = int(rng.integers(1, 5))
+    w = np.round(rng.uniform(-1, 3, (n, m)), 3)
+    wp = np.where(w > 0, w, 0.0)
+    caps = rng.integers(1, 3, m).tolist()
+    bf_w, _ = brute_force_matching(wp.tolist(), caps)
+    res = solve_dense_auction(wp, caps)
+    assert res.welfare == pytest.approx(bf_w, abs=ATOL)
+    assert res.gap_bound < ATOL
+    # feasibility
+    used = {}
+    for j, i in enumerate(res.assignment):
+        if i >= 0:
+            assert wp[j, i] > 0
+            used[i] = used.get(i, 0) + 1
+    for i, c in used.items():
+        assert c <= caps[i]
+
+
+def test_dense_matches_mcmf_on_200_instances():
+    """Acceptance: welfare parity with the exact MCMF within 1e-6 on >=200
+    random instances with n, m <= 32 (sizes, caps and sparsity varying)."""
+    rng = np.random.default_rng(1234)
+    checked = 0
+    for _ in range(200):
+        values, costs, caps = _instance(rng)
+        w = np.maximum(values - costs, 0.0)
+        _, mcmf_w, _ = solve_allocation(w, caps)
+        res = solve_dense_auction(w, caps)
+        assert res.welfare == pytest.approx(mcmf_w, abs=ATOL), \
+            f"instance {checked}: dense {res.welfare} vs mcmf {mcmf_w}"
+        checked += 1
+    assert checked >= 200
+
+
+def test_run_auction_dense_solver_full_result():
+    rng = np.random.default_rng(5)
+    values, costs, caps = _instance(rng, 16, 8)
+    r_m = run_auction(values, costs, caps)
+    r_d = run_auction(values, costs, caps, solver="dense")
+    assert r_d.welfare == pytest.approx(r_m.welfare, abs=ATOL)
+    assert r_d.solver_stats["solver"] == "dense"
+    assert r_d.solver_stats["gap_bound"] < ATOL
+    # unmatched requests pay nothing
+    for j, i in enumerate(r_d.assignment):
+        if i < 0:
+            assert r_d.payments[j] == 0.0
+
+
+def test_unknown_solver_rejected():
+    with pytest.raises(ValueError):
+        run_auction(np.ones((2, 2)), np.zeros((2, 2)), [1, 1], solver="nope")
+
+
+# ---------------------------------------------------------------- payments --
+@settings(max_examples=120, deadline=None)
+@given(st.integers(0, 10**6))
+def test_dense_payments_match_vcg_when_assignments_agree(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 9))
+    m = int(rng.integers(1, 5))
+    values = np.round(rng.uniform(0, 5, (n, m)), 3)
+    costs = np.round(rng.uniform(0, 3, (n, m)), 3)
+    caps = rng.integers(1, 3, m).tolist()
+    r_naive = run_auction(values, costs, caps, payment_mode="naive")
+    r_dense = run_auction(values, costs, caps, solver="dense")
+    assert r_dense.welfare == pytest.approx(r_naive.welfare, abs=ATOL)
+    if r_dense.assignment == r_naive.assignment:
+        assert np.allclose(r_dense.payments, r_naive.payments, atol=ATOL)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, 10**6), st.floats(-2, 2))
+def test_dense_truthfulness_dominant_strategy(seed, deviation):
+    """Acceptance: misreporting never raises utility under dense payments."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 8))
+    m = int(rng.integers(1, 5))
+    values = np.round(rng.uniform(0, 5, (n, m)), 3)
+    costs = np.round(rng.uniform(0, 3, (n, m)), 3)
+    caps = rng.integers(1, 3, m).tolist()
+    j = int(rng.integers(0, n))
+    honest = run_auction(values, costs, caps, solver="dense")
+    u_honest = client_utilities(honest, values)[j]
+    lied = values.copy()
+    lied[j] = np.maximum(lied[j] + deviation, 0.0)
+    strategic = run_auction(lied, costs, caps, solver="dense")
+    u_lied = client_utilities(strategic, values)[j]
+    assert u_lied <= u_honest + ATOL
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10**6))
+def test_dense_weak_budget_balance_and_ir(seed):
+    rng = np.random.default_rng(seed)
+    values, costs, caps = _instance(rng, 16, 8)
+    r = run_auction(values, costs, caps, solver="dense")
+    total_pay = sum(r.payments)
+    total_cost = sum(costs[j, i] for j, i in enumerate(r.assignment) if i >= 0)
+    assert total_pay >= total_cost - ATOL            # Theorem 4.3
+    u = client_utilities(r, values)
+    assert (u >= -ATOL).all()                        # IR when truthful
+    for j, i in enumerate(r.assignment):
+        if i >= 0:
+            assert r.payments[j] >= costs[j, i] - ATOL
+
+
+def test_dense_payment_equals_externality_simple():
+    # two clients compete for one slot: winner pays the displaced welfare
+    values = np.array([[10.0], [7.0]])
+    costs = np.array([[1.0], [1.0]])
+    r = run_auction(values, costs, [1], solver="dense")
+    assert r.assignment == [0, -1]
+    assert r.payments[0] == pytest.approx(7.0, abs=ATOL)
+
+
+def test_dense_clarke_payments_standalone():
+    w = np.array([[3.0, 1.0], [2.0, 2.0]])
+    costs = np.zeros((2, 2))
+    res = solve_dense_auction(w, [1, 1])
+    pays = dense_clarke_payments(w, costs, [1, 1], res.assignment)
+    r_naive = run_auction(w, costs, [1, 1], payment_mode="naive")
+    assert res.assignment == r_naive.assignment
+    assert np.allclose(pays, r_naive.payments, atol=ATOL)
+
+
+# ------------------------------------------------------------- edge cases --
+def test_dense_empty_and_degenerate():
+    res = solve_dense_auction(np.zeros((3, 2)), [1, 1])
+    assert res.assignment == [-1, -1, -1] and res.welfare == 0.0
+    res = solve_dense_auction(np.ones((2, 2)), [0, 0])    # no capacity
+    assert res.assignment == [-1, -1]
+    res = solve_dense_auction(np.zeros((0, 2)).reshape(0, 2), [1, 1])
+    assert res.assignment == [] and res.welfare == 0.0
+    # caps larger than n are harmless (slots clamp to n)
+    res = solve_dense_auction(np.array([[2.0]]), [50])
+    assert res.assignment == [0] and res.welfare == 2.0
+
+
+def test_dense_welfare_monotone_in_capacity():
+    rng = np.random.default_rng(3)
+    w = rng.uniform(0, 2, (8, 3))
+    w1 = solve_dense_auction(w, [1, 1, 1]).welfare
+    w2 = solve_dense_auction(w, [2, 2, 2]).welfare
+    w3 = solve_dense_auction(w, [8, 8, 8]).welfare
+    assert w1 <= w2 + 1e-9 <= w3 + 2e-9
+    assert w3 == pytest.approx(np.maximum(w, 0).max(axis=1).sum())
+
+
+def test_dense_ties_resolve_consistently():
+    # identical requests fighting identical slots must settle fast and exactly
+    w = np.full((6, 2), 2.5)
+    res = solve_dense_auction(w, [2, 1])
+    assert res.welfare == pytest.approx(7.5, abs=ATOL)
+    assert sum(1 for a in res.assignment if a >= 0) == 3
+
+
+# ------------------------------------------------------------- jax variant --
+@pytest.mark.slow
+def test_dense_jax_matches_numpy():
+    from repro.core.auction_dense import solve_dense_auction_jax
+
+    rng = np.random.default_rng(17)
+    for _ in range(3):
+        values, costs, caps = _instance(rng, 12, 6)
+        w = np.maximum(values - costs, 0.0)
+        r_np = solve_dense_auction(w, caps)
+        r_jx = solve_dense_auction_jax(w, caps)
+        # float32 path: certified gap is wider than the float64 reference
+        tol = max(1e-6, r_jx.gap_bound + 1e-4)
+        assert abs(r_np.welfare - r_jx.welfare) <= tol
+
+
+@pytest.mark.slow
+def test_dense_jax_payments_match_vcg_when_assignments_agree():
+    rng = np.random.default_rng(23)
+    agreed = 0
+    for _ in range(10):
+        n = int(rng.integers(1, 9))
+        m = int(rng.integers(1, 5))
+        values = np.round(rng.uniform(0, 5, (n, m)), 3)
+        costs = np.round(rng.uniform(0, 3, (n, m)), 3)
+        caps = rng.integers(1, 3, m).tolist()
+        r_naive = run_auction(values, costs, caps, payment_mode="naive")
+        r_jax = run_auction(values, costs, caps, solver="dense-jax")
+        if r_jax.assignment == r_naive.assignment:
+            agreed += 1
+            assert np.allclose(r_jax.payments, r_naive.payments, atol=1e-4)
+    assert agreed >= 5  # ties aside, the float32 path finds the optimum
+
+
+def test_dense_jax_raises_on_round_exhaustion():
+    from repro.core.auction_dense import solve_dense_auction_jax
+
+    rng = np.random.default_rng(3)
+    w = rng.uniform(0, 5, (12, 6))
+    with pytest.raises(RuntimeError, match="failed to converge"):
+        solve_dense_auction_jax(w, [2] * 6, max_rounds=3)

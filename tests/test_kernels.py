@@ -11,6 +11,8 @@ from repro.kernels.ref import (attention_ref, decode_attention_ref, lcp_ref,
 from repro.kernels.ssd import ssd
 from repro.kernels.wkv6 import wkv6
 
+pytestmark = pytest.mark.slow  # excluded from tier-1; run with -m ""
+
 
 @pytest.mark.parametrize("n,m,l", [(3, 5, 17), (8, 8, 64), (10, 3, 33),
                                    (1, 1, 8), (9, 17, 128)])

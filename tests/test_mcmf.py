@@ -1,7 +1,7 @@
 """MCMF solver: exactness vs brute force (Theorem 4.1), integrality."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.auction import solve_allocation
 from repro.core.mcmf import brute_force_matching

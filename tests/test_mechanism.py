@@ -1,7 +1,7 @@
 """IEMAS router (Algorithm 1) end-to-end + hubs + predictors + properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (AgentInfo, CompletionObs, IEMASRouter, Request,
                         TokenPrices, ValuationConfig)
@@ -105,6 +105,63 @@ def test_pricing_eq6():
         0.01 * 40 + 0.001 * 60 + 0.03 * 10)
     assert predicted_cost(prices, 100, 0.6, 10) == pytest.approx(
         observed_cost(prices, 100, 60, 10))
+
+
+def test_failed_completion_quarantines_and_charges_nothing():
+    """Fault path regression: on_complete(failed=True) must quarantine the
+    agent, book NO payment/cost/welfare, skip predictor+ledger updates, and
+    drop the pending entry (a duplicate completion is a no-op)."""
+    router = IEMASRouter(_agents(2), predictor_kw={"warm_n": 1})
+    decisions = router.route_batch(_requests(2), {})
+    d0 = next(d for d in decisions if d.agent_id)
+    before = dict(router.accounts)
+    router.on_complete(d0.request.request_id, CompletionObs(
+        latency=0.0, n_prompt=20, n_hit=0, n_gen=0, quality=0.0, failed=True))
+    assert d0.agent_id in router.quarantined
+    assert router.accounts["payments"] == before["payments"]
+    assert router.accounts["agent_costs"] == before["agent_costs"]
+    assert router.accounts["surplus"] == before["surplus"]
+    assert router.accounts["welfare_realized"] == before["welfare_realized"]
+    assert router.pool[d0.agent_id].n_obs == 0
+    assert router.ledger.get(d0.agent_id, d0.request.dialogue_id) is None
+    assert d0.request.request_id not in router._pending
+    # duplicate delivery of the same completion must be inert
+    router.on_complete(d0.request.request_id, CompletionObs(
+        latency=0.1, n_prompt=20, n_hit=0, n_gen=4, quality=1.0))
+    assert router.accounts["payments"] == before["payments"]
+    assert router.pool[d0.agent_id].n_obs == 0
+
+
+def test_cache_slots_lru_zeroes_evicted_affinity():
+    """§4.4 published cache summaries: with cache_slots=k, sessions beyond
+    the k most-recent are presumed evicted and their affinity zeroed, so the
+    cold-start prior prices them as full-prefill; recent sessions keep their
+    cache discount. cache_slots=0 means unbounded (no zeroing)."""
+    rng = np.random.default_rng(2)
+    toks = {d: rng.integers(1, 50, 24).astype(np.int32) for d in ("d0", "d1")}
+
+    def one_agent_router(cache_slots):
+        a = AgentInfo("a0", TokenPrices(0.01, 0.001, 0.03), 4, ("dialogue",),
+                      cache_slots=cache_slots)
+        r = IEMASRouter([a], predictor_kw={"warm_n": 99})
+        r.ledger.update("a0", "d0", toks["d0"])  # older session
+        r.ledger.update("a0", "d1", toks["d1"])  # most recent session
+        return r
+
+    def estimate(router, dlg):
+        ext = np.concatenate([toks[dlg], np.array([1, 2], np.int32)])
+        req = Request("rx", dlg, ext, turn=1, domain="dialogue")
+        return router.route_batch([req], {})[0].estimate
+
+    lru = one_agent_router(cache_slots=1)
+    unbounded = one_agent_router(cache_slots=0)
+    # evicted session d0: prior must see affinity 0 -> full-prefill pricing
+    ev, ok = estimate(lru, "d0"), estimate(unbounded, "d0")
+    assert ev.cost > ok.cost and ev.latency > ok.latency
+    # the most recent session keeps its discount even under the LRU model
+    hot_lru, hot_unb = estimate(lru, "d1"), estimate(unbounded, "d1")
+    assert hot_lru.cost == pytest.approx(hot_unb.cost)
+    assert hot_lru.cost < ev.cost
 
 
 def test_hub_auction_welfare_close_to_global():

@@ -9,6 +9,8 @@ from repro.core.baselines import RandomRouter
 from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
 from repro.serving.engine import AgentEngine
 
+pytestmark = pytest.mark.slow  # excluded from tier-1; run with -m ""
+
 
 @pytest.fixture(scope="module")
 def engine():

@@ -17,6 +17,8 @@ from repro.training.compress import (CompressionConfig, compress_with_feedback,
                                      init_feedback)
 from repro.training.loop import train_loop
 
+pytestmark = pytest.mark.slow  # excluded from tier-1; run with -m ""
+
 
 @pytest.fixture(scope="module")
 def tiny_model():
