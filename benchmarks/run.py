@@ -11,6 +11,8 @@ reduced sizes used in CI-style runs).
   fig7     Fig. 7   — Full-Mix / Ideal / Task-Mix / Agent-Mix economics
   mcmf     §4.3     — Phase-2 solver comparison: mcmf (naive/warm-start VCG)
                       vs dense ε-scaling auction (+ jit variant)
+  phase1   §4.1     — Phase-1 QoS throughput: scalar per-pair loop vs the
+                      batched compiled-forest tensor path (+ jax descend)
   kernels  —        — kernel validation-path timings + batched-LCP speedup
 """
 from __future__ import annotations
@@ -39,6 +41,9 @@ def main() -> None:
     if want("mcmf"):
         from benchmarks import mcmf_scaling
         mcmf_scaling.run()
+    if want("phase1"):
+        from benchmarks import phase1_scaling
+        phase1_scaling.run()
     if want("kernels"):
         from benchmarks import kernel_bench
         kernel_bench.run()

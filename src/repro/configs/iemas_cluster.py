@@ -34,12 +34,23 @@ class RouterConfig:
 
     ``solver`` picks the Phase-2 welfare maximizer: ``"mcmf"`` is the exact
     pure-Python oracle, ``"dense"`` the vectorized ε-scaling auction (hot
-    path at scale), ``"dense-jax"`` its jax.jit-staged variant."""
+    path at scale), ``"dense-jax"`` its jax.jit-staged variant.
+
+    ``batched`` picks the Phase-1 QoS path: True (default) scores the full
+    (n, m, F) feature tensor through the compiled Hoeffding forests in one
+    vectorized pass; False keeps the per-pair scalar loop (the semantic
+    oracle — identical decisions, ~an order of magnitude slower).
+    ``predictor_backend`` is ``"numpy"`` (bit-exact vs scalar; the serving
+    default) or ``"jax"`` (jit-staged descent, float32; retraces whenever
+    the batch shape or a split-grown node pool changes shape, so it only
+    pays off under shape-stable batches — benchmark steady state)."""
     solver: str = "mcmf"
     payment_mode: str = "warmstart"
     n_hubs: int = 1
     hub_scheme: str = "domain"
     use_kernel_affinity: bool = False
+    batched: bool = True
+    predictor_backend: str = "numpy"
 
     def router_kwargs(self) -> dict:
         import dataclasses

@@ -10,11 +10,13 @@ from repro.core.auction_dense import (DenseAuctionResult,
                                       solve_dense_auction,
                                       solve_dense_auction_jax)
 from repro.core.baselines import BASELINES
-from repro.core.hoeffding import HoeffdingTreeClassifier, HoeffdingTreeRegressor
+from repro.core.hoeffding import (CompiledTree, HoeffdingTreeClassifier,
+                                  HoeffdingTreeRegressor, descend,
+                                  stack_compiled)
 from repro.core.hub import Hub, cluster_agents, route_to_hub
 from repro.core.mechanism import (AgentInfo, CompletionObs, IEMASRouter,
                                   Request, RouteDecision)
 from repro.core.predictor import (AgentPredictor, PredictorInput,
-                                  PredictorPool, QoSEstimate)
+                                  PredictorPool, QoSEstimate, feature_tensor)
 from repro.core.pricing import TokenPrices, observed_cost, predicted_cost
 from repro.core.valuation import ValuationConfig, client_value, welfare_weights

@@ -48,6 +48,21 @@ class PrefixLedger:
         items.sort(reverse=True)
         return {d for _, d in items[:limit]}
 
+    def apply_lru(self, o: np.ndarray, dialogue_ids: list,
+                  agent_ids: list, cache_slots: list) -> np.ndarray:
+        """LRU cache model (§4.4 published cache summaries): zero, in place,
+        the affinity of sessions each agent has presumably evicted — only
+        the ``cache_slots[i]`` most-recent sessions keep their score
+        (``cache_slots[i] <= 0`` means unbounded). One column masking per
+        agent instead of the per-(request, agent) Python loop."""
+        for i, (aid, slots) in enumerate(zip(agent_ids, cache_slots)):
+            if slots > 0:
+                recent = self.recent_sessions(aid, slots)
+                keep = np.fromiter((d in recent for d in dialogue_ids),
+                                   dtype=bool, count=len(dialogue_ids))
+                o[:, i] = np.where(keep, o[:, i], 0.0)
+        return o
+
     def get(self, agent_id: str, dialogue_id: str):
         return self._store.get((agent_id, dialogue_id))
 

@@ -8,10 +8,21 @@ the second-best split gain with confidence 1-delta.
 
 API mirrors river: ``learn_one(x, y)`` / ``predict_one(x)`` with x a 1-D
 numpy array (the framework's feature vectors are fixed-length, Eq. 5).
+
+Batched inference: a tree compiles lazily to a flat array-of-nodes form
+(:class:`CompiledTree`) whose ``descend`` scores a whole (B, n_features)
+matrix in one vectorized pass — a pure oracle-parity optimization of
+``predict_one`` (identical doubles: leaf values are baked at compile time
+with the same divisions ``predict_one`` performs). Every ``learn_one``
+bumps a version counter (leaf means shift even without a split), so the
+compiled form is invalidated and rebuilt on next use. ``stack_compiled``
+concatenates many trees into one node pool with per-tree roots, so an
+ensemble over m agents scores an (n·m, F) feature matrix in a single pass.
 """
 from __future__ import annotations
 
 import math
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -127,6 +138,120 @@ class _Node:
         return self.feature < 0
 
 
+@dataclass(frozen=True)
+class CompiledTree:
+    """Flat array-of-nodes form of one (or several stacked) Hoeffding trees.
+
+    ``feature[k] < 0`` marks node ``k`` as a leaf whose prediction is
+    ``value[k]``; internal nodes route ``x[feature] <= threshold`` to
+    ``left`` else ``right``. ``depth`` bounds the descend iteration count.
+
+    frozen covers the FIELDS, not the arrays: the owning tree's
+    ``compiled()`` refreshes ``value`` IN PLACE after non-split
+    observations (and the predictor pool does the same to its stacked
+    copy), so this is a live view, not a snapshot — ``.value.copy()``
+    if you need before/after comparisons.
+    """
+    feature: np.ndarray    # int32 [K]
+    threshold: np.ndarray  # float64 [K]
+    left: np.ndarray       # int32 [K]
+    right: np.ndarray      # int32 [K]
+    value: np.ndarray      # float64 [K]; 0.0 at internal nodes
+    depth: int
+
+
+def descend(tree: CompiledTree, X: np.ndarray,
+            roots: np.ndarray | None = None) -> np.ndarray:
+    """Vectorized tree walk: scores every row of ``X`` in one NumPy pass.
+
+    ``roots`` gives each row its starting node (stacked multi-tree form);
+    ``None`` starts every row at node 0. Rows already at a leaf keep their
+    position, so ragged trees coexist in one node pool.
+    """
+    X = np.asarray(X, dtype=np.float64)
+    n_rows = X.shape[0]
+    if roots is None:
+        cur = np.zeros(n_rows, dtype=np.int64)
+    else:
+        cur = np.asarray(roots, dtype=np.int64).copy()
+    if n_rows == 0:
+        return np.zeros(0, dtype=np.float64)
+    rows = np.arange(n_rows)
+    for _ in range(tree.depth + 1):
+        f = tree.feature[cur]
+        internal = f >= 0
+        if not internal.any():
+            break
+        go_left = X[rows, np.where(internal, f, 0)] <= tree.threshold[cur]
+        nxt = np.where(go_left, tree.left[cur], tree.right[cur])
+        cur = np.where(internal, nxt, cur)
+    return tree.value[cur]
+
+
+def stack_compiled(trees: list[CompiledTree]) -> tuple[CompiledTree, np.ndarray]:
+    """Concatenate compiled trees into one node pool; returns (stacked,
+    root offsets) so row ``r`` of a feature matrix descends tree
+    ``tree_of_row[r]`` via ``roots[tree_of_row]``."""
+    sizes = np.array([len(t.feature) for t in trees], dtype=np.int64)
+    offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+
+    def shift(child, off):
+        return np.where(child >= 0, child + off, child).astype(np.int32)
+
+    stacked = CompiledTree(
+        feature=np.concatenate([t.feature for t in trees]),
+        threshold=np.concatenate([t.threshold for t in trees]),
+        left=np.concatenate([shift(t.left, o)
+                             for t, o in zip(trees, offsets)]),
+        right=np.concatenate([shift(t.right, o)
+                              for t, o in zip(trees, offsets)]),
+        value=np.concatenate([t.value for t in trees]),
+        depth=max(t.depth for t in trees),
+    )
+    return stacked, offsets
+
+
+_JAX_DESCEND = None
+
+
+def _jax_descend():
+    """jit-staged descend (fori_loop over depth); float32 on default jax
+    configs, so vs the NumPy oracle expect ~1e-6 typically — and, when a
+    feature lands within float32 rounding of a threshold, a flipped
+    comparison can route to a DIFFERENT leaf (error up to the leaf-value
+    gap). The NumPy backend is the only bit-exact path."""
+    global _JAX_DESCEND
+    if _JAX_DESCEND is None:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+
+        def run(feature, threshold, left, right, value, roots, X, depth):
+            rows = jnp.arange(X.shape[0])
+
+            def body(_, cur):
+                f = feature[cur]
+                internal = f >= 0
+                go_left = X[rows, jnp.where(internal, f, 0)] <= threshold[cur]
+                nxt = jnp.where(go_left, left[cur], right[cur])
+                return jnp.where(internal, nxt, cur)
+
+            return value[lax.fori_loop(0, depth, body, roots)]
+
+        _JAX_DESCEND = jax.jit(run, static_argnames=("depth",))
+    return _JAX_DESCEND
+
+
+def descend_jax(tree: CompiledTree, X, roots=None) -> np.ndarray:
+    X = np.asarray(X)
+    if roots is None:
+        roots = np.zeros(X.shape[0], dtype=np.int32)
+    out = _jax_descend()(tree.feature, tree.threshold, tree.left, tree.right,
+                         tree.value, np.asarray(roots, np.int32), X,
+                         tree.depth + 1)
+    return np.asarray(out, dtype=np.float64)
+
+
 class _HoeffdingTreeBase:
     def __init__(self, n_features: int, *, delta: float = 1e-4,
                  grace_period: int = 40, max_depth: int = 7,
@@ -141,6 +266,16 @@ class _HoeffdingTreeBase:
         self.n_seen = 0
         self._y_min = np.inf
         self._y_max = -np.inf
+        # batched-inference cache, two-speed: structure (features/thresholds/
+        # children) changes only on splits, while leaf values shift on EVERY
+        # learn_one — so the flat form recompiles on _struct_version and
+        # merely refreshes its value array in place on _version
+        self._version = 0
+        self._struct_version = 0
+        self._compiled: CompiledTree | None = None
+        self._compiled_version = -1
+        self._compiled_struct_version = -1
+        self._leaf_slots: list[tuple[int, _Node]] = []
 
     def _sort(self, x) -> _Node:
         node = self.root
@@ -151,6 +286,7 @@ class _HoeffdingTreeBase:
     def learn_one(self, x, y):
         x = np.asarray(x, dtype=np.float64)
         self.n_seen += 1
+        self._version += 1
         self._y_min = min(self._y_min, float(y))
         self._y_max = max(self._y_max, float(y))
         node = self._sort(x)
@@ -179,6 +315,71 @@ class _HoeffdingTreeBase:
             node.left = _Node(self.n_features, node.depth + 1)
             node.right = _Node(self.n_features, node.depth + 1)
             node.stats = None  # freed; children start fresh
+            self._struct_version += 1
+
+    # ---------------- batched inference ----------------
+    def _leaf_value(self, node: _Node) -> float:
+        raise NotImplementedError
+
+    def _compile(self) -> CompiledTree:
+        feats: list[int] = []
+        thrs: list[float] = []
+        lefts: list[int] = []
+        rights: list[int] = []
+        vals: list[float] = []
+        leaf_slots: list[tuple[int, _Node]] = []
+        depth = 0
+
+        def emit(node: _Node) -> int:
+            nonlocal depth
+            k = len(feats)
+            depth = max(depth, node.depth)
+            feats.append(node.feature)
+            thrs.append(node.threshold)
+            lefts.append(-1)
+            rights.append(-1)
+            if node.is_leaf:
+                vals.append(self._leaf_value(node))
+                leaf_slots.append((k, node))
+            else:
+                vals.append(0.0)
+                lefts[k] = emit(node.left)
+                rights[k] = emit(node.right)
+            return k
+
+        emit(self.root)
+        self._leaf_slots = leaf_slots
+        return CompiledTree(np.asarray(feats, np.int32),
+                            np.asarray(thrs, np.float64),
+                            np.asarray(lefts, np.int32),
+                            np.asarray(rights, np.int32),
+                            np.asarray(vals, np.float64), depth)
+
+    def compiled(self) -> CompiledTree:
+        """Current flat form, refreshed lazily at two speeds: a full
+        recompile only after a ``learn_one`` split changed the structure
+        (O(#nodes), bounded by 2^max_depth); otherwise just the leaf-value
+        array rewritten in place (O(#leaves)) — non-split observations move
+        leaf means and the global fallback, never the routing arrays."""
+        if (self._compiled is None
+                or self._compiled_struct_version != self._struct_version):
+            self._compiled = self._compile()
+            self._compiled_struct_version = self._struct_version
+            self._compiled_version = self._version
+        elif self._compiled_version != self._version:
+            value = self._compiled.value
+            for k, node in self._leaf_slots:
+                value[k] = self._leaf_value(node)
+            self._compiled_version = self._version
+        return self._compiled
+
+    def predict_batch(self, X, backend: str = "numpy") -> np.ndarray:
+        """Score every row of ``X`` (B, n_features); matches per-row
+        ``predict_one`` exactly on the NumPy backend."""
+        X = np.asarray(X, dtype=np.float64)
+        if backend == "jax":
+            return descend_jax(self.compiled(), X)
+        return descend(self.compiled(), X)
 
 
 class HoeffdingTreeRegressor(_HoeffdingTreeBase):
@@ -198,6 +399,12 @@ class HoeffdingTreeRegressor(_HoeffdingTreeBase):
         if node.stats is not None and node.stats.n > 0:
             return node.stats.s / node.stats.n
         return self._global_s / self.n_seen
+
+    def _leaf_value(self, node: _Node) -> float:
+        st = node.stats
+        if st is not None and st.n > 0:
+            return st.s / st.n
+        return self._global_s / self.n_seen if self.n_seen else 0.0
 
 
 class HoeffdingTreeClassifier(_HoeffdingTreeBase):
@@ -219,4 +426,13 @@ class HoeffdingTreeClassifier(_HoeffdingTreeBase):
             c = node.stats.cls
             return float((c[1] + 1.0) / (c.sum() + 2.0))  # Laplace
         g = self._global_cls
+        return float((g[1] + 1.0) / (g.sum() + 2.0))
+
+    def _leaf_value(self, node: _Node) -> float:
+        st = node.stats
+        if st is not None and st.n > 0:
+            c = st.cls
+            return float((c[1] + 1.0) / (c.sum() + 2.0))
+        g = self._global_cls
+        # n_seen == 0 included: (0+1)/(0+2) is predict_one's 0.5 default
         return float((g[1] + 1.0) / (g.sum() + 2.0))

@@ -3,6 +3,11 @@
 Per micro-batch of requests:
   Phase 1  cache-aware prediction & valuation (ledger LCP -> o_ij; Hoeffding
            QoS -> (L,C,P); Eq. 1 -> v_ij; w_ij = v_ij - c_ij, pruned).
+           Batched by default: the full (n, m, F) Eq.-5 feature tensor is
+           scored by ``PredictorPool.predict_matrix`` in one vectorized
+           pass (compiled tree forests); ``batched=False`` keeps the
+           per-pair scalar loop as the semantic oracle — both produce
+           bit-identical decisions (tests/test_predictor_batch.py).
   Phase 2  welfare maximization per proxy hub (Eq. 7 / Thm 4.1): exact MCMF
            or the vectorized dense ε-scaling auction (``solver=`` kwarg).
   Phase 3  VCG Clarke-pivot payments (Eq. 8) + dispatch.
@@ -21,7 +26,8 @@ import numpy as np
 from repro.core.affinity import PrefixLedger
 from repro.core.auction import AuctionResult, run_auction
 from repro.core.hub import Hub, cluster_agents, route_to_hub
-from repro.core.predictor import PredictorInput, PredictorPool, QoSEstimate
+from repro.core.predictor import (PredictorInput, PredictorPool, QoSEstimate,
+                                  feature_tensor)
 from repro.core.pricing import TokenPrices, observed_cost
 from repro.core.valuation import ValuationConfig, client_value
 
@@ -77,12 +83,15 @@ class IEMASRouter:
                  solver: str = "mcmf",
                  n_hubs: int = 1, hub_scheme: str = "domain",
                  use_kernel_affinity: bool = False,
+                 batched: bool = True, predictor_backend: str = "numpy",
                  predictor_kw: dict | None = None):
         self.agents = list(agents)
         self.valuation = valuation or ValuationConfig()
         self.payment_mode = payment_mode
         self.solver = solver
         self.use_kernel_affinity = use_kernel_affinity
+        self.batched = batched
+        self.predictor_backend = predictor_backend
         self.ledger = PrefixLedger()
         self.pool = PredictorPool({a.agent_id: a.prices for a in agents},
                                   **(predictor_kw or {}))
@@ -143,38 +152,60 @@ class IEMASRouter:
         # of sessions the backend has presumably evicted, so the auction does
         # not pay for dead caches (and Eq.6 predictions stay calibrated under
         # the paper's constrained-memory / frequent-eviction regime).
-        for i, a in enumerate(live):
-            if a.cache_slots > 0:
-                recent = self.ledger.recent_sessions(a.agent_id, a.cache_slots)
-                for j, d in enumerate(dlg):
-                    if o[j, i] > 0 and d not in recent:
-                        o[j, i] = 0.0
+        o = self.ledger.apply_lru(o, dlg, [a.agent_id for a in live],
+                                  [a.cache_slots for a in live])
 
-        # Phase 1b: QoS prediction per candidate pair
+        # Phase 1b: QoS prediction per candidate pair — the whole (n, m, F)
+        # Eq.-5 tensor in one vectorized pass (default), or the scalar
+        # per-pair oracle loop (batched=False); PredictorInput objects are
+        # then materialized only for the pairs the auction actually matches.
         n, m = len(requests), len(live)
-        lat = np.zeros((n, m)); cst = np.zeros((n, m)); qual = np.zeros((n, m))
-        xs: list[list[PredictorInput]] = []
-        for j, r in enumerate(requests):
-            row = []
-            for i, a in enumerate(live):
-                util = telemetry.get("agent_inflight", {}).get(a.agent_id, 0) \
-                    / max(1, a.capacity)
-                x = PredictorInput(
-                    prompt_len=float(len(r.tokens)), turn=float(r.turn),
-                    affinity=float(o[j, i]),
-                    router_inflight=float(telemetry.get("router_inflight", 0)),
-                    router_rps=float(telemetry.get("router_rps", 0.0)),
-                    agent_inflight=float(telemetry.get("agent_inflight", {})
-                                         .get(a.agent_id, 0)),
-                    agent_rps=float(telemetry.get("agent_rps", {})
-                                    .get(a.agent_id, 0.0)),
-                    capacity=float(a.capacity), utilization=float(util),
-                    domain_match=float(r.domain in a.domains),
-                )
-                est = self.pool[a.agent_id].predict(x)
-                lat[j, i], cst[j, i], qual[j, i] = est.latency, est.cost, est.quality
-                row.append((x, est))
-            xs.append(row)
+        inflight = telemetry.get("agent_inflight", {})
+        agent_rps = telemetry.get("agent_rps", {})
+        if self.batched:
+            # domain membership via a per-unique-domain lookup row (a batch
+            # has few distinct domains; avoids n*m Python membership tests)
+            dom_rows: dict[str, np.ndarray] = {}
+            for r in requests:
+                if r.domain not in dom_rows:
+                    dom_rows[r.domain] = np.array(
+                        [float(r.domain in a.domains) for a in live])
+            X = feature_tensor(
+                [float(len(r.tokens)) for r in requests],
+                [float(r.turn) for r in requests], o,
+                router_inflight=float(telemetry.get("router_inflight", 0)),
+                router_rps=float(telemetry.get("router_rps", 0.0)),
+                agent_inflight=[float(inflight.get(a.agent_id, 0))
+                                for a in live],
+                agent_rps=[float(agent_rps.get(a.agent_id, 0.0))
+                           for a in live],
+                capacity=[float(a.capacity) for a in live],
+                domain_match=np.stack([dom_rows[r.domain] for r in requests]))
+            lat, cst, qual = self.pool.predict_matrix(
+                [a.agent_id for a in live], X,
+                backend=self.predictor_backend)
+            xs = None
+        else:
+            lat = np.zeros((n, m)); cst = np.zeros((n, m)); qual = np.zeros((n, m))
+            xs = []
+            for j, r in enumerate(requests):
+                row = []
+                for i, a in enumerate(live):
+                    util = inflight.get(a.agent_id, 0) / max(1, a.capacity)
+                    x = PredictorInput(
+                        prompt_len=float(len(r.tokens)), turn=float(r.turn),
+                        affinity=float(o[j, i]),
+                        router_inflight=float(telemetry.get("router_inflight", 0)),
+                        router_rps=float(telemetry.get("router_rps", 0.0)),
+                        agent_inflight=float(inflight.get(a.agent_id, 0)),
+                        agent_rps=float(agent_rps.get(a.agent_id, 0.0)),
+                        capacity=float(a.capacity), utilization=float(util),
+                        domain_match=float(r.domain in a.domains),
+                    )
+                    est = self.pool[a.agent_id].predict(x)
+                    lat[j, i], cst[j, i], qual[j, i] = est.latency, est.cost, est.quality
+                    row.append((x, est))
+                xs.append(row)
 
         values = client_value(qual, lat, self.valuation)
 
@@ -219,7 +250,12 @@ class IEMASRouter:
                     continue
                 i = a_idx[li]
                 agent = live[i]
-                x, est = xs[j][i]
+                if xs is None:  # batched: materialize matched pairs only
+                    x = PredictorInput(*(float(v) for v in X[j, i]))
+                    est = QoSEstimate(float(lat[j, i]), float(cst[j, i]),
+                                      float(qual[j, i]))
+                else:
+                    x, est = xs[j][i]
                 pay = result.payments[local_j]
                 decisions[j] = RouteDecision(requests[j], agent.agent_id, pay,
                                              est, result.weights[local_j, li], h)

@@ -7,6 +7,15 @@ HoeffdingTreeClassifier, exactly as in the paper. Cold start is handled by a
 structural prior (token pricing + a latency model linear in uncached tokens)
 until ``warm_n`` observations arrive — the paper's startup warm-up issues a
 few dialogues per agent to cross this threshold (PredictorPool.warmup).
+
+Batched path (router Phase 1b hot loop): ``feature_tensor`` assembles the
+full (n requests, m agents, N_FEATURES) Eq.-5 tensor with broadcasting,
+and ``PredictorPool.predict_matrix`` scores it in a handful of array ops —
+all m agents' trees stacked into one node pool (one vectorized descend per
+target), the structural prior and the ``w = min(1, n_obs/60)`` blend applied
+as arrays. Every operation mirrors ``AgentPredictor.predict`` double-for-
+double, so the batched path is a pure oracle-parity optimization
+(tests/test_predictor_batch.py).
 """
 from __future__ import annotations
 
@@ -14,10 +23,64 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.hoeffding import HoeffdingTreeClassifier, HoeffdingTreeRegressor
+from repro.core.hoeffding import (HoeffdingTreeClassifier,
+                                  HoeffdingTreeRegressor, descend,
+                                  descend_jax, stack_compiled)
 from repro.core.pricing import TokenPrices, predicted_cost
 
 N_FEATURES = 10
+
+
+def feature_tensor(prompt_lens, turns, affinity, *, router_inflight=0.0,
+                   router_rps=0.0, agent_inflight, agent_rps, capacity,
+                   domain_match) -> np.ndarray:
+    """(n, m, N_FEATURES) tensor; X[j, i] equals the ``PredictorInput(...)
+    .vector()`` the scalar router builds for pair (request j, agent i).
+
+    ``prompt_lens``/``turns``: (n,); ``affinity``/``domain_match``: (n, m);
+    ``agent_inflight``/``agent_rps``/``capacity``: (m,); router_* scalars.
+    Utilization is derived per agent exactly as the scalar path does:
+    inflight / max(1, capacity).
+    """
+    affinity = np.asarray(affinity, dtype=np.float64)
+    n, m = affinity.shape
+    inflight = np.asarray(agent_inflight, dtype=np.float64)
+    cap = np.asarray(capacity, dtype=np.float64)
+    X = np.empty((n, m, N_FEATURES), dtype=np.float64)
+    X[..., 0] = np.asarray(prompt_lens, dtype=np.float64)[:, None]
+    X[..., 1] = np.asarray(turns, dtype=np.float64)[:, None]
+    X[..., 2] = affinity
+    X[..., 3] = float(router_inflight)
+    X[..., 4] = float(router_rps)
+    X[..., 5] = inflight[None, :]
+    X[..., 6] = np.asarray(agent_rps, dtype=np.float64)[None, :]
+    X[..., 7] = cap[None, :]
+    X[..., 8] = (inflight / np.maximum(1.0, cap))[None, :]
+    X[..., 9] = np.asarray(domain_match, dtype=np.float64)
+    return X
+
+
+def _blend_with_prior(X, *, lpt, lb, miss, hit, out, ewma, n_obs, warm_n,
+                      prior_q, raw_lat, raw_cst, raw_q):
+    """Structural cold-start prior + ``w = min(1, n_obs/60)`` tree blend as
+    array ops — the single vectorized transcription of the scalar
+    ``AgentPredictor.predict`` math (kept bit-equivalent: same op order,
+    same ``trunc``/``maximum``/``clip`` semantics), shared by
+    ``predict_rows`` (scalar per-agent params) and ``predict_matrix``
+    ((m,) per-agent param arrays broadcast against (n, m) features)."""
+    pl, aff, util = X[..., 0], X[..., 2], X[..., 8]
+    uncached = pl * (1.0 - aff)
+    prior_lat = (lb + lpt * uncached) * (1.0 + util)
+    npmt = np.trunc(pl)  # == int(prompt_len) for non-negative lengths
+    nhit = aff * npmt
+    prior_cst = miss * (npmt - nhit) + hit * nhit + out * ewma
+    w = np.minimum(1.0, n_obs / 60.0)
+    lat = (1 - w) * prior_lat + w * np.maximum(0.0, raw_lat)
+    cst = (1 - w) * prior_cst + w * np.maximum(0.0, raw_cst)
+    cold = n_obs < warm_n
+    return (np.where(cold, prior_lat, lat),
+            np.where(cold, prior_cst, cst),
+            np.where(cold, prior_q, np.clip(raw_q, 0.0, 1.0)))
 
 
 @dataclass
@@ -85,6 +148,23 @@ class AgentPredictor:
             quality=float(np.clip(self.quality.predict_one(v), 0.0, 1.0)),
         )
 
+    def predict_rows(self, X, backend: str = "numpy"):
+        """Vectorized ``predict`` over the rows of ``X`` (B, N_FEATURES).
+
+        Returns (latency, cost, quality) arrays; every op mirrors the
+        scalar path double-for-double (NumPy backend), so
+        ``predict_rows(X)[k][b] == predict(PredictorInput(*X[b]))``.
+        """
+        X = np.asarray(X, dtype=np.float64)
+        return _blend_with_prior(
+            X, lpt=self.prior_lpt, lb=self.prior_lb, miss=self.prices.miss,
+            hit=self.prices.hit, out=self.prices.out, ewma=self.ewma_gen,
+            n_obs=self.n_obs, warm_n=self.warm_n,
+            prior_q=np.full(X.shape[0], self.prior_q),
+            raw_lat=self.lat.predict_batch(X, backend),
+            raw_cst=self.cost.predict_batch(X, backend),
+            raw_q=self.quality.predict_batch(X, backend))
+
     def update(self, x: PredictorInput, latency_obs: float, cost_obs: float,
                quality_obs: float) -> None:
         v = x.vector()
@@ -100,6 +180,9 @@ class PredictorPool:
     def __init__(self, prices_by_agent: dict[str, TokenPrices], **kw):
         self._preds = {aid: AgentPredictor(aid, pr, **kw)
                        for aid, pr in prices_by_agent.items()}
+        # per-target stacked-forest cache, invalidated by membership or any
+        # tree version change (any learn_one shifts leaf means)
+        self._stacks: dict[str, dict] = {}
 
     def __getitem__(self, agent_id: str) -> AgentPredictor:
         return self._preds[agent_id]
@@ -110,9 +193,82 @@ class PredictorPool:
     def add_agent(self, agent_id: str, prices: TokenPrices, **kw) -> None:
         """Elastic scale-out: a new agent joins mid-flight."""
         self._preds[agent_id] = AgentPredictor(agent_id, prices, **kw)
+        # a re-added id gets FRESH trees whose version counters restart, so
+        # a version-keyed cache entry could collide with the old trees' —
+        # membership changes always drop the stacks
+        self._stacks.clear()
 
     def remove_agent(self, agent_id: str) -> None:
         self._preds.pop(agent_id, None)
+        self._stacks.clear()
 
     def agents(self):
         return list(self._preds)
+
+    # ---------------- batched Phase-1 scoring ----------------
+    def _stacked_forest(self, name: str, agent_ids: list[str]):
+        """Stacked node pool for one target, refreshed incrementally: a
+        ``learn_one`` without a split only shifts leaf values (node count
+        unchanged), so the changed tree is recompiled and written back into
+        its slice of the pool; a split (or membership change) triggers a
+        full restack. Per-round cost is thus proportional to the number of
+        trees feedback actually touched, not the fleet size."""
+        trees = [getattr(self._preds[a], name) for a in agent_ids]
+        versions = [t._version for t in trees]
+        entry = self._stacks.get(name)
+        if entry is not None and entry["ids"] == tuple(agent_ids):
+            changed = [k for k in range(len(trees))
+                       if entry["versions"][k] != versions[k]]
+            fresh = {k: trees[k].compiled() for k in changed}
+            if all(len(c.feature) == entry["sizes"][k]
+                   for k, c in fresh.items()):
+                # unchanged node count == unchanged structure (nodes are only
+                # ever added, by splits): only leaf values moved, so refresh
+                # just the value slices of the touched trees
+                st, roots = entry["stacked"], entry["roots"]
+                for k, c in fresh.items():
+                    off = roots[k]
+                    st.value[off:off + entry["sizes"][k]] = c.value
+                entry["versions"] = versions
+                return st, roots
+        compiled = [t.compiled() for t in trees]
+        stacked, roots = stack_compiled(compiled)
+        self._stacks[name] = {"ids": tuple(agent_ids), "versions": versions,
+                              "sizes": [len(c.feature) for c in compiled],
+                              "stacked": stacked, "roots": roots}
+        return stacked, roots
+
+    def predict_matrix(self, agent_ids: list[str], X: np.ndarray,
+                       backend: str = "numpy"):
+        """Score the full (n, m, N_FEATURES) feature tensor in array ops.
+
+        Returns (latency, cost, quality) matrices, (n, m) each, equal to
+        looping ``self[agent_ids[i]].predict(PredictorInput(*X[j, i]))``
+        over every pair — the m agents' trees are stacked into one node
+        pool per target (one vectorized descend over the (n·m, F) matrix),
+        and the structural cold-start prior + the ``min(1, n_obs/60)``
+        blend are applied as broadcast array ops.
+        """
+        X = np.asarray(X, dtype=np.float64)
+        n, m = X.shape[:2]
+        preds = [self._preds[a] for a in agent_ids]
+        flat = X.reshape(n * m, N_FEATURES)
+        col = np.tile(np.arange(m), n)  # agent index of each flat row
+        walker = descend_jax if backend == "jax" else descend
+        raw = {}
+        for name in ("lat", "cost", "quality"):
+            stacked, roots = self._stacked_forest(name, agent_ids)
+            raw[name] = walker(stacked, flat, roots[col]).reshape(n, m)
+
+        return _blend_with_prior(
+            X,
+            lpt=np.array([p.prior_lpt for p in preds]),
+            lb=np.array([p.prior_lb for p in preds]),
+            miss=np.array([p.prices.miss for p in preds]),
+            hit=np.array([p.prices.hit for p in preds]),
+            out=np.array([p.prices.out for p in preds]),
+            ewma=np.array([p.ewma_gen for p in preds]),
+            n_obs=np.array([p.n_obs for p in preds], dtype=np.float64),
+            warm_n=np.array([p.warm_n for p in preds], dtype=np.float64),
+            prior_q=np.array([p.prior_q for p in preds]),
+            raw_lat=raw["lat"], raw_cst=raw["cost"], raw_q=raw["quality"])

@@ -13,10 +13,12 @@ from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
 
 
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
-                 solver: str = "mcmf", seed: int = 0):
+                 solver: str = "mcmf", batched: bool = True,
+                 predictor_backend: str = "numpy", seed: int = 0):
     if name == "iemas":
         return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
-                           solver=solver)
+                           solver=solver, batched=batched,
+                           predictor_backend=predictor_backend)
     return BASELINES[name](infos, seed=seed)
 
 
@@ -32,6 +34,11 @@ def main():
                     choices=["mcmf", "dense", "dense-jax"])
     ap.add_argument("--payment-mode", default="warmstart",
                     choices=["warmstart", "naive"])
+    ap.add_argument("--scalar-phase1", action="store_true",
+                    help="per-pair scalar QoS loop (oracle) instead of the "
+                         "batched Phase-1 tensor path")
+    ap.add_argument("--predictor-backend", default="numpy",
+                    choices=["numpy", "jax"])
     ap.add_argument("--fail-prob", type=float, default=0.0)
     ap.add_argument("--straggle-prob", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -45,6 +52,8 @@ def main():
                          warmup=not args.no_warmup)
     router = build_router(args.router, cluster.agent_infos(), n_hubs=args.hubs,
                           payment_mode=args.payment_mode, solver=args.solver,
+                          batched=not args.scalar_phase1,
+                          predictor_backend=args.predictor_backend,
                           seed=args.seed)
     dialogues = generate(WorkloadSpec(args.workload, n_dialogues=args.dialogues,
                                       seed=args.seed + 1))

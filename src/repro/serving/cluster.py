@@ -61,6 +61,10 @@ class RequestRecord:
     payment: float
     welfare_weight: float
     failed: bool = False
+    # the engine's generated ids; run_workload threads them into the next
+    # turn's prompt (dialogue causality, Appendix C.1)
+    output_tokens: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, np.int32))
 
 
 @dataclass
@@ -170,8 +174,8 @@ class SimCluster:
         rec = RequestRecord(req, rt.info.agent_id, self.now, result.ttft,
                             latency, cost, result.n_prompt, result.n_hit,
                             result.n_gen, quality, decision.payment,
-                            decision.welfare_weight)
-        rec.output_tokens = result.output_tokens  # type: ignore[attr-defined]
+                            decision.welfare_weight,
+                            output_tokens=result.output_tokens)
         obs = CompletionObs(latency, result.n_prompt, result.n_hit,
                             result.n_gen, quality)
         heapq.heappush(self._completions, (self.now + total, self._seq, rec, obs))
@@ -282,9 +286,7 @@ def run_workload(cluster: SimCluster, router, dialogues: list[DialogueScript],
             st["busy"] = False
             new_user = pending_next.pop(did)
             st["history"] = np.concatenate(
-                [st["history"], new_user,
-                 getattr(rec, "output_tokens", np.zeros(0, np.int32))]
-            ).astype(np.int32)
+                [st["history"], new_user, rec.output_tokens]).astype(np.int32)
             st["turn"] += 1
             script = st["script"]
             if st["turn"] < len(script.turns):

@@ -1,0 +1,110 @@
+"""Batched Hoeffding inference is a pure oracle-parity optimization:
+``predict_batch`` (compiled flat trees, one vectorized pass) must match
+per-row ``predict_one`` to 1e-12 for any training stream — including
+mid-stream recompiles after ``learn_one`` splits — and stacked multi-tree
+node pools must match their per-tree oracles."""
+import numpy as np
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.hoeffding import (HoeffdingTreeClassifier,
+                                  HoeffdingTreeRegressor, descend,
+                                  stack_compiled)
+
+# aggressive split parameters so generated trees actually grow (the default
+# Hoeffding bound needs thousands of samples to split on noisy targets)
+SPLITTY = dict(grace_period=15, delta=0.2, tie_threshold=0.5, max_depth=5)
+
+
+def _parity(tree, X):
+    batch = tree.predict_batch(X)
+    scalar = np.array([tree.predict_one(row) for row in X])
+    err = np.max(np.abs(batch - scalar)) if len(X) else 0.0
+    assert err <= 1e-12, err
+
+
+@settings(max_examples=75, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 8), st.integers(30, 250))
+def test_regressor_batch_matches_scalar(seed, n_feat, n_samples):
+    rng = np.random.default_rng(seed)
+    tree = HoeffdingTreeRegressor(n_feat, **SPLITTY)
+    probe = rng.uniform(-2, 2, (40, n_feat))
+    _parity(tree, probe)  # untrained
+    jump = rng.uniform(5.0, 20.0)
+    for k in range(n_samples):
+        x = rng.uniform(-2, 2, n_feat)
+        y = jump * (x[0] > 0.0) + x[-1] + rng.normal(0, 0.1)
+        tree.learn_one(x, y)
+        if k % 17 == 0:  # mid-stream: parity straddles recompiles
+            _parity(tree, probe)
+    _parity(tree, probe)
+    _parity(tree, rng.uniform(-3, 3, (25, n_feat)))
+
+
+@settings(max_examples=75, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 8), st.integers(30, 250))
+def test_classifier_batch_matches_scalar(seed, n_feat, n_samples):
+    rng = np.random.default_rng(seed)
+    tree = HoeffdingTreeClassifier(n_feat, **SPLITTY)
+    probe = rng.uniform(-2, 2, (40, n_feat))
+    _parity(tree, probe)
+    for k in range(n_samples):
+        x = rng.uniform(-2, 2, n_feat)
+        tree.learn_one(x, float(x[1] > 0.3))
+        if k % 17 == 0:
+            _parity(tree, probe)
+    _parity(tree, probe)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 6))
+def test_stacked_forest_matches_per_tree(seed, n_trees):
+    """One concatenated node pool with per-row roots == per-tree oracles."""
+    rng = np.random.default_rng(seed)
+    n_feat = 4
+    trees = []
+    for t in range(n_trees):
+        tree = HoeffdingTreeRegressor(n_feat, **SPLITTY)
+        for _ in range(int(rng.integers(0, 120))):
+            x = rng.uniform(-1, 1, n_feat)
+            tree.learn_one(x, 8.0 * (x[t % n_feat] > 0) + rng.normal(0, 0.1))
+        trees.append(tree)
+    stacked, roots = stack_compiled([t.compiled() for t in trees])
+    X = rng.uniform(-1.5, 1.5, (60, n_feat))
+    which = rng.integers(0, n_trees, 60)
+    out = descend(stacked, X, roots[which])
+    ref = np.array([trees[which[i]].predict_one(X[i]) for i in range(60)])
+    assert np.max(np.abs(out - ref)) <= 1e-12
+
+
+def test_recompile_on_split_and_cache_reuse():
+    """The compiled form is cached between predictions and invalidated by
+    ANY learn_one (leaf means shift without splits), and a split visibly
+    changes the flat structure while parity holds throughout."""
+    rng = np.random.default_rng(0)
+    tree = HoeffdingTreeRegressor(3, **SPLITTY)
+    c0 = tree.compiled()
+    assert tree.compiled() is c0  # cached: no learning in between
+    n_nodes = [1]
+    probe = rng.uniform(-1, 1, (30, 3))
+    for _ in range(200):
+        x = rng.uniform(-1, 1, 3)
+        tree.learn_one(x, 10.0 * (x[0] > 0) + rng.normal(0, 0.05))
+        _parity(tree, probe)
+        n_nodes.append(len(tree.compiled().feature))
+    assert tree.compiled() is not c0
+    assert max(n_nodes) >= 3  # at least one split happened mid-stream
+    assert tree.compiled().depth >= 1
+
+
+def test_jax_backend_close_to_numpy_oracle():
+    """The jit-staged descend (float32 on default configs) tracks the
+    NumPy oracle to float32 tolerance."""
+    rng = np.random.default_rng(1)
+    tree = HoeffdingTreeRegressor(4, **SPLITTY)
+    for _ in range(300):
+        x = rng.uniform(-1, 1, 4)
+        tree.learn_one(x, 6.0 * (x[0] > 0) + x[2] + rng.normal(0, 0.1))
+    X = rng.uniform(-1, 1, (50, 4))
+    ref = tree.predict_batch(X)
+    jx = tree.predict_batch(X, backend="jax")
+    assert np.max(np.abs(jx - ref)) < 1e-4

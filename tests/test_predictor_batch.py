@@ -1,0 +1,244 @@
+"""Phase-1 batching parity: ``PredictorPool.predict_matrix`` vs the scalar
+``AgentPredictor.predict`` loop across cold-start / blended / warm regimes,
+and ``route_batch(batched=True)`` vs the ``batched=False`` oracle — both on
+synthetic markets and on seeded SimCluster workloads with failure and
+straggler injection."""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (AgentInfo, CompletionObs, IEMASRouter, Request,
+                        TokenPrices)
+from repro.core.predictor import (N_FEATURES, PredictorInput, PredictorPool,
+                                  feature_tensor)
+
+# n_obs regimes: cold (< warm_n), at the warm boundary, mid-blend
+# (w = n_obs/60 < 1), and saturated (w = 1)
+WARM_N = 6
+REGIMES = (0, WARM_N - 1, WARM_N, 30, 200)
+
+
+def _trained_pool(rng, m):
+    prices = {f"a{i}": TokenPrices(float(rng.uniform(0.005, 0.03)),
+                                   float(rng.uniform(0.0005, 0.003)),
+                                   float(rng.uniform(0.01, 0.09)))
+              for i in range(m)}
+    pool = PredictorPool(prices, warm_n=WARM_N)
+    for i, aid in enumerate(pool.agents()):
+        pred = pool[aid]
+        for _ in range(REGIMES[(i + int(rng.integers(0, len(REGIMES)))) % len(REGIMES)]):
+            x = PredictorInput(*rng.uniform(0, 80, N_FEATURES))
+            pred.update(x, float(rng.uniform(0.01, 2.0)),
+                        float(rng.uniform(0.05, 5.0)),
+                        float(rng.random() > 0.4))
+    return pool
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 7), st.integers(1, 10))
+def test_predict_matrix_matches_scalar_loop(seed, m, n):
+    rng = np.random.default_rng(seed)
+    pool = _trained_pool(rng, m)
+    ids = pool.agents()
+    X = feature_tensor(
+        rng.uniform(1, 300, n), rng.integers(0, 8, n).astype(float),
+        rng.uniform(0, 1, (n, m)),
+        router_inflight=float(rng.integers(0, 20)),
+        router_rps=float(rng.uniform(0, 5)),
+        agent_inflight=rng.integers(0, 12, m).astype(float),
+        agent_rps=rng.uniform(0, 3, m),
+        capacity=rng.integers(1, 16, m).astype(float),
+        domain_match=rng.integers(0, 2, (n, m)).astype(float))
+    lat, cst, qual = pool.predict_matrix(ids, X)
+    for j in range(n):
+        for i, aid in enumerate(ids):
+            est = pool[aid].predict(PredictorInput(*X[j, i]))
+            assert abs(lat[j, i] - est.latency) <= 1e-12
+            assert abs(cst[j, i] - est.cost) <= 1e-12
+            assert abs(qual[j, i] - est.quality) <= 1e-12
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6))
+def test_predict_rows_matches_scalar_including_updates(seed):
+    """Per-agent vectorized rows stay exact across mid-stream updates
+    (tree recompiles + ewma/n_obs drift)."""
+    rng = np.random.default_rng(seed)
+    pool = _trained_pool(rng, 1)
+    pred = pool[pool.agents()[0]]
+    for _ in range(3):
+        X = rng.uniform(0, 120, (12, N_FEATURES))
+        lat, cst, qual = pred.predict_rows(X)
+        for b, row in enumerate(X):
+            est = pred.predict(PredictorInput(*row))
+            assert abs(lat[b] - est.latency) <= 1e-12
+            assert abs(cst[b] - est.cost) <= 1e-12
+            assert abs(qual[b] - est.quality) <= 1e-12
+        pred.update(PredictorInput(*rng.uniform(0, 80, N_FEATURES)),
+                    float(rng.uniform(0, 1)), float(rng.uniform(0, 2)), 1.0)
+        pred.ewma_gen = 0.9 * pred.ewma_gen + 0.1 * float(rng.integers(1, 40))
+
+
+def test_predict_matrix_after_elastic_remove_readd():
+    """Regression: a removed-then-re-added agent gets fresh trees whose
+    version counters restart at the old values — the stacked-forest cache
+    must not serve the removed agent's stale leaf values."""
+    rng = np.random.default_rng(0)
+    pool = PredictorPool({"a0": TokenPrices(0.01, 0.001, 0.03)}, warm_n=2)
+
+    def train(val, k):
+        for _ in range(k):
+            pool["a0"].update(PredictorInput(*rng.uniform(0, 50, N_FEATURES)),
+                              val, val, 1.0)
+
+    X = feature_tensor(rng.uniform(1, 100, 4), np.zeros(4),
+                       rng.uniform(0, 1, (4, 1)), agent_inflight=[0.0],
+                       agent_rps=[0.0], capacity=[4.0],
+                       domain_match=np.ones((4, 1)))
+    train(100.0, 30)
+    pool.predict_matrix(["a0"], X)  # populate the stack cache
+    pool.remove_agent("a0")
+    pool.add_agent("a0", TokenPrices(0.01, 0.001, 0.03), warm_n=2)
+    train(0.001, 30)  # same n_obs / tree versions as the removed agent
+    lat, cst, qual = pool.predict_matrix(["a0"], X)
+    for j in range(4):
+        est = pool["a0"].predict(PredictorInput(*X[j, 0]))
+        assert abs(lat[j, 0] - est.latency) <= 1e-12
+        assert abs(cst[j, 0] - est.cost) <= 1e-12
+        assert abs(qual[j, 0] - est.quality) <= 1e-12
+
+
+# ---------------- end-to-end route_batch parity ----------------
+
+def _decisions_equal(a, b):
+    assert a.agent_id == b.agent_id
+    assert a.hub_id == b.hub_id
+    assert a.payment == b.payment
+    assert a.welfare_weight == b.welfare_weight
+    if a.estimate is None:
+        assert b.estimate is None
+    else:
+        assert a.estimate.latency == b.estimate.latency
+        assert a.estimate.cost == b.estimate.cost
+        assert a.estimate.quality == b.estimate.quality
+
+
+class MirrorRouter:
+    """Drives the batched router while shadowing every call on the scalar
+    oracle and asserting bit-identical decisions; both receive identical
+    completion feedback so their ledgers/predictors stay in lockstep."""
+
+    def __init__(self, primary, oracle):
+        self.primary, self.oracle = primary, oracle
+        self.compared = 0
+
+    def route_batch(self, requests, telemetry, free_slots=None):
+        dp = self.primary.route_batch(list(requests), telemetry,
+                                      free_slots=free_slots)
+        do = self.oracle.route_batch(list(requests), telemetry,
+                                     free_slots=free_slots)
+        for a, b in zip(dp, do):
+            _decisions_equal(a, b)
+        self.compared += len(dp)
+        return dp
+
+    def on_complete(self, request_id, obs):
+        self.primary.on_complete(request_id, obs)
+        self.oracle.on_complete(request_id, obs)
+
+    def reinstate(self, agent_id):
+        self.primary.reinstate(agent_id)
+        self.oracle.reinstate(agent_id)
+
+
+def test_route_batch_parity_synthetic_rounds():
+    """Multi-round synthetic market: cache_slots LRU, telemetry load, hubs."""
+    def agents():
+        return [AgentInfo(f"a{i}", TokenPrices(0.01 * (1 + i % 3), 0.001, 0.03),
+                          2, ("dialogue",) if i % 2 == 0 else ("reasoning",),
+                          scale=4.0 + i, cache_slots=2 if i == 1 else 0)
+                for i in range(5)]
+
+    mirror = MirrorRouter(
+        IEMASRouter(agents(), n_hubs=2, batched=True,
+                    predictor_kw={"warm_n": 2}),
+        IEMASRouter(agents(), n_hubs=2, batched=False,
+                    predictor_kw={"warm_n": 2}))
+    rng = np.random.default_rng(5)
+    telem = {"router_inflight": 3, "router_rps": 1.5,
+             "agent_inflight": {"a0": 1, "a2": 2}, "agent_rps": {"a1": 0.4}}
+    for t in range(10):
+        r = np.random.default_rng(500 + t)
+        batch = [Request(f"r{t}-{j}", f"d{j % 4}",
+                         r.integers(1, 50, 20 + j).astype(np.int32), turn=t,
+                         domain="dialogue" if j % 2 else "reasoning")
+                 for j in range(6)]
+        for dec in mirror.route_batch(batch, telem):
+            if dec.agent_id:
+                obs = CompletionObs(float(rng.uniform(0.01, 0.2)),
+                                    len(dec.request.tokens),
+                                    int(rng.integers(0, len(dec.request.tokens))),
+                                    int(rng.integers(1, 9)),
+                                    float(rng.random()))
+                mirror.on_complete(dec.request.request_id, obs)
+    assert mirror.compared >= 60
+    assert mirror.primary.accounts == mirror.oracle.accounts
+
+
+def test_route_batch_parity_simcluster_workload():
+    """Seeded SimCluster workload (real engines, failures, stragglers):
+    batched and scalar Phase 1 must route every request identically."""
+    from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
+
+    cluster = SimCluster(n_agents=4, seed=0, max_new_tokens=2,
+                         fail_prob=0.1, straggle_prob=0.1)
+    mirror = MirrorRouter(
+        IEMASRouter(cluster.agent_infos(), batched=True,
+                    predictor_kw={"warm_n": 3}),
+        IEMASRouter(cluster.agent_infos(), batched=False,
+                    predictor_kw={"warm_n": 3}))
+    dialogues = generate(WorkloadSpec("coqa_like", n_dialogues=4, seed=11))
+    metrics = run_workload(cluster, mirror, dialogues, max_rounds=1200)
+    assert metrics["n"] == sum(len(d.turns) for d in dialogues)
+    assert mirror.compared >= 30
+    assert mirror.primary.accounts == mirror.oracle.accounts
+    assert mirror.primary.quarantined == mirror.oracle.quarantined
+
+
+# ---------------- RequestRecord.output_tokens regression ----------------
+
+def test_request_record_output_tokens_is_a_field():
+    from repro.serving.cluster import RequestRecord
+
+    names = [f.name for f in dataclasses.fields(RequestRecord)]
+    assert "output_tokens" in names  # no more setattr-with-type-ignore
+    rec = RequestRecord(None, "a0", 0.0, 0.0, 0.0, 0.0, 1, 0, 0, 0.0, 0.0,
+                        0.0, failed=True)
+    assert rec.output_tokens.dtype == np.int32 and len(rec.output_tokens) == 0
+
+
+def test_run_workload_threads_dialogue_history():
+    """Turn t+1's prompt must be turn t's prompt + the engine's ACTUAL
+    generated tokens + the next user turn (Appendix C.1 causality)."""
+    from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
+
+    cluster = SimCluster(n_agents=2, seed=3, max_new_tokens=2)
+    router = IEMASRouter(cluster.agent_infos())
+    dialogues = generate(WorkloadSpec("coqa_like", n_dialogues=2, seed=7))
+    run_workload(cluster, router, dialogues, max_rounds=600)
+    by_dlg = {}
+    for rec in cluster.records:
+        assert len(rec.output_tokens) == rec.n_gen
+        by_dlg.setdefault(rec.request.dialogue_id, []).append(rec)
+    checked = 0
+    for recs in by_dlg.values():
+        recs.sort(key=lambda r: r.request.turn)
+        for prev, nxt in zip(recs, recs[1:]):
+            p, q = prev.request.tokens, nxt.request.tokens
+            assert np.array_equal(q[: len(p)], p)  # prompt extends history
+            gen = q[len(p): len(p) + len(prev.output_tokens)]
+            assert np.array_equal(gen, prev.output_tokens)
+            checked += 1
+    assert checked >= 4
