@@ -17,12 +17,11 @@ def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
 
 
-def synthetic_market(n, m, seed=0, domain_structure=True):
+def synthetic_market(n, m, seed=0, domain_structure=True, n_dom=4):
     """Valuations/costs with domain block structure (agents specialize)."""
     import numpy as np
 
     rng = np.random.default_rng(seed)
-    n_dom = 4
     req_dom = rng.integers(0, n_dom, n)
     ag_dom = rng.integers(0, n_dom, m)
     match = (req_dom[:, None] == ag_dom[None, :]).astype(float)

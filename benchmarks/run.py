@@ -11,6 +11,10 @@ reduced sizes used in CI-style runs).
   fig7     Fig. 7   — Full-Mix / Ideal / Task-Mix / Agent-Mix economics
   mcmf     §4.3     — Phase-2 solver comparison: mcmf (naive/warm-start VCG)
                       vs dense ε-scaling auction (+ jit variant)
+  hubshard §4.4     — hub-sharded Phase 2 at n >= 1k requests: global dense
+                      vs per-hub blocks (numpy + vmapped jax buckets),
+                      welfare-loss certificate vs the MCMF oracle, and
+                      warm- vs cold-started steady-state rounds
   phase1   §4.1     — Phase-1 QoS throughput: scalar per-pair loop vs the
                       batched compiled-forest tensor path (+ jax descend)
   kernels  —        — kernel validation-path timings + batched-LCP speedup
@@ -19,6 +23,8 @@ from __future__ import annotations
 
 import sys
 import time
+
+from benchmarks.common import QUICK
 
 
 def main() -> None:
@@ -41,6 +47,9 @@ def main() -> None:
     if want("mcmf"):
         from benchmarks import mcmf_scaling
         mcmf_scaling.run()
+    if want("hubshard"):
+        from benchmarks import hub_sharding
+        hub_sharding.run(smoke=QUICK)
     if want("phase1"):
         from benchmarks import phase1_scaling
         phase1_scaling.run()

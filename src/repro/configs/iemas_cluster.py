@@ -19,7 +19,7 @@ class AgentProfile:
     agent_id: str
     model_class: str      # which reduced model config the engine runs
     scale: float          # S_i, relative model scale (paper: parameter size)
-    domains: tuple        # K_i, specialization tags
+    domains: tuple[str, ...]  # K_i, specialization tags
     capacity: int         # B_i, max concurrent tasks (paper buffer: 12)
     price_miss: float     # pi_miss per uncached prompt token
     price_hit: float      # pi_hit per cached prompt token
@@ -36,6 +36,13 @@ class RouterConfig:
     pure-Python oracle, ``"dense"`` the vectorized ε-scaling auction (hot
     path at scale), ``"dense-jax"`` its jax.jit-staged variant.
 
+    ``n_hubs`` shards Phase 2 across proxy hubs (§4.4): agents are clustered
+    by ``hub_scheme`` and each batch's welfare matrix is auctioned per hub
+    block (the ``dense-jax`` solver batches uneven blocks through one vmapped
+    program per shape bucket).  ``warm_start=True`` reuses each hub's final
+    slot prices as the next round's ε-scaling seed (dense solvers only; the
+    router cold-starts any hub whose live agent set changed).
+
     ``batched`` picks the Phase-1 QoS path: True (default) scores the full
     (n, m, F) feature tensor through the compiled Hoeffding forests in one
     vectorized pass; False keeps the per-pair scalar loop (the semantic
@@ -48,6 +55,7 @@ class RouterConfig:
     payment_mode: str = "warmstart"
     n_hubs: int = 1
     hub_scheme: str = "domain"
+    warm_start: bool = False
     use_kernel_affinity: bool = False
     batched: bool = True
     predictor_backend: str = "numpy"

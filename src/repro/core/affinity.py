@@ -20,6 +20,7 @@ import numpy as np
 
 
 def lcp_length(a: np.ndarray, b: np.ndarray) -> int:
+    """Length of the longest common prefix of two token arrays."""
     n = min(len(a), len(b))
     if n == 0:
         return 0
@@ -28,12 +29,15 @@ def lcp_length(a: np.ndarray, b: np.ndarray) -> int:
 
 
 class PrefixLedger:
+    """Per-(agent, dialogue) record of the last prompt each agent served."""
+
     def __init__(self):
         self._store: dict[tuple, np.ndarray] = {}
         self._touch: dict[tuple, int] = {}
         self._clock = 0
 
     def update(self, agent_id: str, dialogue_id: str, prompt_tokens) -> None:
+        """Record the prompt agent ``agent_id`` just executed (Phase 4)."""
         self._clock += 1
         self._store[(agent_id, dialogue_id)] = np.asarray(prompt_tokens,
                                                           dtype=np.int32)
@@ -64,6 +68,7 @@ class PrefixLedger:
         return o
 
     def get(self, agent_id: str, dialogue_id: str):
+        """The last recorded prompt for this (agent, dialogue), or None."""
         return self._store.get((agent_id, dialogue_id))
 
     def evict(self, agent_id: str, dialogue_id: str | None = None) -> None:
@@ -75,10 +80,12 @@ class PrefixLedger:
                 self._store.pop(key)
 
     def sessions(self, agent_id: str) -> list[str]:
+        """Dialogue ids with a live ledger entry for this agent."""
         return [d for (a, d) in self._store if a == agent_id]
 
     def affinity(self, agent_id: str, dialogue_id: str, prompt_tokens,
                  *, extension_only: bool = False) -> float:
+        """o_ij of one (agent, request) pair (Eq. 4; arch-aware)."""
         prev = self.get(agent_id, dialogue_id)
         p = np.asarray(prompt_tokens, dtype=np.int32)
         if prev is None or len(p) == 0:

@@ -31,13 +31,16 @@ import numpy as np
 
 from repro.core.auction_dense import (dense_clarke_payments,
                                       solve_dense_auction,
-                                      solve_dense_auction_jax)
+                                      solve_dense_auction_jax,
+                                      solve_dense_auction_jax_batch)
 from repro.core.mcmf import (FlowNetwork, residual_shortest_path,
                              solve_min_cost_flow)
 
 
 @dataclass
 class AuctionResult:
+    """One Phase-2 solve: allocation, welfare, payments + solver stats."""
+
     assignment: list            # request j -> agent index or -1
     welfare: float              # W(C)
     payments: list              # VCG payment per request (0 if unmatched)
@@ -84,20 +87,25 @@ def _welfare_without(w: np.ndarray, caps, j: int) -> float:
 
 def run_auction(values: np.ndarray, costs: np.ndarray, caps,
                 payment_mode: str = "warmstart",
-                solver: str = "mcmf") -> AuctionResult:
+                solver: str = "mcmf",
+                start_prices: np.ndarray | None = None) -> AuctionResult:
     """values/costs: [N requests, M agents] predicted v_ij and c_ij.
 
     Welfare weights w_ij = v_ij - c_ij; non-positive pairs pruned (Alg. 1).
     ``solver`` picks the Phase-2 allocator: ``"mcmf"`` (exact oracle) or
     ``"dense"`` (vectorized ε-scaling auction; ``"dense-jax"`` stages the
     bidding loop through jax.jit). The dense solvers compute payments in one
-    batched pass regardless of ``payment_mode``.
+    batched pass regardless of ``payment_mode``, and accept a warm-start
+    slot-price seed via ``start_prices`` (ignored by the mcmf oracle, which
+    has no persistent duals); the final duals come back in
+    ``solver_stats["slot_prices"]`` for the caller's price book.
     """
     w = np.asarray(values, dtype=np.float64) - np.asarray(costs, dtype=np.float64)
     w = np.where(w > 0, w, 0.0)
     n, m = w.shape
     if solver in ("dense", "dense-jax"):
-        return _run_dense(w, np.asarray(costs, dtype=np.float64), caps, solver)
+        return _run_dense(w, np.asarray(costs, dtype=np.float64), caps, solver,
+                          start_prices)
     if solver != "mcmf":
         raise ValueError(f"unknown solver {solver!r}")
     assignment, welfare, gf = solve_allocation(w, caps)
@@ -144,19 +152,81 @@ def run_auction(values: np.ndarray, costs: np.ndarray, caps,
     )
 
 
-def _run_dense(w: np.ndarray, costs: np.ndarray, caps,
-               solver: str) -> AuctionResult:
+def _dense_stats(solver: str, res) -> dict:
+    return {"solver": solver, "payment_mode": "dual-batched",
+            "phases": res.phases, "rounds": res.rounds,
+            "eps": res.eps, "gap_bound": res.gap_bound,
+            "slot_prices": res.slot_prices, "slot_agent": res.slot_agent,
+            "warm_started": res.warm_started, "warm_fallback": res.fallback}
+
+
+def _run_dense(w: np.ndarray, costs: np.ndarray, caps, solver: str,
+               start_prices: np.ndarray | None = None) -> AuctionResult:
     solve = solve_dense_auction_jax if solver == "dense-jax" \
         else solve_dense_auction
-    res = solve(w, caps)
+    res = solve(w, caps, start_prices=start_prices)
     payments = dense_clarke_payments(w, costs, caps, res.assignment)
     return AuctionResult(
         assignment=list(res.assignment), welfare=res.welfare,
         payments=payments, weights=w, costs=costs,
-        solver_stats={"solver": solver, "payment_mode": "dual-batched",
-                      "phases": res.phases, "rounds": res.rounds,
-                      "eps": res.eps, "gap_bound": res.gap_bound},
+        solver_stats=_dense_stats(solver, res),
     )
+
+
+def run_sharded_auction(values: np.ndarray, costs: np.ndarray, caps,
+                        blocks: dict[int, tuple[list[int], list[int]]],
+                        payment_mode: str = "warmstart",
+                        solver: str = "mcmf",
+                        start_prices: dict[int, np.ndarray] | None = None,
+                        ) -> dict[int, AuctionResult]:
+    """Phase 2 sharded across proxy hubs: one independent auction per block.
+
+    ``blocks[h] = (request_indices, agent_indices)`` carves the global
+    (values, costs, caps) market into hub h's sub-market; blocks must be
+    agent-disjoint (the hub partition guarantees it), so the per-hub results
+    splice into a global matching without capacity conflicts.  Every result
+    is *identical* to calling :func:`run_auction` on that block alone — the
+    only difference is scheduling: for ``dense-jax`` all blocks are padded
+    into shape buckets and solved by one vmapped program per bucket
+    (`solve_dense_auction_jax_batch`) instead of one dispatch per hub.
+
+    ``start_prices[h]`` warm-starts hub h's dense solve (see
+    `repro.core.hub.SlotPriceBook` for the cache-keying contract).
+
+    Returns ``{hub_id: AuctionResult}`` — assignments/payments indexed
+    *within* the block; the caller maps them back through ``blocks[h]``.
+    """
+    values = np.asarray(values, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    sp = start_prices or {}
+    out: dict[int, AuctionResult] = {}
+    if solver == "dense-jax" and len(blocks) > 1:
+        hub_ids = sorted(blocks)
+        ws, costs_b, caps_b, seeds = [], [], [], []
+        for h in hub_ids:
+            r_idx, a_idx = blocks[h]
+            v = values[np.ix_(r_idx, a_idx)]
+            c = costs[np.ix_(r_idx, a_idx)]
+            ws.append(np.where(v - c > 0, v - c, 0.0))
+            costs_b.append(c)
+            caps_b.append([caps[i] for i in a_idx])
+            seeds.append(sp.get(h))
+        dres = solve_dense_auction_jax_batch(ws, caps_b,
+                                             start_prices_list=seeds)
+        for h, w, c, cb, res in zip(hub_ids, ws, costs_b, caps_b, dres):
+            payments = dense_clarke_payments(w, c, cb, res.assignment)
+            out[h] = AuctionResult(
+                assignment=list(res.assignment), welfare=res.welfare,
+                payments=payments, weights=w, costs=c,
+                solver_stats=_dense_stats(solver, res))
+        return out
+    for h, (r_idx, a_idx) in blocks.items():
+        out[h] = run_auction(values[np.ix_(r_idx, a_idx)],
+                             costs[np.ix_(r_idx, a_idx)],
+                             [caps[i] for i in a_idx],
+                             payment_mode=payment_mode, solver=solver,
+                             start_prices=sp.get(h))
+    return out
 
 
 def _cancel_unit(g: FlowNetwork, s: int, j: int, agent_node: int, t: int):

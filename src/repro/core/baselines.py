@@ -70,12 +70,15 @@ class RandomRouter(_BaseRouter):
     name = "random"
 
     def route_batch(self, requests, telemetry, free_slots=None):
+        """Assign each request to a uniformly random non-full agent."""
         return self._decide(
             requests, lambda r, cands: cands[self.rng.integers(len(cands))],
             free_slots)
 
 
 class RoundRobinRouter(_BaseRouter):
+    """Cycle through agents in order, skipping full ones."""
+
     name = "roundrobin"
 
     def __init__(self, agents, seed=0):
@@ -83,6 +86,7 @@ class RoundRobinRouter(_BaseRouter):
         self._next = 0
 
     def route_batch(self, requests, telemetry, free_slots=None):
+        """Assign requests round-robin over the non-full agents."""
         def pick(r, cands):
             a = cands[self._next % len(cands)]
             self._next += 1
@@ -96,6 +100,7 @@ class LeastLoadedRouter(_BaseRouter):
     name = "leastloaded"
 
     def route_batch(self, requests, telemetry, free_slots=None):
+        """Assign each request to the least-utilized agent."""
         inflight = telemetry.get("agent_inflight", {})
 
         def pick(r, cands):
@@ -115,6 +120,7 @@ class GreedyAffinityRouter(_BaseRouter):
         self.ledger = PrefixLedger()
 
     def route_batch(self, requests, telemetry, free_slots=None):
+        """Assign each request to its best (affinity, domain, load) score."""
         inflight = telemetry.get("agent_inflight", {})
 
         def pick(r, cands):
@@ -144,6 +150,7 @@ class BanditRouter(_BaseRouter):
         self.total = 0
 
     def route_batch(self, requests, telemetry, free_slots=None):
+        """Assign each request to the UCB1-optimal (domain, agent) arm."""
         def pick(r, cands):
             best, best_u = None, -math.inf
             for a in cands:
@@ -177,6 +184,7 @@ class EwmaScoreRouter(_BaseRouter):
         self.score = defaultdict(float)
 
     def route_batch(self, requests, telemetry, free_slots=None):
+        """Sample each request's agent from the softmaxed EWMA scores."""
         def pick(r, cands):
             s = np.array([self.score[(r.domain, a.agent_id)] for a in cands])
             p = np.exp((s - s.max()) / self.temp)

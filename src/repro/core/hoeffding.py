@@ -243,6 +243,7 @@ def _jax_descend():
 
 
 def descend_jax(tree: CompiledTree, X, roots=None) -> np.ndarray:
+    """`descend` via the jit-staged fori_loop walker (float32 on device)."""
     X = np.asarray(X)
     if roots is None:
         roots = np.zeros(X.shape[0], dtype=np.int32)
@@ -383,15 +384,19 @@ class _HoeffdingTreeBase:
 
 
 class HoeffdingTreeRegressor(_HoeffdingTreeBase):
+    """Incremental regression tree; leaves predict their running mean."""
+
     def __init__(self, n_features: int, **kw):
         super().__init__(n_features, classification=False, **kw)
         self._global_s = 0.0
 
     def learn_one(self, x, y):
+        """Absorb one (features, target) observation; may split a leaf."""
         self._global_s += float(y)
         return super().learn_one(x, y)
 
     def predict_one(self, x) -> float:
+        """Mean of x's leaf (global mean while the leaf is still empty)."""
         if self.n_seen == 0:
             return 0.0
         node = self._sort(np.asarray(x, dtype=np.float64))
@@ -415,10 +420,12 @@ class HoeffdingTreeClassifier(_HoeffdingTreeBase):
         self._global_cls = np.zeros(2)
 
     def learn_one(self, x, y):
+        """Absorb one observation (y thresholded at 0.5 into {0, 1})."""
         self._global_cls[int(y > 0.5)] += 1
         return super().learn_one(x, y)
 
     def predict_one(self, x) -> float:
+        """Laplace-smoothed P(class=1) at x's leaf."""
         if self.n_seen == 0:
             return 0.5
         node = self._sort(np.asarray(x, dtype=np.float64))

@@ -5,6 +5,35 @@ model scale); requests are routed to a hub with a lightweight domain
 classifier; the fine-grained IEMAS auction then runs inside the hub only.
 This bounds the MCMF problem size (Fig. 6) and reduces the agent
 heterogeneity that drives Green-Laffont IR violations (Appendix B.1).
+
+Clustering signals
+------------------
+``cluster_agents`` partitions on *static, published* metadata only — an
+agent's primary domain tag (the paper's choice), its model scale, or
+nothing (random control).  Nothing per-request enters the partition, so
+hubs are stable across batches; that stability is what makes cross-round
+slot-price warm starts (``SlotPriceBook``) sound.
+
+Hub routing contract
+--------------------
+``route_to_hub`` is the coarse classifier in front of the per-hub auction:
+every request lands in EXACTLY ONE hub, chosen by domain overlap with the
+hub's members, with published free capacity and hub size as tie-breakers.
+The fine-grained Phase-2 matching then sees only that hub's block of the
+(requests × agents) welfare matrix, and the hub blocks are disjoint — so
+per-hub auctions compose into a global matching with no slot double-spend
+(the splice is exact; only cross-hub edges are forfeited, which is the
+measured welfare-vs-speedup trade of Fig. 6 / `benchmarks/hub_sharding.py`).
+
+Worked example
+--------------
+>>> from repro.core.hub import cluster_agents, route_to_hub
+>>> domains = [("code",), ("code",), ("math",), ("math",)]
+>>> hubs = cluster_agents(domains, [7.0, 4.0, 7.0, 4.0], k=2)
+>>> sorted(sorted(h.agent_indices) for h in hubs)
+[[0, 1], [2, 3]]
+>>> hubs[route_to_hub("math", hubs, domains)].domains
+('math',)
 """
 from __future__ import annotations
 
@@ -17,15 +46,18 @@ import numpy as np
 
 @dataclass
 class Hub:
+    """One proxy hub: a stable subset of agents plus published metadata."""
+
     hub_id: int
-    agent_indices: list
-    domains: tuple = ()
+    agent_indices: list[int]
+    domains: tuple[str, ...] = ()
 
     # periodically published, privacy-preserving metadata (§4.4)
-    published: dict = field(default_factory=dict)
+    published: dict[str, float] = field(default_factory=dict)
 
     def publish(self, *, price_signal: float, free_capacity: int,
                 cache_sessions: int) -> None:
+        """Refresh the hub's published summary (price/capacity/cache)."""
         self.published = {
             "price_signal": price_signal,
             "free_capacity": free_capacity,
@@ -33,7 +65,8 @@ class Hub:
         }
 
 
-def cluster_agents(agent_domains: list, agent_scales: list, k: int,
+def cluster_agents(agent_domains: list[tuple[str, ...]],
+                   agent_scales: list[float], k: int,
                    scheme: str = "domain", seed: int = 0) -> list[Hub]:
     """Partition agents into k hubs.
 
@@ -52,8 +85,8 @@ def cluster_agents(agent_domains: list, agent_scales: list, k: int,
         parts = np.array_split(order, k)
         return [Hub(h, sorted(int(i) for i in p)) for h, p in enumerate(parts)]
     # domain scheme: hash primary domain into k buckets, then balance
-    buckets: dict[int, list] = {h: [] for h in range(k)}
-    domains_of: dict[int, set] = {h: set() for h in range(k)}
+    buckets: dict[int, list[int]] = {h: [] for h in range(k)}
+    domains_of: dict[int, set[str]] = {h: set() for h in range(k)}
     order = sorted(range(m), key=lambda i: (agent_domains[i][0] if agent_domains[i] else "", i))
     for i in order:
         primary = agent_domains[i][0] if agent_domains[i] else ""
@@ -69,7 +102,7 @@ def cluster_agents(agent_domains: list, agent_scales: list, k: int,
 
 
 def route_to_hub(request_domain: str, hubs: list[Hub],
-                 agent_domains: list) -> int:
+                 agent_domains: list[tuple[str, ...]]) -> int:
     """Coarse-grained classifier: pick the hub with the best domain overlap;
     ties broken by published free capacity then hub size."""
     best, best_score = 0, -1.0
@@ -82,3 +115,78 @@ def route_to_hub(request_domain: str, hubs: list[Hub],
         if score > best_score:
             best, best_score = idx, score
     return best
+
+
+class SlotPriceBook:
+    """Cross-round warm-start state: each hub's final slot-price vector.
+
+    The dense ε-scaling auction's duals (one price per unit slot) from round
+    t are a near-equilibrium seed for round t+1 — the serving loop
+    re-auctions statistically overlapping request sets.  Prices are stored
+    *per agent* (an agent's slots are interchangeable), so the book can
+    re-assemble a seed for the next round's slot layout even when per-agent
+    free capacity or the batch size changed; slots that did not exist last
+    round seed at price 0, which is exactly the free-slot (λ = 0) boundary
+    condition the solver maintains anyway.
+
+    Safety contract: a stored entry is only replayed when BOTH the elastic
+    agent-set version (bumped by the router on every membership or hub
+    rebuild — `repro.distributed.elastic.AgentSetVersion`) AND the hub's
+    exact live-agent tuple match.  Any mismatch — an agent joined, left,
+    was quarantined, or hubs were recut — is a cold start; warm-starting
+    across a changed slot layout would seed prices onto the wrong goods.
+    """
+
+    def __init__(self) -> None:
+        # hub_id -> (agent-set version, live agent ids, per-agent prices)
+        self._book: dict[int, tuple[int, tuple[str, ...],
+                                    dict[str, np.ndarray]]] = {}
+        self.warm_hits = 0
+        self.cold_starts = 0
+        self.stores = 0
+
+    def lookup(self, hub_id: int, version: int, agent_ids: tuple[str, ...],
+               slot_counts: list[int]) -> np.ndarray | None:
+        """Seed prices for this round's slot layout, or None (cold start).
+
+        ``slot_counts[i]`` is the number of unit slots agent ``agent_ids[i]``
+        exposes this round (``min(free capacity, batch size)`` — the
+        ``_expand_slots`` layout, agents contiguous in ``agent_ids`` order).
+        """
+        entry = self._book.get(hub_id)
+        if entry is None or entry[0] != version or entry[1] != tuple(agent_ids):
+            self.cold_starts += 1
+            return None
+        per_agent = entry[2]
+        segs = []
+        for aid, count in zip(agent_ids, slot_counts):
+            seg = np.zeros(int(count))
+            prev = per_agent.get(aid)
+            if prev is not None and count:
+                take = min(int(count), len(prev))
+                seg[:take] = prev[:take]
+            segs.append(seg)
+        self.warm_hits += 1
+        return np.concatenate(segs) if segs else np.zeros(0)
+
+    def store(self, hub_id: int, version: int, agent_ids: tuple[str, ...],
+              slot_prices: np.ndarray, slot_agent: np.ndarray) -> None:
+        """Record a solve's final duals, split per agent for re-layout."""
+        slot_prices = np.asarray(slot_prices, dtype=np.float64)
+        slot_agent = np.asarray(slot_agent)
+        per_agent = {aid: slot_prices[slot_agent == i]
+                     for i, aid in enumerate(agent_ids)}
+        self._book[hub_id] = (version, tuple(agent_ids), per_agent)
+        self.stores += 1
+
+    def invalidate(self, hub_id: int | None = None) -> None:
+        """Drop one hub's entry, or the whole book (hub_id=None)."""
+        if hub_id is None:
+            self._book.clear()
+        else:
+            self._book.pop(hub_id, None)
+
+    def stats(self) -> dict[str, int]:
+        """Warm-start effectiveness counters for telemetry/benchmarks."""
+        return {"warm_hits": self.warm_hits, "cold_starts": self.cold_starts,
+                "stores": self.stores, "hubs_tracked": len(self._book)}

@@ -19,6 +19,8 @@ import math
 
 
 class FlowNetwork:
+    """Residual flow network in paired-edge (forward, reverse) layout."""
+
     def __init__(self, n: int):
         self.n = n
         self.to: list[int] = []
@@ -27,6 +29,7 @@ class FlowNetwork:
         self.adj: list[list[int]] = [[] for _ in range(n)]
 
     def add_edge(self, u: int, v: int, cap: float, cost: float) -> int:
+        """Add a u->v arc (and its zero-cap reverse); returns the edge id."""
         eid = len(self.to)
         self.to.append(v); self.cap.append(cap); self.cost.append(cost)
         self.adj[u].append(eid)
@@ -35,6 +38,7 @@ class FlowNetwork:
         return eid
 
     def clone(self) -> "FlowNetwork":
+        """Deep copy (for counterfactual re-solves on the residual graph)."""
         g = FlowNetwork(self.n)
         g.to = list(self.to); g.cap = list(self.cap); g.cost = list(self.cost)
         g.adj = [list(a) for a in self.adj]

@@ -10,6 +10,13 @@ Per micro-batch of requests:
            bit-identical decisions (tests/test_predictor_batch.py).
   Phase 2  welfare maximization per proxy hub (Eq. 7 / Thm 4.1): exact MCMF
            or the vectorized dense ε-scaling auction (``solver=`` kwarg).
+           With ``n_hubs > 1`` the batch's welfare matrix is carved into
+           per-hub blocks and each block is auctioned independently
+           (``run_sharded_auction``; the ``dense-jax`` solver batches the
+           uneven blocks through one vmapped program per shape bucket), and
+           with ``warm_start=True`` each hub's final slot prices seed the
+           next round's ε-scaling — keyed by hub id + elastic agent-set
+           version, cold-starting whenever membership changed.
   Phase 3  VCG Clarke-pivot payments (Eq. 8) + dispatch.
   Phase 4  execution feedback: predictor updates + prefix-ledger updates.
 
@@ -24,8 +31,9 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.affinity import PrefixLedger
-from repro.core.auction import AuctionResult, run_auction
-from repro.core.hub import Hub, cluster_agents, route_to_hub
+from repro.core.auction import run_sharded_auction
+from repro.core.hub import (Hub, SlotPriceBook, cluster_agents, route_to_hub)
+from repro.distributed.elastic import AgentSetVersion
 from repro.core.predictor import (PredictorInput, PredictorPool, QoSEstimate,
                                   feature_tensor)
 from repro.core.pricing import TokenPrices, observed_cost
@@ -34,10 +42,12 @@ from repro.core.valuation import ValuationConfig, client_value
 
 @dataclass
 class AgentInfo:
+    """Published profile of one market participant (prices, capacity, tags)."""
+
     agent_id: str
     prices: TokenPrices
     capacity: int
-    domains: tuple
+    domains: tuple[str, ...]
     scale: float = 1.0
     recurrent: bool = False  # extension-only cache semantics (rwkv/zamba)
     cache_slots: int = 0     # published cache capacity (0 = unknown/unbounded)
@@ -45,6 +55,8 @@ class AgentInfo:
 
 @dataclass
 class Request:
+    """One dialogue turn to route: prompt tokens + domain + metadata."""
+
     request_id: str
     dialogue_id: str
     tokens: np.ndarray          # prompt token ids (full conversation so far)
@@ -56,6 +68,8 @@ class Request:
 
 @dataclass
 class RouteDecision:
+    """Algorithm-1 output for one request: winner, payment, QoS estimate."""
+
     request: Request
     agent_id: str | None
     payment: float
@@ -66,6 +80,8 @@ class RouteDecision:
 
 @dataclass
 class CompletionObs:
+    """Engine telemetry for one completed request (Phase-4 feedback)."""
+
     latency: float          # TTFT seconds (paper's Lat)
     n_prompt: int
     n_hit: int              # cached prompt tokens reported by the engine
@@ -75,6 +91,8 @@ class CompletionObs:
 
 
 class IEMASRouter:
+    """The paper's Algorithm 1 (see module docstring for the four phases)."""
+
     name = "iemas"
 
     def __init__(self, agents: list[AgentInfo], *,
@@ -82,6 +100,7 @@ class IEMASRouter:
                  payment_mode: str = "warmstart",
                  solver: str = "mcmf",
                  n_hubs: int = 1, hub_scheme: str = "domain",
+                 warm_start: bool = False,
                  use_kernel_affinity: bool = False,
                  batched: bool = True, predictor_backend: str = "numpy",
                  predictor_kw: dict | None = None):
@@ -89,6 +108,9 @@ class IEMASRouter:
         self.valuation = valuation or ValuationConfig()
         self.payment_mode = payment_mode
         self.solver = solver
+        # cross-round slot-price reuse is a dense-solver concept (the mcmf
+        # oracle keeps no duals); silently a no-op otherwise
+        self.warm_start = warm_start and solver in ("dense", "dense-jax")
         self.use_kernel_affinity = use_kernel_affinity
         self.batched = batched
         self.predictor_backend = predictor_backend
@@ -101,6 +123,8 @@ class IEMASRouter:
                          "matched": 0, "unmatched": 0}
         self.n_hubs = n_hubs
         self.hub_scheme = hub_scheme
+        self.agent_set_version = AgentSetVersion()
+        self.price_book = SlotPriceBook()
         self._rebuild_hubs()
         self.quarantined: set[str] = set()
 
@@ -109,13 +133,19 @@ class IEMASRouter:
         self.hubs = cluster_agents([a.domains for a in self.agents],
                                    [a.scale for a in self.agents],
                                    self.n_hubs, self.hub_scheme)
+        # hub cuts moved -> every stored slot-price vector is for a dead
+        # layout; stamp a new agent-set version so lookups cold-start
+        self.agent_set_version.bump()
+        self.price_book.invalidate()
 
     def add_agent(self, agent: AgentInfo) -> None:
+        """Elastic scale-out: admit an agent and recut the proxy hubs."""
         self.agents.append(agent)
         self.pool.add_agent(agent.agent_id, agent.prices)
         self._rebuild_hubs()
 
     def remove_agent(self, agent_id: str) -> None:
+        """Elastic scale-in: drop an agent, its predictors and ledger state."""
         self.agents = [a for a in self.agents if a.agent_id != agent_id]
         self.pool.remove_agent(agent_id)
         self.ledger.evict(agent_id)
@@ -127,6 +157,7 @@ class IEMASRouter:
         self.quarantined.add(agent_id)
 
     def reinstate(self, agent_id: str) -> None:
+        """Lift a quarantine after the cluster-layer cooldown."""
         self.quarantined.discard(agent_id)
 
     # ---------------- Algorithm 1 ----------------
@@ -226,6 +257,7 @@ class IEMASRouter:
         req_hub = [route_to_hub(r.domain, self.hubs,
                                 [a.domains for a in self.agents])
                    for r in requests]
+        blocks: dict[int, tuple[list[int], list[int]]] = {}
         for h in range(len(self.hubs)):
             r_idx = [j for j in range(n) if req_hub[j] == h]
             a_idx = [i for i in range(m) if hub_of_agent.get(i, -1) == h]
@@ -236,11 +268,34 @@ class IEMASRouter:
                     decisions[j] = RouteDecision(requests[j], None, 0.0, None,
                                                  0.0, h)
                 continue
-            vv = values[np.ix_(r_idx, a_idx)]
-            cc = cst[np.ix_(r_idx, a_idx)]
-            result = run_auction(vv, cc, [caps[i] for i in a_idx],
-                                 payment_mode=self.payment_mode,
-                                 solver=self.solver)
+            blocks[h] = (r_idx, a_idx)
+
+        # warm-start seeds: last round's duals, replayed only when the hub's
+        # exact live-agent set (and the elastic version) still matches
+        start_prices: dict[int, np.ndarray] = {}
+        if self.warm_start:
+            for h, (r_idx, a_idx) in blocks.items():
+                version, ids = self.agent_set_version.fingerprint(
+                    live[i].agent_id for i in a_idx)
+                counts = [min(caps[i], len(r_idx)) for i in a_idx]
+                seed = self.price_book.lookup(h, version, ids, counts)
+                if seed is not None:
+                    start_prices[h] = seed
+
+        results = run_sharded_auction(values, cst, caps, blocks,
+                                      payment_mode=self.payment_mode,
+                                      solver=self.solver,
+                                      start_prices=start_prices)
+        for h, result in results.items():
+            r_idx, a_idx = blocks[h]
+            cc = result.costs
+            if self.warm_start and "slot_prices" in result.solver_stats:
+                version, ids = self.agent_set_version.fingerprint(
+                    live[i].agent_id for i in a_idx)
+                self.price_book.store(
+                    h, version, ids,
+                    result.solver_stats["slot_prices"],
+                    result.solver_stats["slot_agent"])
             for local_j, j in enumerate(r_idx):
                 li = result.assignment[local_j]
                 if li < 0:
@@ -266,6 +321,8 @@ class IEMASRouter:
 
     # ---------------- Phase 4: feedback ----------------
     def on_complete(self, request_id: str, obs: CompletionObs) -> None:
+        """Phase 4: predictor/ledger updates + market accounting (or the
+        fault path: quarantine, no payment) for one completed request."""
         entry = self._pending.pop(request_id, None)
         if entry is None:
             return

@@ -85,6 +85,8 @@ def _blend_with_prior(X, *, lpt, lb, miss, hit, out, ewma, n_obs, warm_n,
 
 @dataclass
 class PredictorInput:
+    """One (request, agent) Eq.-5 feature row x_ij, field-per-feature."""
+
     prompt_len: float
     turn: float
     affinity: float
@@ -97,6 +99,7 @@ class PredictorInput:
     domain_match: float
 
     def vector(self) -> np.ndarray:
+        """The N_FEATURES-long float64 array the trees consume."""
         return np.array([
             self.prompt_len, self.turn, self.affinity,
             self.router_inflight, self.router_rps,
@@ -107,12 +110,16 @@ class PredictorInput:
 
 @dataclass
 class QoSEstimate:
+    """Predicted (Lat, Cost, Perf) triple for one (request, agent) pair."""
+
     latency: float
     cost: float
     quality: float
 
 
 class AgentPredictor:
+    """One agent's three Hoeffding targets + structural cold-start prior."""
+
     def __init__(self, agent_id: str, prices: TokenPrices, *,
                  warm_n: int = 6, prior_latency_per_tok: float = 1e-3,
                  prior_latency_base: float = 0.02, prior_quality: float = 0.6):
@@ -129,6 +136,7 @@ class AgentPredictor:
         self.ewma_gen = 32.0  # expected generation length
 
     def predict(self, x: PredictorInput) -> QoSEstimate:
+        """Eq.-5 QoS estimate: structural prior blended into tree output."""
         uncached = x.prompt_len * (1.0 - x.affinity)
         prior_lat = (self.prior_lb + self.prior_lpt * uncached) * (1.0 + x.utilization)
         prior_cst = predicted_cost(self.prices, int(x.prompt_len), x.affinity,
@@ -167,6 +175,7 @@ class AgentPredictor:
 
     def update(self, x: PredictorInput, latency_obs: float, cost_obs: float,
                quality_obs: float) -> None:
+        """Phase-4 feedback: one observed (Lat, Cost, Perf) triple."""
         v = x.vector()
         self.lat.learn_one(v, float(latency_obs))
         self.cost.learn_one(v, float(cost_obs))
@@ -199,10 +208,12 @@ class PredictorPool:
         self._stacks.clear()
 
     def remove_agent(self, agent_id: str) -> None:
+        """Elastic scale-in: drop an agent and its stacked-forest caches."""
         self._preds.pop(agent_id, None)
         self._stacks.clear()
 
     def agents(self):
+        """Agent ids currently in the pool."""
         return list(self._preds)
 
     # ---------------- batched Phase-1 scoring ----------------

@@ -13,6 +13,8 @@ from dataclasses import dataclass
 
 @dataclass(frozen=True)
 class TokenPrices:
+    """Per-token prices: uncached prompt (miss), cached (hit), generated."""
+
     miss: float
     hit: float
     out: float
@@ -20,6 +22,7 @@ class TokenPrices:
 
 def observed_cost(prices: TokenPrices, n_prompt: int, n_hit: int,
                   n_gen: int) -> float:
+    """Exact Eq.-6 cost from the engine-reported token counts."""
     n_hit = min(n_hit, n_prompt)
     return (prices.miss * (n_prompt - n_hit)
             + prices.hit * n_hit

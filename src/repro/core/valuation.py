@@ -16,6 +16,8 @@ import numpy as np
 
 @dataclass(frozen=True)
 class ValuationConfig:
+    """Eq.-1 knobs: quality/latency trade-off and currency scaling."""
+
     delta: float = 0.7          # quality-vs-latency preference
     latency_scale: float = 1.0  # seconds at which latency penalty ~ 1
     value_scale: float = 10.0   # currency per unit of valuation

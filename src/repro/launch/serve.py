@@ -13,11 +13,13 @@ from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
 
 
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
-                 solver: str = "mcmf", batched: bool = True,
+                 solver: str = "mcmf", warm_start: bool = False,
+                 batched: bool = True,
                  predictor_backend: str = "numpy", seed: int = 0):
     if name == "iemas":
         return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
-                           solver=solver, batched=batched,
+                           solver=solver, warm_start=warm_start,
+                           batched=batched,
                            predictor_backend=predictor_backend)
     return BASELINES[name](infos, seed=seed)
 
@@ -29,9 +31,15 @@ def main():
     ap.add_argument("--workload", default="coqa_like")
     ap.add_argument("--agents", type=int, default=9)
     ap.add_argument("--dialogues", type=int, default=16)
-    ap.add_argument("--hubs", type=int, default=1)
+    ap.add_argument("--hubs", type=int, default=1,
+                    help="shard Phase 2 across K proxy hubs (§4.4); each "
+                         "batch is auctioned per hub block")
     ap.add_argument("--solver", default="mcmf",
                     choices=["mcmf", "dense", "dense-jax"])
+    ap.add_argument("--warm-start", action="store_true",
+                    help="seed each hub's dense auction from the previous "
+                         "round's slot prices (cold-starts on membership "
+                         "changes; dense solvers only)")
     ap.add_argument("--payment-mode", default="warmstart",
                     choices=["warmstart", "naive"])
     ap.add_argument("--scalar-phase1", action="store_true",
@@ -52,6 +60,7 @@ def main():
                          warmup=not args.no_warmup)
     router = build_router(args.router, cluster.agent_infos(), n_hubs=args.hubs,
                           payment_mode=args.payment_mode, solver=args.solver,
+                          warm_start=args.warm_start,
                           batched=not args.scalar_phase1,
                           predictor_backend=args.predictor_backend,
                           seed=args.seed)

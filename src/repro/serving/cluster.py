@@ -295,4 +295,10 @@ def run_workload(cluster: SimCluster, router, dialogues: list[DialogueScript],
             break
         if on_round is not None:
             on_round(rounds, cluster)
-    return cluster.metrics()
+    out = cluster.metrics()
+    # warm-start effectiveness (IEMASRouter only): how often a hub's auction
+    # was seeded from the previous round's slot prices vs cold-started
+    book = getattr(router, "price_book", None)
+    if book is not None and getattr(router, "warm_start", False):
+        out["warm_start"] = book.stats()
+    return out

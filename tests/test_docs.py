@@ -1,0 +1,46 @@
+"""Documentation gates: the docs/ tree exists and is linked, and docstring
+coverage (tools/check_docstrings.py, the CI gate) stays above its floors."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+from check_docstrings import audit  # noqa: E402
+
+
+def test_core_docstring_coverage_full():
+    """`repro.core` is the documented subsystem: 95%+ public-API coverage."""
+    documented, total, missing = audit([REPO / "src/repro/core"])
+    pct = 100.0 * documented / max(total, 1)
+    assert pct >= 95.0, f"core docstring coverage {pct:.1f}% < 95%: {missing}"
+
+
+def test_repo_docstring_coverage_floor():
+    """Repo-wide floor — raise it as modules get documented, never lower."""
+    documented, total, _ = audit([REPO / "src/repro"])
+    pct = 100.0 * documented / max(total, 1)
+    assert pct >= 60.0, f"src/repro docstring coverage {pct:.1f}% < 60%"
+
+
+def test_docs_tree_exists_and_is_linked():
+    arch = REPO / "docs/architecture.md"
+    bench = REPO / "docs/benchmarks.md"
+    assert arch.is_file() and bench.is_file()
+    readme = (REPO / "README.md").read_text()
+    assert "docs/architecture.md" in readme
+    assert "docs/benchmarks.md" in readme
+
+
+def test_docs_cover_every_core_module_and_benchmark():
+    """docs/architecture.md has a section per core module; docs/benchmarks.md
+    documents every benchmarks/*.py entry point."""
+    arch = (REPO / "docs/architecture.md").read_text()
+    for mod in sorted((REPO / "src/repro/core").glob("*.py")):
+        if mod.stem != "__init__":
+            assert f"`{mod.stem}" in arch or f"core/{mod.stem}" in arch, \
+                f"docs/architecture.md misses core/{mod.stem}.py"
+    bench = (REPO / "docs/benchmarks.md").read_text()
+    for b in sorted((REPO / "benchmarks").glob("*.py")):
+        if b.stem not in ("common", "run", "__init__"):
+            assert b.stem in bench, f"docs/benchmarks.md misses {b.name}"

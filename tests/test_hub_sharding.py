@@ -1,0 +1,297 @@
+"""Hub-sharded Phase-2 auctions + cross-round warm-started slot prices.
+
+Covers the ISSUE-3 tentpole invariants:
+  * splicing: `run_sharded_auction` over hub blocks is bit-identical to
+    running the dense solver on each block independently;
+  * warm-start soundness: seeding from a previous solve's duals reaches the
+    same assignment and welfare certificate as a cold solve on static agent
+    sets (and the round-budgeted warm attempt falls back to a cold solve
+    instead of failing);
+  * elastic safety: the router's SlotPriceBook cold-starts whenever the
+    hub's live agent set changes (join/leave/quarantine/hub-rebuild).
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import AgentInfo, CompletionObs, IEMASRouter, Request, TokenPrices
+from repro.core.auction import run_auction, run_sharded_auction
+from repro.core.auction_dense import solve_dense_auction
+from repro.core.hub import SlotPriceBook
+
+ATOL = 1e-6
+
+
+def _market(rng, n_max=24, m_max=16):
+    n = int(rng.integers(2, n_max + 1))
+    m = int(rng.integers(2, m_max + 1))
+    values = rng.uniform(0, 6, (n, m)) * (rng.random((n, m)) > 0.3)
+    costs = rng.uniform(0, 3, (n, m))
+    caps = rng.integers(1, 4, m).tolist()
+    return values, costs, caps
+
+
+def _partition(rng, n, m, k):
+    """Random request/agent partition into k blocks (every agent somewhere)."""
+    a_of = rng.integers(0, k, m)
+    r_of = rng.integers(0, k, n)
+    blocks = {}
+    for h in range(k):
+        r_idx = [j for j in range(n) if r_of[j] == h]
+        a_idx = [i for i in range(m) if a_of[i] == h]
+        if r_idx and a_idx:
+            blocks[h] = (r_idx, a_idx)
+    return blocks
+
+
+# ------------------------------------------------------------- splicing --
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10**6), st.integers(1, 5))
+def test_sharded_equals_per_block_dense(seed, k):
+    """The sharded entry point is pure scheduling: per-hub results must be
+    bit-identical to solving each block with run_auction alone."""
+    rng = np.random.default_rng(seed)
+    values, costs, caps = _market(rng)
+    blocks = _partition(rng, *values.shape, k)
+    sharded = run_sharded_auction(values, costs, caps, blocks, solver="dense")
+    assert set(sharded) == set(blocks)
+    for h, (r_idx, a_idx) in blocks.items():
+        solo = run_auction(values[np.ix_(r_idx, a_idx)],
+                           costs[np.ix_(r_idx, a_idx)],
+                           [caps[i] for i in a_idx], solver="dense")
+        assert sharded[h].assignment == solo.assignment
+        assert sharded[h].welfare == solo.welfare
+        assert sharded[h].payments == solo.payments
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 4))
+def test_sharded_blocks_are_capacity_disjoint(seed, k):
+    """Spliced global matching double-spends no agent capacity."""
+    rng = np.random.default_rng(seed)
+    values, costs, caps = _market(rng)
+    blocks = _partition(rng, *values.shape, k)
+    sharded = run_sharded_auction(values, costs, caps, blocks, solver="dense")
+    used = {}
+    for h, (r_idx, a_idx) in blocks.items():
+        for local_j, local_i in enumerate(sharded[h].assignment):
+            if local_i >= 0:
+                gi = a_idx[local_i]
+                used[gi] = used.get(gi, 0) + 1
+    for gi, count in used.items():
+        assert count <= caps[gi]
+
+
+# ----------------------------------------------------------- warm starts --
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 10**6))
+def test_warm_equals_cold_on_static_market(seed):
+    """Re-solving the same (generic, untied) market from the previous duals
+    reaches the same assignment and the same certificate as a cold solve."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 24))
+    m = int(rng.integers(2, 12))
+    w = np.maximum(rng.uniform(-1, 4, (n, m)), 0.0)  # continuous -> no ties
+    caps = rng.integers(1, 4, m).tolist()
+    cold = solve_dense_auction(w, caps)
+    warm = solve_dense_auction(w, caps, start_prices=cold.slot_prices)
+    assert warm.warm_started
+    assert warm.assignment == cold.assignment
+    assert warm.welfare == pytest.approx(cold.welfare, abs=ATOL)
+    assert warm.gap_bound == pytest.approx(cold.gap_bound)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10**6))
+def test_warm_welfare_optimal_on_perturbed_market(seed):
+    """Warm seeds from a *different* (previous-round) market must not cost
+    welfare: the certificate only depends on the final epsilon."""
+    rng = np.random.default_rng(seed)
+    n, m = 16, 8
+    w1 = np.maximum(rng.uniform(-1, 4, (n, m)), 0.0)
+    w2 = np.maximum(w1 + rng.normal(0, 0.3, (n, m)), 0.0)
+    caps = rng.integers(1, 4, m).tolist()
+    prev = solve_dense_auction(w1, caps)
+    cold = solve_dense_auction(w2, caps)
+    warm = solve_dense_auction(w2, caps, start_prices=prev.slot_prices)
+    assert warm.welfare == pytest.approx(cold.welfare, abs=ATOL)
+
+
+def test_warm_budget_trips_to_cold_fallback():
+    """A hopeless warm configuration (zero prices, epsilon forced straight
+    to eps_final: bidding wars of ~wmax/eps rounds) must trip the warm round
+    budget and transparently re-solve cold."""
+    rng = np.random.default_rng(7)
+    w = np.maximum(rng.uniform(0, 4, (30, 10)), 0.0)
+    caps = [2] * 10
+    cold = solve_dense_auction(w, caps)
+    tripped = solve_dense_auction(w, caps,
+                                  start_prices=np.zeros_like(cold.slot_prices),
+                                  start_eps=cold.eps)
+    assert tripped.warm_started and tripped.fallback
+    assert tripped.welfare == pytest.approx(cold.welfare, abs=ATOL)
+    assert tripped.assignment == cold.assignment
+
+
+def test_warm_start_shape_mismatch_rejected():
+    w = np.ones((3, 2))
+    with pytest.raises(ValueError, match="start_prices"):
+        solve_dense_auction(w, [1, 1], start_prices=np.zeros(7))
+
+
+# --------------------------------------------------------- SlotPriceBook --
+def test_price_book_remaps_layout_and_guards_membership():
+    book = SlotPriceBook()
+    ids = ("a", "b")
+    # agent a had 2 slots priced (1.0, 2.0); agent b one slot priced 3.0
+    book.store(0, version=1, agent_ids=ids,
+               slot_prices=np.array([1.0, 2.0, 3.0]),
+               slot_agent=np.array([0, 0, 1]))
+    # same layout -> replayed verbatim
+    np.testing.assert_array_equal(book.lookup(0, 1, ids, [2, 1]),
+                                  [1.0, 2.0, 3.0])
+    # capacity shrank for a, grew for b -> truncate / zero-pad per agent
+    np.testing.assert_array_equal(book.lookup(0, 1, ids, [1, 3]),
+                                  [1.0, 3.0, 0.0, 0.0])
+    # elastic version bumped -> cold start
+    assert book.lookup(0, 2, ids, [2, 1]) is None
+    # live agent set changed (e.g. quarantine) -> cold start
+    assert book.lookup(0, 1, ("a",), [2]) is None
+    # unknown hub -> cold start
+    assert book.lookup(5, 1, ids, [2, 1]) is None
+    stats = book.stats()
+    assert stats["warm_hits"] == 2 and stats["cold_starts"] == 3
+    book.invalidate()
+    assert book.lookup(0, 1, ids, [2, 1]) is None
+
+
+# ------------------------------------------------------------ router --
+def _agents(m=6, cap=2):
+    return [AgentInfo(f"a{i}", TokenPrices(0.01 * (1 + 0.1 * i), 0.001, 0.03),
+                      cap, ("dialogue",) if i % 2 == 0 else ("reasoning",),
+                      scale=4.0 + i) for i in range(m)]
+
+
+def _requests(n, tag=0):
+    rng = np.random.default_rng(tag)
+    return [Request(f"r{tag}-{j}", f"d{j % 3}",
+                    rng.integers(1, 50, 20).astype(np.int32), turn=j // 3,
+                    domain="dialogue" if j % 2 else "reasoning")
+            for j in range(n)]
+
+
+def test_router_warm_start_hits_after_first_round():
+    router = IEMASRouter(_agents(), solver="dense", n_hubs=2, warm_start=True,
+                         predictor_kw={"warm_n": 99})
+    for t in range(4):
+        router.route_batch(_requests(8, t), {})
+    stats = router.price_book.stats()
+    assert stats["warm_hits"] >= 3           # every round after the first
+    assert stats["stores"] >= 4
+
+
+def test_router_warm_start_welfare_matches_cold_router():
+    """Warm starting is pure reoptimization: round-by-round matched welfare
+    must equal a cold-start router's on the identical request stream (the
+    specific assignment may differ only among exact welfare ties)."""
+    warm = IEMASRouter(_agents(), solver="dense", n_hubs=2, warm_start=True,
+                       predictor_kw={"warm_n": 99})
+    cold = IEMASRouter(_agents(), solver="dense", n_hubs=2, warm_start=False,
+                       predictor_kw={"warm_n": 99})
+    for t in range(4):
+        dw = warm.route_batch(_requests(8, t), {})
+        dc = cold.route_batch(_requests(8, t), {})
+        w_w = sum(d.welfare_weight for d in dw if d.agent_id)
+        w_c = sum(d.welfare_weight for d in dc if d.agent_id)
+        assert w_w == pytest.approx(w_c, abs=ATOL)
+
+
+def test_router_cold_starts_on_membership_change():
+    router = IEMASRouter(_agents(), solver="dense", n_hubs=2, warm_start=True,
+                         predictor_kw={"warm_n": 99})
+    for t in range(2):
+        router.route_batch(_requests(8, t), {})
+    version_before = router.agent_set_version.version
+    router.add_agent(AgentInfo("a-new", TokenPrices(0.01, 0.001, 0.03), 2,
+                               ("dialogue",)))
+    assert router.agent_set_version.version > version_before
+    before = dict(router.price_book.stats())
+    router.route_batch(_requests(8, 5), {})
+    after = router.price_book.stats()
+    assert after["warm_hits"] == before["warm_hits"]       # nothing replayed
+    assert after["cold_starts"] > before["cold_starts"]
+    # next round warm again (membership stable at the new version)
+    router.route_batch(_requests(8, 6), {})
+    assert router.price_book.stats()["warm_hits"] > after["warm_hits"]
+
+
+def test_router_cold_starts_on_quarantine():
+    """Quarantine shrinks a hub's live set without a version bump: the exact
+    agent-id tuple in the price-book key must force the cold start."""
+    router = IEMASRouter(_agents(), solver="dense", n_hubs=1, warm_start=True,
+                         predictor_kw={"warm_n": 99})
+    decisions = router.route_batch(_requests(6, 0), {})
+    victim = next(d.agent_id for d in decisions if d.agent_id)
+    router.on_complete(
+        next(d.request.request_id for d in decisions if d.agent_id == victim),
+        CompletionObs(0, 10, 0, 0, 0, failed=True))
+    before = dict(router.price_book.stats())
+    router.route_batch(_requests(6, 1), {})
+    after = router.price_book.stats()
+    assert after["warm_hits"] == before["warm_hits"]
+    assert after["cold_starts"] > before["cold_starts"]
+
+
+def test_router_warm_start_noop_for_mcmf():
+    router = IEMASRouter(_agents(), solver="mcmf", warm_start=True)
+    assert router.warm_start is False
+    router.route_batch(_requests(4, 0), {})
+    assert router.price_book.stats()["stores"] == 0
+
+
+# ---------------------------------------------------------- jax batching --
+@pytest.mark.slow
+def test_jax_batch_matches_single_solves():
+    """Padded + vmapped hub blocks must match per-block jax solves exactly
+    (zero padding is behavior-neutral by construction)."""
+    from repro.core.auction_dense import (solve_dense_auction_jax,
+                                          solve_dense_auction_jax_batch)
+
+    rng = np.random.default_rng(11)
+    ws, caps_list = [], []
+    for _ in range(6):
+        n, m = int(rng.integers(2, 40)), int(rng.integers(2, 12))
+        ws.append(np.maximum(rng.uniform(-1, 4, (n, m)), 0.0))
+        caps_list.append(rng.integers(1, 4, m).tolist())
+    batch = solve_dense_auction_jax_batch(ws, caps_list)
+    for w, caps, b in zip(ws, caps_list, batch):
+        solo = solve_dense_auction_jax(w, caps)
+        assert b.assignment == solo.assignment
+        assert b.welfare == pytest.approx(solo.welfare, abs=1e-4)
+
+
+@pytest.mark.slow
+def test_sharded_dense_jax_matches_dense():
+    rng = np.random.default_rng(13)
+    values, costs, caps = _market(rng, 20, 10)
+    blocks = _partition(rng, *values.shape, 3)
+    jx = run_sharded_auction(values, costs, caps, blocks, solver="dense-jax")
+    ref = run_sharded_auction(values, costs, caps, blocks, solver="dense")
+    for h in blocks:
+        tol = max(1e-4, jx[h].solver_stats["gap_bound"])
+        assert abs(jx[h].welfare - ref[h].welfare) <= tol
+
+
+@pytest.mark.slow
+def test_sharded_dense_jax_warm_start_roundtrip():
+    rng = np.random.default_rng(17)
+    values, costs, caps = _market(rng, 20, 10)
+    blocks = _partition(rng, *values.shape, 3)
+    first = run_sharded_auction(values, costs, caps, blocks, solver="dense-jax")
+    seeds = {h: first[h].solver_stats["slot_prices"] for h in first}
+    warm = run_sharded_auction(values, costs, caps, blocks,
+                               solver="dense-jax", start_prices=seeds)
+    for h in blocks:
+        assert warm[h].solver_stats["warm_started"]
+        tol = max(1e-4, warm[h].solver_stats["gap_bound"])
+        assert abs(warm[h].welfare - first[h].welfare) <= tol

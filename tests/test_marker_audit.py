@@ -14,8 +14,10 @@ TIER1_MODULES = {
     "test_affinity",
     "test_auction",
     "test_auction_dense",
+    "test_docs",
     "test_hoeffding",
     "test_hoeffding_batch",
+    "test_hub_sharding",
     "test_marker_audit",
     "test_mcmf",
     "test_mechanism",

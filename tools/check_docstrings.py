@@ -1,0 +1,107 @@
+"""Docstring-coverage gate (interrogate-style, dependency-free).
+
+Counts docstrings on the public API surface — modules, and module/class
+level classes, functions and methods whose names don't start with ``_``
+(dunders like ``__init__`` are thereby exempt, as are nested closures,
+members of private classes, and trivial ``...``/``pass`` stub bodies) —
+and fails when coverage drops below ``--fail-under``.  Run by CI next to the
+tier-1 suite and importable from tests:
+
+    python tools/check_docstrings.py --fail-under 90 src/repro
+
+Pure-stdlib (``ast``) because the container image pins its package set; the
+report format mirrors `interrogate -v` closely enough that swapping the
+real tool in later is a one-line CI change.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+
+def _is_public_def(node: ast.AST) -> bool:
+    name = getattr(node, "name", "")
+    return not name.startswith("_")
+
+
+def _is_stub(node) -> bool:
+    """Bodies that are a lone Ellipsis/pass need no docstring."""
+    body = [s for s in node.body
+            if not isinstance(s, (ast.Import, ast.ImportFrom))]
+    if len(body) != 1:
+        return False
+    stmt = body[0]
+    return isinstance(stmt, ast.Pass) or (
+        isinstance(stmt, ast.Expr)
+        and isinstance(stmt.value, ast.Constant)
+        and stmt.value.value is Ellipsis)
+
+
+def audit_file(path: Path) -> tuple[list[str], list[str]]:
+    """Returns (documented, missing) qualified names for one file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    documented: list[str] = []
+    missing: list[str] = []
+
+    def record(node, qual):
+        if ast.get_docstring(node) is not None:
+            documented.append(qual)
+        elif not _is_stub(node):
+            missing.append(qual)
+
+    record(tree, f"{path}:module")
+
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                if not _is_public_def(child):
+                    continue            # private defs + their members exempt
+                qual = f"{prefix}{child.name}"
+                record(child, f"{path}:{qual}")
+                if isinstance(child, ast.ClassDef):
+                    walk(child, f"{qual}.")  # methods yes, closures no
+
+    walk(tree, "")
+    return documented, missing
+
+
+def audit(paths: list[Path]) -> tuple[int, int, list[str]]:
+    """(documented, total, missing-names) over every .py under ``paths``."""
+    documented = 0
+    total = 0
+    missing_all: list[str] = []
+    for root in paths:
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            doc, missing = audit_file(f)
+            documented += len(doc)
+            total += len(doc) + len(missing)
+            missing_all.extend(missing)
+    return documented, total, missing_all
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="+", type=Path)
+    ap.add_argument("--fail-under", type=float, default=90.0,
+                    help="minimum coverage percent (default 90)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="list every undocumented definition")
+    args = ap.parse_args(argv)
+
+    documented, total, missing = audit(args.paths)
+    pct = 100.0 * documented / max(total, 1)
+    if args.verbose:
+        for name in missing:
+            print(f"MISSING {name}")
+    status = "PASSED" if pct >= args.fail_under else "FAILED"
+    print(f"docstring coverage: {documented}/{total} = {pct:.1f}% "
+          f"(fail-under {args.fail_under:.1f}%) {status}")
+    return 0 if pct >= args.fail_under else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
