@@ -12,7 +12,13 @@ certified welfare loss.  Reports, per size:
                 (same solver per block; per-block payments);
   * shard-jax — the same blocks padded into power-of-two shape buckets and
                 solved by ONE vmapped jax program per bucket (steady state,
-                compile excluded);
+                compile excluded); shard-pallas is the identical batch path
+                with the Pallas bidding kernel swapped in;
+  * spill     — the cross-hub second round under domain-PINNED routing (no
+                per-batch capacity balancing, i.e. the router's real coarse
+                classifier): welfare fraction without/with the spill
+                re-auction plus rescued/candidate counts — the ROADMAP's
+                K=4 small-n welfare-loss tail and its fix;
   * warm      — a steady-state re-auction (next batch from the same
                 distribution) seeded from the previous round's slot prices,
                 vs the identical re-auction cold: rounds + wall-clock;
@@ -24,9 +30,10 @@ certified welfare loss.  Reports, per size:
                 the smallest size) the exact MCMF also runs directly.
 
 Acceptance gate (checked when the n >= 1000 row runs; `--smoke` runs the
-reduced sizes and asserts splice parity + warm <= cold rounds instead):
-sharded >= 3x faster than global with loss_bound <= 2%, and warm-started
-rounds strictly below cold rounds on the steady-state batch.
+reduced sizes and asserts splice parity + warm <= cold rounds + the spill
+round rescuing welfare under pinned routing instead): sharded >= 3x faster
+than global with loss_bound <= 2%, and warm-started rounds strictly below
+cold rounds on the steady-state batch.
 
     PYTHONPATH=src:. python benchmarks/hub_sharding.py [--smoke] [--oracle]
 """
@@ -38,13 +45,18 @@ import time
 import numpy as np
 
 from benchmarks.common import QUICK, emit, synthetic_market
-from repro.core.auction import run_auction, run_sharded_auction
+from repro.core.auction import SPILL_HUB, run_auction, run_sharded_auction
 from repro.core.hub import cluster_agents
 
 
-def _route(n, k, hubs, caps, req_dom, ag_dom):
+def _route(n, k, hubs, caps, req_dom, ag_dom, capacity_spill=True):
     """Coarse stage: every request lands in exactly one hub (domain overlap
-    with capacity spill — the fig6 classifier at benchmark scale)."""
+    with capacity spill — the fig6 classifier at benchmark scale).
+
+    ``capacity_spill=False`` routes by domain overlap alone — the router's
+    actual coarse classifier, which has no per-batch capacity balancing and
+    therefore overloads popular hubs (the cross-hub spill study's regime).
+    """
     remaining = [sum(caps[i] for i in hub.agent_indices) for hub in hubs]
     hub_of_req = []
     for j in range(n):
@@ -52,19 +64,20 @@ def _route(n, k, hubs, caps, req_dom, ag_dom):
         for h, hub in enumerate(hubs):
             match = sum(1 for i in hub.agent_indices
                         if ag_dom[i] == req_dom[j])
+            penalty = -10.0 if capacity_spill and remaining[h] <= 0 else 0.0
             scores.append((match / max(len(hub.agent_indices), 1)
-                           + (0.0 if remaining[h] > 0 else -10.0), h))
+                           + penalty, h))
         h = max(scores)[1]
         hub_of_req.append(h)
         remaining[h] -= 1
     return hub_of_req
 
 
-def _blocks(values, k, caps, req_dom, ag_dom):
+def _blocks(values, k, caps, req_dom, ag_dom, capacity_spill=True):
     n, m = values.shape
     agent_domains = [(f"dom{d}",) for d in ag_dom]
     hubs = cluster_agents(agent_domains, [1.0] * m, k, scheme="domain")
-    hub_of_req = _route(n, k, hubs, caps, req_dom, ag_dom)
+    hub_of_req = _route(n, k, hubs, caps, req_dom, ag_dom, capacity_spill)
     blocks = {}
     for h, hub in enumerate(hubs):
         r_idx = [j for j in range(n) if hub_of_req[j] == h]
@@ -106,6 +119,11 @@ def run(smoke: bool = False, oracle: bool | None = None):
         _, t_jax = _time(
             lambda: run_sharded_auction(values, costs, caps, blocks,
                                         solver="dense-jax"), repeats)
+        run_sharded_auction(values, costs, caps, blocks,
+                            solver="pallas")             # compile once
+        _, t_pallas = _time(
+            lambda: run_sharded_auction(values, costs, caps, blocks,
+                                        solver="pallas"), repeats)
 
         w_global, w_shard = r_global.welfare, _welfare(sharded)
         frac = w_shard / max(w_global, 1e-12)
@@ -131,12 +149,36 @@ def run(smoke: bool = False, oracle: bool | None = None):
         w_gap2 = abs(_welfare(warm2) - _welfare(cold2)) / max(_welfare(cold2),
                                                               1e-12)
 
+        # cross-hub spill study: domain-PINNED routing (the router's real
+        # coarse classifier balances nothing per batch) overloads popular
+        # hubs while others keep slack; spill=True re-auctions the losers
+        # over the residual capacity and splices the rescues in
+        pblocks = _blocks(values, k, caps, req_dom, ag_dom,
+                          capacity_spill=False)
+        pin, _ = _time(lambda: run_sharded_auction(
+            values, costs, caps, pblocks, solver="dense"), 1)
+        # spill_agents widens the residual market to hubs pinned routing
+        # sent nothing (their capacity is 100% idle), like the router does
+        pin_spill, t_spill = _time(lambda: run_sharded_auction(
+            values, costs, caps, pblocks, solver="dense", spill=True,
+            spill_agents=list(range(m))), 1)
+        w_pin, w_pin_spill = _welfare(pin), _welfare(pin_spill)
+        sp = pin_spill.get(SPILL_HUB)
+        spill_stats = sp.solver_stats["spill"] if sp is not None else \
+            {"rescued": 0, "candidates": 0}
+
         cols = [f"global_us={t_global:.0f}", f"shard_us={t_shard:.0f}",
-                f"shard_jax_us={t_jax:.0f}", f"speedup={speedup:.1f}x",
+                f"shard_jax_us={t_jax:.0f}", f"shard_pallas_us={t_pallas:.0f}",
+                f"speedup={speedup:.1f}x",
                 f"welfare_frac={frac:.4f}", f"loss_bound={loss_bound:.4f}",
                 f"warm_rounds={rounds_warm}", f"cold_rounds={rounds_cold}",
                 f"warm_us={t_warm2:.0f}", f"cold_us={t_cold2:.0f}",
-                f"warm_welfare_gap={w_gap2:.1e}"]
+                f"warm_welfare_gap={w_gap2:.1e}",
+                f"pin_frac={w_pin / max(w_global, 1e-12):.4f}",
+                f"pin_spill_frac={w_pin_spill / max(w_global, 1e-12):.4f}",
+                f"spill_rescued={spill_stats['rescued']}"
+                f"/{spill_stats['candidates']}",
+                f"pin_spill_us={t_spill:.0f}"]
 
         want_oracle = oracle if oracle is not None else (row == 0)
         if want_oracle and n <= 512:
@@ -153,6 +195,14 @@ def run(smoke: bool = False, oracle: bool | None = None):
             assert w_gap2 < 1e-6, f"warm/cold welfare gap {w_gap2}"
             assert rounds_warm < rounds_cold, \
                 f"warm rounds {rounds_warm} >= cold {rounds_cold}"
+            # spill gates: pinned routing strands welfare, the cross-hub
+            # round recovers some of it without touching first-round results
+            assert spill_stats["rescued"] > 0, "spill rescued nothing"
+            assert w_pin_spill > w_pin, \
+                f"spill welfare {w_pin_spill} <= pinned {w_pin}"
+            for h in pin:
+                assert pin_spill[h].assignment == pin[h].assignment, \
+                    f"hub {h}: spill round altered a first-round result"
             # splice parity: every sharded block bit-equals a solo solve
             for h, (r_idx, a_idx) in blocks.items():
                 solo = run_auction(values[np.ix_(r_idx, a_idx)],

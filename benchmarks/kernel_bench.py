@@ -54,6 +54,25 @@ def run():
          f"jnp_oracle_us={t_ref:.0f} interpret_us={t_pal:.0f} "
          f"max_err={err:.1e}")
 
+    # auction bidding round: interpret-mode kernel vs jnp oracle (bit-equal)
+    from repro.kernels.ops import auction_bid_op
+    from repro.kernels.ref import auction_bid_ref
+
+    B = jnp.asarray(np.maximum(rng.uniform(-1, 4, (256, 384)), 0.0),
+                    jnp.float32)
+    prices = jnp.asarray(rng.uniform(0, 2, 384), jnp.float32)
+    active = jnp.asarray(rng.random(256) > 0.25)
+    t_ref = bench_call(lambda: auction_bid_ref(B, prices, active, 0.01),
+                       warmup=1, iters=3)
+    t_pal = bench_call(lambda: auction_bid_op(B, prices, active, 0.01),
+                       warmup=1, iters=3)
+    got = auction_bid_op(B, prices, active, 0.01)
+    want = auction_bid_ref(B, prices, active, 0.01)
+    exact = all(bool(jnp.array_equal(g, w)) for g, w in zip(got, want))
+    emit("kernels/auction_bid_256x384", t_pal,
+         f"jnp_oracle_us={t_ref:.0f} interpret_us={t_pal:.0f} "
+         f"bit_equal={exact}")
+
     from repro.kernels.ref import wkv6_ref
     from repro.kernels.wkv6 import wkv6
 

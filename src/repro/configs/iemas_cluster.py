@@ -32,16 +32,23 @@ class AgentProfile:
 class RouterConfig:
     """Mechanism-side knobs plumbed from configs/CLI into IEMASRouter.
 
-    ``solver`` picks the Phase-2 welfare maximizer: ``"mcmf"`` is the exact
-    pure-Python oracle, ``"dense"`` the vectorized ε-scaling auction (hot
-    path at scale), ``"dense-jax"`` its jax.jit-staged variant.
+    ``solver`` names a backend in the ``repro.core.solvers`` registry:
+    ``"mcmf"`` is the exact pure-Python oracle, ``"dense"`` the vectorized
+    ε-scaling auction (hot path at scale), ``"dense-jax"`` its
+    jax.jit-staged variant and ``"pallas"`` the staged variant with the
+    Pallas bidding kernel (interpret mode off-TPU).
 
     ``n_hubs`` shards Phase 2 across proxy hubs (§4.4): agents are clustered
     by ``hub_scheme`` and each batch's welfare matrix is auctioned per hub
-    block (the ``dense-jax`` solver batches uneven blocks through one vmapped
+    block (batch-capable solvers run uneven blocks through one vmapped
     program per shape bucket).  ``warm_start=True`` reuses each hub's final
-    slot prices as the next round's ε-scaling seed (dense solvers only; the
-    router cold-starts any hub whose live agent set changed).
+    slot prices as the next round's ε-scaling seed (backends with
+    ``supports_warm_start`` only; the router cold-starts any hub whose live
+    agent set changed).  ``spill=True`` re-auctions requests a saturated
+    hub left unmatched over every hub's residual capacity (one cross-hub
+    second round per batch; payments are Clarke pivots within each round's
+    market, so strict-DSIC deployments at ``n_hubs > 1`` should disable
+    it — see `repro.core.mechanism`).
 
     ``batched`` picks the Phase-1 QoS path: True (default) scores the full
     (n, m, F) feature tensor through the compiled Hoeffding forests in one
@@ -56,6 +63,7 @@ class RouterConfig:
     n_hubs: int = 1
     hub_scheme: str = "domain"
     warm_start: bool = False
+    spill: bool = True
     use_kernel_affinity: bool = False
     batched: bool = True
     predictor_backend: str = "numpy"

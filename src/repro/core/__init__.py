@@ -4,11 +4,12 @@ Cache-aware prediction (PrefixLedger + Hoeffding QoS), VCG/MCMF matching
 (run_auction), proxy hubs, and the Algorithm-1 router (IEMASRouter).
 """
 from repro.core.affinity import PrefixLedger, lcp_length
-from repro.core.auction import AuctionResult, run_auction, solve_allocation
-from repro.core.auction_dense import (DenseAuctionResult,
-                                      dense_clarke_payments,
-                                      solve_dense_auction,
-                                      solve_dense_auction_jax)
+from repro.core.auction import (AuctionResult, run_auction,
+                                run_sharded_auction, solve_allocation)
+from repro.core.solvers import (DenseAuctionResult, SolverBackend,
+                                available_solvers, dense_clarke_payments,
+                                get_solver, register_solver,
+                                solve_dense_auction, solve_dense_auction_jax)
 from repro.core.baselines import BASELINES
 from repro.core.hoeffding import (CompiledTree, HoeffdingTreeClassifier,
                                   HoeffdingTreeRegressor, descend,

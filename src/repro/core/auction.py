@@ -1,88 +1,46 @@
-"""Welfare-maximizing allocation (Eq. 7) + VCG Clarke-pivot payments (Eq. 8).
+"""Phase-2/3 façade: welfare matching (Eq. 7) + VCG payments (Eq. 8).
 
-Two allocation solvers (``solver=`` of :func:`run_auction`):
-  * ``mcmf``  — successive-shortest-paths min-cost max-flow (exact oracle,
-                pure Python; `repro.core.mcmf`).
-  * ``dense`` — vectorized Bertsekas ε-scaling auction over the dense weight
-                matrix (`repro.core.auction_dense`), the hot-path solver;
-                welfare is within a certified 2·n·ε of the MCMF optimum and
-                payments are batched Clarke pivots from one vectorized
-                Bellman-Ford instead of per-request Python graph walks.
+All solver selection goes through the ``core/solvers`` registry — this
+module contains NO per-solver branching.  ``run_auction`` prunes the welfare
+matrix and delegates to the named :class:`~repro.core.solvers.SolverBackend`
+(``mcmf`` exact oracle, ``dense`` NumPy auction, ``dense-jax`` staged
+auction, ``pallas`` kernelized auction — see ``available_solvers()``);
+``run_sharded_auction`` does the same per hub block, batching the blocks
+through ``solve_batch`` when the backend supports it, and optionally runs a
+cross-hub **spill** round: unmatched requests from saturated hubs re-auction
+once over the residual capacity of every hub, recovering the welfare a hard
+hub partition forfeits when one hub runs out of slots while another has
+slack.
 
-Three payment computation modes for the MCMF solver (§4.3):
-  * ``naive``     — re-solve the MCMF from scratch for every matched request
-                    (the textbook N+1-solve VCG).
-  * ``warmstart`` — ONE residual-graph shortest path per matched request:
-                    W(C\\{j}) = (W(C) - w_ij) + max(0, -SP_cost(G_f - j)).
-                    This is the paper's Hershberger-Suri-style reoptimization
-                    and is validated against ``naive`` in tests.
-  * payments from unmatched requests are 0; unmatched requests pay nothing.
-
-All welfare numbers returned are from EXACT optimization (Theorem 4.1), so
-DSIC (Theorem 4.2) holds; tests/test_auction.py empirically verifies both
-truthfulness and weak budget balance (Theorem 4.3), and
-tests/test_auction_dense.py verifies the dense solver preserves them.
+All welfare numbers returned by the exact oracle are from EXACT optimization
+(Theorem 4.1), so DSIC (Theorem 4.2) holds; the dense family is certified
+within each result's ``solver_stats["gap_bound"]``.  tests/test_auction.py
+empirically verifies truthfulness and weak budget balance (Theorem 4.3), and
+tests/test_auction_dense.py + tests/test_auction_pallas.py verify the dense
+backends preserve them.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
 import numpy as np
 
-from repro.core.auction_dense import (dense_clarke_payments,
-                                      solve_dense_auction,
-                                      solve_dense_auction_jax,
-                                      solve_dense_auction_jax_batch)
-from repro.core.mcmf import (FlowNetwork, residual_shortest_path,
-                             solve_min_cost_flow)
+from repro.core.solvers import (AuctionResult, available_solvers, get_solver,
+                                solve_allocation)
+
+__all__ = ["AuctionResult", "run_auction", "run_sharded_auction",
+           "client_utilities", "solve_allocation", "available_solvers",
+           "SPILL_HUB"]
+
+#: pseudo hub id under which run_sharded_auction(..., spill=True) returns the
+#: cross-hub second-round result; its request/agent indices are GLOBAL and
+#: live in the result's solver_stats["spill"] block.
+SPILL_HUB = -1
 
 
-@dataclass
-class AuctionResult:
-    """One Phase-2 solve: allocation, welfare, payments + solver stats."""
-
-    assignment: list            # request j -> agent index or -1
-    welfare: float              # W(C)
-    payments: list              # VCG payment per request (0 if unmatched)
-    weights: np.ndarray         # w_ij matrix used
-    costs: np.ndarray           # c_ij matrix used
-    solver_stats: dict = field(default_factory=dict)
-
-
-def _build_network(w: np.ndarray, caps):
-    n, m = w.shape
-    s, t = n + m, n + m + 1
-    g = FlowNetwork(n + m + 2)
-    req_edges = []
-    for j in range(n):
-        req_edges.append(g.add_edge(s, j, 1.0, 0.0))
-    match_edges = {}
-    for j in range(n):
-        for i in range(m):
-            if w[j, i] > 0:
-                match_edges[(j, i)] = g.add_edge(j, n + i, 1.0, -float(w[j, i]))
-    sink_edges = [g.add_edge(n + i, t, float(caps[i]), 0.0) for i in range(m)]
-    g.match_edges = match_edges
-    g.sink_edges = sink_edges
-    return g, s, t, match_edges
-
-
-def solve_allocation(w: np.ndarray, caps) -> tuple[list, float, FlowNetwork]:
-    """Max-weight b-matching via MCMF. Returns (assignment, welfare, residual)."""
-    n, m = w.shape
-    g, s, t, match_edges = _build_network(w, caps)
-    flow, cost, _pot = solve_min_cost_flow(g, s, t)
-    assignment = [-1] * n
-    for (j, i), eid in match_edges.items():
-        if g.cap[eid] <= 1e-9:  # saturated forward edge = matched
-            assignment[j] = i
-    return assignment, -cost, g
-
-
-def _welfare_without(w: np.ndarray, caps, j: int) -> float:
-    w2 = np.delete(w, j, axis=0)
-    _, wf, _ = solve_allocation(w2, caps)
-    return wf
+def _prune(values, costs) -> np.ndarray:
+    """Welfare weights w_ij = v_ij - c_ij with non-positive pairs pruned."""
+    w = np.asarray(values, dtype=np.float64) - np.asarray(costs,
+                                                          dtype=np.float64)
+    return np.where(w > 0, w, 0.0)
 
 
 def run_auction(values: np.ndarray, costs: np.ndarray, caps,
@@ -92,85 +50,19 @@ def run_auction(values: np.ndarray, costs: np.ndarray, caps,
     """values/costs: [N requests, M agents] predicted v_ij and c_ij.
 
     Welfare weights w_ij = v_ij - c_ij; non-positive pairs pruned (Alg. 1).
-    ``solver`` picks the Phase-2 allocator: ``"mcmf"`` (exact oracle) or
-    ``"dense"`` (vectorized ε-scaling auction; ``"dense-jax"`` stages the
-    bidding loop through jax.jit). The dense solvers compute payments in one
-    batched pass regardless of ``payment_mode``, and accept a warm-start
-    slot-price seed via ``start_prices`` (ignored by the mcmf oracle, which
-    has no persistent duals); the final duals come back in
+    ``solver`` names a registered backend (``available_solvers()``); the
+    dense family computes payments in one batched pass regardless of
+    ``payment_mode`` and accepts a warm-start slot-price seed via
+    ``start_prices`` (silently dropped for backends without persistent
+    duals, e.g. the mcmf oracle); the final duals come back in
     ``solver_stats["slot_prices"]`` for the caller's price book.
     """
-    w = np.asarray(values, dtype=np.float64) - np.asarray(costs, dtype=np.float64)
-    w = np.where(w > 0, w, 0.0)
-    n, m = w.shape
-    if solver in ("dense", "dense-jax"):
-        return _run_dense(w, np.asarray(costs, dtype=np.float64), caps, solver,
-                          start_prices)
-    if solver != "mcmf":
-        raise ValueError(f"unknown solver {solver!r}")
-    assignment, welfare, gf = solve_allocation(w, caps)
-
-    payments = [0.0] * n
-    n_resolves = 0
-    for j, i in enumerate(assignment):
-        if i < 0:
-            continue
-        w_ij = w[j, i]
-        c_ij = float(costs[j, i])
-        if payment_mode == "naive":
-            w_without = _welfare_without(w, caps, j)
-            n_resolves += 1
-        else:
-            # warmstart: cancel j's unit; the only NEW residual capacity is
-            # one unit on (agent i -> t). The optimum without j improves over
-            # (W - w_ij) by at most one augmenting walk that consumes that
-            # unit: either a path s~>i->t (a displaced request gets matched)
-            # or a cycle t~>i->t (an existing match reroutes onto agent i).
-            g2 = gf.clone()
-            s, t = n + m, n + m + 1
-            _cancel_unit(g2, s, j, n + i, t)
-            # block the i->t arc itself (both directions): the improving walk
-            # ends there conceptually; traversing it mid-walk would re-use
-            # the single freed unit and creates negative cycles for BF.
-            sink_eid = gf.sink_edges[i]
-            be = {sink_eid, sink_eid ^ 1}
-            d_s, _ = residual_shortest_path(g2, s, n + i, blocked={j},
-                                            blocked_edges=be)
-            d_t, _ = residual_shortest_path(g2, t, n + i, blocked={j},
-                                            blocked_edges=be)
-            d = min(d_s, d_t)
-            gain = max(0.0, -d) if d != float("inf") else 0.0
-            w_without = (welfare - w_ij) + gain
-        # Eq. 8: p_j = W(C\{j}) - (W(C) - w_ij) + c_ij
-        payments[j] = w_without - (welfare - w_ij) + c_ij
-
-    return AuctionResult(
-        assignment=assignment, welfare=welfare, payments=payments,
-        weights=w, costs=np.asarray(costs, dtype=np.float64),
-        solver_stats={"solver": "mcmf", "payment_mode": payment_mode,
-                      "resolves": n_resolves},
-    )
-
-
-def _dense_stats(solver: str, res) -> dict:
-    return {"solver": solver, "payment_mode": "dual-batched",
-            "phases": res.phases, "rounds": res.rounds,
-            "eps": res.eps, "gap_bound": res.gap_bound,
-            "slot_prices": res.slot_prices, "slot_agent": res.slot_agent,
-            "warm_started": res.warm_started, "warm_fallback": res.fallback}
-
-
-def _run_dense(w: np.ndarray, costs: np.ndarray, caps, solver: str,
-               start_prices: np.ndarray | None = None) -> AuctionResult:
-    solve = solve_dense_auction_jax if solver == "dense-jax" \
-        else solve_dense_auction
-    res = solve(w, caps, start_prices=start_prices)
-    payments = dense_clarke_payments(w, costs, caps, res.assignment)
-    return AuctionResult(
-        assignment=list(res.assignment), welfare=res.welfare,
-        payments=payments, weights=w, costs=costs,
-        solver_stats=_dense_stats(solver, res),
-    )
+    backend = get_solver(solver)
+    if not backend.supports_warm_start:
+        start_prices = None
+    return backend.solve(_prune(values, costs),
+                         np.asarray(costs, dtype=np.float64), caps,
+                         payment_mode=payment_mode, start_prices=start_prices)
 
 
 def run_sharded_auction(values: np.ndarray, costs: np.ndarray, caps,
@@ -178,6 +70,8 @@ def run_sharded_auction(values: np.ndarray, costs: np.ndarray, caps,
                         payment_mode: str = "warmstart",
                         solver: str = "mcmf",
                         start_prices: dict[int, np.ndarray] | None = None,
+                        spill: bool = False,
+                        spill_agents: list[int] | None = None,
                         ) -> dict[int, AuctionResult]:
     """Phase 2 sharded across proxy hubs: one independent auction per block.
 
@@ -186,62 +80,98 @@ def run_sharded_auction(values: np.ndarray, costs: np.ndarray, caps,
     agent-disjoint (the hub partition guarantees it), so the per-hub results
     splice into a global matching without capacity conflicts.  Every result
     is *identical* to calling :func:`run_auction` on that block alone — the
-    only difference is scheduling: for ``dense-jax`` all blocks are padded
-    into shape buckets and solved by one vmapped program per bucket
-    (`solve_dense_auction_jax_batch`) instead of one dispatch per hub.
+    only difference is scheduling: backends with ``supports_batch`` solve
+    all blocks padded into shape buckets by one vmapped program per bucket
+    instead of one dispatch per hub.
 
     ``start_prices[h]`` warm-starts hub h's dense solve (see
     `repro.core.hub.SlotPriceBook` for the cache-keying contract).
 
+    ``spill=True`` adds a cross-hub second round: requests left unmatched by
+    their hub's auction bid once more over the residual capacity of ALL hub
+    agents (hard hub pinning strands exactly this welfare when a hub
+    saturates), and the extra result lands under :data:`SPILL_HUB` with its
+    GLOBAL request/agent index lists in ``solver_stats["spill"]``.  First-
+    round results are never altered, so the splice-parity contract above
+    still holds hub by hub.  ``spill_agents`` widens the residual market to
+    agents outside every block (a hub that received no requests this batch
+    still has slack worth spilling onto); it defaults to the union of the
+    blocks' agents.
+
     Returns ``{hub_id: AuctionResult}`` — assignments/payments indexed
-    *within* the block; the caller maps them back through ``blocks[h]``.
+    *within* the block; the caller maps them back through ``blocks[h]``
+    (and through ``solver_stats["spill"]`` for the spill round).
     """
     values = np.asarray(values, dtype=np.float64)
     costs = np.asarray(costs, dtype=np.float64)
+    backend = get_solver(solver)
     sp = start_prices or {}
-    out: dict[int, AuctionResult] = {}
-    if solver == "dense-jax" and len(blocks) > 1:
-        hub_ids = sorted(blocks)
-        ws, costs_b, caps_b, seeds = [], [], [], []
-        for h in hub_ids:
-            r_idx, a_idx = blocks[h]
-            v = values[np.ix_(r_idx, a_idx)]
-            c = costs[np.ix_(r_idx, a_idx)]
-            ws.append(np.where(v - c > 0, v - c, 0.0))
-            costs_b.append(c)
-            caps_b.append([caps[i] for i in a_idx])
-            seeds.append(sp.get(h))
-        dres = solve_dense_auction_jax_batch(ws, caps_b,
-                                             start_prices_list=seeds)
-        for h, w, c, cb, res in zip(hub_ids, ws, costs_b, caps_b, dres):
-            payments = dense_clarke_payments(w, c, cb, res.assignment)
-            out[h] = AuctionResult(
-                assignment=list(res.assignment), welfare=res.welfare,
-                payments=payments, weights=w, costs=c,
-                solver_stats=_dense_stats(solver, res))
-        return out
-    for h, (r_idx, a_idx) in blocks.items():
-        out[h] = run_auction(values[np.ix_(r_idx, a_idx)],
-                             costs[np.ix_(r_idx, a_idx)],
-                             [caps[i] for i in a_idx],
-                             payment_mode=payment_mode, solver=solver,
-                             start_prices=sp.get(h))
+    hub_ids = sorted(blocks)
+    ws, costs_b, caps_b, seeds = [], [], [], []
+    for h in hub_ids:
+        r_idx, a_idx = blocks[h]
+        ws.append(_prune(values[np.ix_(r_idx, a_idx)],
+                         costs[np.ix_(r_idx, a_idx)]))
+        costs_b.append(costs[np.ix_(r_idx, a_idx)])
+        caps_b.append([caps[i] for i in a_idx])
+        seeds.append(sp.get(h) if backend.supports_warm_start else None)
+    if backend.supports_batch and len(blocks) > 1:
+        results = backend.solve_batch(ws, costs_b, caps_b,
+                                      payment_mode=payment_mode,
+                                      start_prices_list=seeds)
+    else:
+        results = [backend.solve(w, c, cb, payment_mode=payment_mode,
+                                 start_prices=s)
+                   for w, c, cb, s in zip(ws, costs_b, caps_b, seeds)]
+    out = dict(zip(hub_ids, results))
+    if spill:
+        spill_res = _spill_round(values, costs, caps, blocks, out, backend,
+                                 payment_mode, spill_agents)
+        if spill_res is not None:
+            out[SPILL_HUB] = spill_res
     return out
 
 
-def _cancel_unit(g: FlowNetwork, s: int, j: int, agent_node: int, t: int):
-    """Remove one unit of flow along s->j->agent->t in a residual network."""
-    def _undo(u, v):
-        for eid in g.adj[u]:
-            if g.to[eid] == v and eid % 2 == 0 and g.cap[eid ^ 1] > 1e-12:
-                g.cap[eid] += 1.0
-                g.cap[eid ^ 1] -= 1.0
-                return True
-        return False
+def _spill_round(values, costs, caps, blocks, results, backend,
+                 payment_mode, spill_agents=None) -> AuctionResult | None:
+    """One cross-hub re-auction of first-round losers over residual slots.
 
-    assert _undo(s, j), "request j was not matched"
-    assert _undo(j, agent_node), "no flow j->i"
-    assert _undo(agent_node, t), "no flow i->t"
+    Gathers every request its hub left unmatched, computes each agent's
+    residual capacity after the first round, and runs ONE more auction
+    (same backend) over that global residual market.  Welfare can only
+    increase: first-round matches are untouched and residual capacity was,
+    by construction, going unused.  Returns None when there is nothing to
+    re-auction (no losers, no slack, or no positive cross-hub edge).
+    """
+    r_idx: list[int] = []
+    used: dict[int, int] = {}
+    for h in sorted(blocks):
+        br, ba = blocks[h]
+        res = results[h]
+        for lj, j in enumerate(br):
+            li = res.assignment[lj]
+            if li < 0:
+                r_idx.append(j)
+            else:
+                used[ba[li]] = used.get(ba[li], 0) + 1
+    universe = spill_agents if spill_agents is not None else \
+        {i for h in blocks for i in blocks[h][1]}
+    a_idx = sorted(i for i in set(universe)
+                   if caps[i] - used.get(i, 0) > 0)
+    if not r_idx or not a_idx:
+        return None
+    w = _prune(values[np.ix_(r_idx, a_idx)], costs[np.ix_(r_idx, a_idx)])
+    if float(w.max(initial=0.0)) <= 0.0:
+        return None
+    res = backend.solve(w, costs[np.ix_(r_idx, a_idx)],
+                        [caps[i] - used.get(i, 0) for i in a_idx],
+                        payment_mode=payment_mode, start_prices=None)
+    res.solver_stats["spill"] = {
+        "r_idx": r_idx, "a_idx": a_idx,
+        "candidates": len(r_idx),
+        "rescued": sum(1 for a in res.assignment if a >= 0),
+    }
+    return res
 
 
 def client_utilities(result: AuctionResult, true_values: np.ndarray) -> np.ndarray:

@@ -1,106 +1,18 @@
-"""Dense ε-scaling auction solver for the Phase-2 welfare matching (Eq. 7).
+"""Back-compat shim: the dense auction now lives in ``repro.core.solvers``.
 
-Drop-in alternative to the pure-Python successive-shortest-paths MCMF
-(`repro.core.mcmf`) for the router's hot path.  Max-weight b-matching over a
-dense (n_requests x n_agents) weight matrix is solved by Bertsekas' auction
-algorithm with ε-scaling, fully vectorized in NumPy (one Jacobi bidding round
-= a handful of array ops), plus a `jax.jit`-able variant whose bidding rounds
-run inside `lax.while_loop` so the whole solve stages into one XLA program.
-
-Formulation
------------
-Each agent i with capacity b_i is expanded into min(b_i, n) identical unit
-slots; requests bid for slots.  A request may also stay unmatched (outside
-option with profit 0).  Within a phase the algorithm maintains ε-CS: every
-assigned request's profit is within ε of its best available option
-(including the outside option), and parked (voluntarily unmatched) requests
-have no option with profit > ε.
-
-Between scaling phases, assignments AND prices are kept; only requests whose
-ε-CS is violated at the tighter ε are evicted and re-bid.  Forward bidding
-never lowers a price — lowering a contested price replays the bidding war in
-ε-sized steps, which is exactly the pathology scaling exists to avoid.
-Instead, the asymmetric-assignment condition (free slots must carry price 0,
-the outside option playing Bertsekas–Castañón's λ = 0) is maintained by
-REVERSE auction rounds after each forward settle: a free slot whose price is
-still positive lowers it to the second-best support level β₂ − ε and grabs
-the best-supporting request (exactly preserving ε-CS for everyone else), or
-drops to 0 when no request supports even that.  Forward and reverse rounds
-alternate until neither has work; the assignment is then certified within
-2·n·ε_final of the true optimum — with the default ε_final this is far
-below any payment/valuation tolerance used in the system.
-
-Warm starts (cross-round price reuse)
--------------------------------------
-The serving loop re-auctions statistically similar request sets every few
-hundred milliseconds, so the previous round's final slot prices are already
-near the new round's equilibrium.  ``start_prices=`` seeds the solve from
-them.  Soundness: Bertsekas' auction terminates with ε-CS satisfied from
-*any* non-negative initial price vector — the certificate (2·n·ε_final)
-depends only on the final ε, never on where prices started.  What warm
-prices buy is fewer bidding rounds: the ε-scaling schedule can skip its
-coarse phases (warm solves start at ε₀ = wmax/θ³ instead of wmax/θ) and
-most requests' first bid sticks.  What they can cost is extra rounds when
-the guess is bad — overpriced free slots re-anchor to their support level
-in one reverse step, but underpriced contested slots replay the bidding war
-in ε-sized increments; the solve therefore runs the warm attempt under a
-bounded round budget and transparently falls back to a cold solve when it
-trips (``result.fallback``).  Warm starts are *unsound*
-to reuse across a changed slot layout — caller contract is: same agent set,
-same per-agent slot ordering (``SlotPriceBook`` in `repro.core.hub` keys
-stored prices by hub id + elastic agent-set version to enforce this).
-
-Worked example
---------------
-Two requests, two unit-capacity agents.  Both requests prefer agent 0, but
-assigning request 1 there would strand request 0's larger surplus, so the
-welfare optimum splits them (3.0 + 0.5 = 3.5 beats 2.0 + 1.0 = 3.0):
-
->>> import numpy as np
->>> from repro.core.auction_dense import solve_dense_auction
->>> w = np.array([[3.0, 1.0],
-...               [2.0, 0.5]])
->>> res = solve_dense_auction(w, [1, 1])
->>> res.assignment                     # request j -> agent index
-[0, 1]
->>> res.welfare
-3.5
->>> res.gap_bound < 1e-6               # certified distance to the optimum
-True
-
-Re-solving the same market seeded from the final prices converges without
-re-running the coarse ε phases and certifies the same welfare:
-
->>> warm = solve_dense_auction(w, [1, 1], start_prices=res.slot_prices)
->>> (warm.assignment, warm.welfare) == (res.assignment, res.welfare)
-True
->>> warm.warm_started and not warm.fallback
-True
-
-Payments
---------
-VCG Clarke-pivot payments (Eq. 8) need W(C \\ {j}) for every matched j.
-Instead of per-request counterfactual re-solves, `dense_clarke_payments`
-computes every counterfactual simultaneously: one *batched* Bellman-Ford over
-the residual graph of the final matching (batch dimension = matched request),
-where each batch member blocks its own request node and its agent's sink arc,
-mirroring `auction.run_auction`'s warm-start logic exactly but in O(B·n·m)
-vectorized relaxations instead of Python graph walks.
-
-Hub sharding
-------------
-`solve_dense_auction_jax_batch` solves many independent hub blocks of
-uneven (n_h, K_h) shape as ONE traced program per shape bucket: blocks are
-padded to power-of-two (n, K) buckets with zero-weight rows/columns and the
-bucket is solved by `jax.vmap` of the staged solver.  Zero padding is
-behavior-neutral — a padded request's best profit is ≤ 0 so it parks on its
-first bid, and a padded slot carries price 0 and weight 0 so it neither
-attracts bids (bids require strictly positive profit) nor goes stale in
-reverse rounds (stale needs price > 0).
+The PR-1 monolith was split into the pluggable solver-backend package —
+``solvers/dense_np.py`` (float64 NumPy reference), ``solvers/dense_jax.py``
+(jit-staged + vmapped shape buckets), ``solvers/pallas_backend.py`` (Pallas
+bidding kernel) and ``solvers/dense_common.py`` (slot expansion, ε
+schedules, Clarke payments).  This module re-exports the historical public
+names so existing imports keep working; new code should import from
+``repro.core.solvers`` directly.
 """
-from __future__ import annotations
-
-import numpy as np
+from repro.core.solvers.dense_common import (DenseAuctionResult,
+                                             dense_clarke_payments)
+from repro.core.solvers.dense_jax import (solve_dense_auction_jax,
+                                          solve_dense_auction_jax_batch)
+from repro.core.solvers.dense_np import solve_dense_auction
 
 __all__ = [
     "DenseAuctionResult",
@@ -109,732 +21,3 @@ __all__ = [
     "solve_dense_auction_jax_batch",
     "dense_clarke_payments",
 ]
-
-# gap_bound = 2 * n * eps_final; the default keeps it below 1e-7 for any
-# n <= ~500 at unit weight scale, comfortably inside the 1e-6 tolerances
-# used by the mechanism tests.
-_EPS_FINAL_REL = 1e-10
-_THETA = 5.0
-# warm solves skip the coarsest scaling phases (ε₀ = wmax/θ³ vs wmax/θ) and
-# run under a bounded round budget; tripping it falls back to a cold solve
-_WARM_ROUNDS_PER_NODE = 40
-_WARM_ROUNDS_FLOOR = 2_000
-
-
-class DenseAuctionResult:
-    """Allocation + dual state of one dense-auction solve."""
-
-    __slots__ = ("assignment", "welfare", "slot_prices", "slot_agent",
-                 "profits", "eps", "phases", "rounds", "gap_bound",
-                 "warm_started", "fallback")
-
-    def __init__(self, assignment, welfare, slot_prices, slot_agent, profits,
-                 eps, phases, rounds, gap_bound, warm_started=False,
-                 fallback=False):
-        self.assignment = assignment        # request j -> agent index or -1
-        self.welfare = welfare              # sum of matched w_ij
-        self.slot_prices = slot_prices      # dual price per unit slot
-        self.slot_agent = slot_agent        # slot -> agent index
-        self.profits = profits              # per-request profit pi_j
-        self.eps = eps                      # final epsilon
-        self.phases = phases
-        self.rounds = rounds                # total Jacobi bidding rounds
-        self.gap_bound = gap_bound          # certified welfare gap (2*n*eps)
-        self.warm_started = warm_started    # seeded from prior slot prices
-        self.fallback = fallback            # warm attempt tripped -> re-ran cold
-
-
-def _expand_slots(caps, n: int) -> np.ndarray:
-    caps = np.asarray([int(c) for c in caps], dtype=np.int64)
-    if (caps < 0).any():
-        raise ValueError("negative capacity")
-    return np.repeat(np.arange(len(caps)), np.minimum(caps, n))
-
-
-def solve_dense_auction(w: np.ndarray, caps, *, eps_final: float | None = None,
-                        theta: float = _THETA,
-                        max_rounds: int = 500_000,
-                        start_prices: np.ndarray | None = None,
-                        start_eps: float | None = None) -> DenseAuctionResult:
-    """ε-scaling auction over dense weights. w[j, i] <= 0 means "no edge".
-
-    ``start_prices`` (length = total unit slots, i.e. ``sum(min(b_i, n))``)
-    seeds the duals from a previous solve of a similar market; the warm
-    attempt starts its ε schedule at ``start_eps`` (default wmax/θ²) and is
-    round-budgeted — on budget exhaustion the solve silently restarts cold
-    (``result.fallback`` reports it).  The optimality certificate is
-    identical either way: 2·n·ε_final regardless of starting prices.
-    """
-    w = np.asarray(w, dtype=np.float64)
-    n, m = w.shape
-    slot_agent = _expand_slots(caps, n)
-    K = len(slot_agent)
-    empty = DenseAuctionResult([-1] * n, 0.0, np.zeros(K), slot_agent,
-                               np.zeros(n), 0.0, 0, 0, 0.0)
-    if n == 0 or K == 0:
-        return empty
-    B = np.maximum(w, 0.0)[:, slot_agent]          # (n, K) slot-level weights
-    wmax = float(B.max(initial=0.0))
-    if wmax <= 0.0:
-        return empty
-    if eps_final is None:
-        eps_final = _EPS_FINAL_REL * max(wmax, 1.0)
-    cold_eps0 = max(wmax / theta, eps_final)
-    if start_prices is None:
-        return _solve_dense_numpy(w, B, slot_agent, np.zeros(K), cold_eps0,
-                                  eps_final, theta, max_rounds)
-    p0 = np.clip(np.asarray(start_prices, dtype=np.float64), 0.0, None)
-    if p0.shape != (K,):
-        raise ValueError(f"start_prices shape {p0.shape} does not match the "
-                         f"slot layout ({K},) for this (caps, n)")
-    eps0 = start_eps if start_eps is not None \
-        else max(wmax / theta ** 3, eps_final)
-    eps0 = min(max(eps0, eps_final), cold_eps0)
-    budget = min(max_rounds,
-                 _WARM_ROUNDS_PER_NODE * (n + K) + _WARM_ROUNDS_FLOOR)
-    try:
-        res = _solve_dense_numpy(w, B, slot_agent, p0, eps0, eps_final,
-                                 theta, budget)
-        res.warm_started = True
-        return res
-    except RuntimeError:
-        res = _solve_dense_numpy(w, B, slot_agent, np.zeros(K), cold_eps0,
-                                 eps_final, theta, max_rounds)
-        res.warm_started = True
-        res.fallback = True
-        return res
-
-
-def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
-                       max_rounds) -> DenseAuctionResult:
-    """The forward/reverse ε-scaling loop from a given (prices, ε₀) state."""
-    n, K = B.shape
-    m = w.shape[1]
-    eps = eps0
-    # absolute slack for ε-CS tests: comparisons happen at price magnitude
-    # ~wmax, where a relative-only slack can fall below one ulp and turn an
-    # exactly-ε equilibrium gap into a perpetual evict/re-bid cycle.
-    tol = eps_final / 8.0
-
-    prices = prices0.copy()
-    owner = np.full(K, -1, dtype=np.int64)          # slot -> request
-    slot_of = np.full(n, -1, dtype=np.int64)        # request -> slot
-    parked = np.zeros(n, dtype=bool)
-    rows = np.arange(n)
-    phases = 0
-    rounds = [0]
-
-    def _evict(eps) -> bool:
-        """Unpark/evict requests whose ε-CS fails at current prices; returns
-        whether anything is left to bid.
-
-        Prices are kept (forward bidding never lowers them): freed slots
-        retain their duals so re-bidding starts near the previous phase's
-        equilibrium; reverse rounds handle price decreases."""
-        v1 = (B - prices).max(axis=1)
-        assigned = slot_of >= 0
-        prof = np.where(assigned, B[rows, np.maximum(slot_of, 0)]
-                        - prices[np.maximum(slot_of, 0)], 0.0)
-        np.logical_and(parked, v1 <= eps + tol, out=parked)
-        # best available option includes the outside option (profit 0): a
-        # request left at profit < -ε by an earlier coarser phase must leave
-        viol = assigned & (prof < np.maximum(v1, 0.0) - eps - tol)
-        if viol.any():
-            owner[slot_of[viol]] = -1
-            slot_of[viol] = -1
-        return bool(((slot_of < 0) & ~parked).any())
-
-    def _bid_until_settled(eps):
-        """Jacobi bidding rounds until every request is assigned or parked."""
-        while True:
-            active = np.nonzero((slot_of < 0) & ~parked)[0]
-            if len(active) == 0:
-                return
-            rounds[0] += 1
-            if rounds[0] > max_rounds:
-                raise RuntimeError(
-                    f"dense auction failed to converge in {max_rounds} rounds"
-                    f" (n={n}, m={m}, eps={eps:g})")
-            P = B[active] - prices                       # (A, K) profits
-            v1 = P.max(axis=1)
-            k1 = P.argmax(axis=1)
-            P[np.arange(len(active)), k1] = -np.inf
-            v2 = np.maximum(P.max(axis=1), 0.0)          # incl. outside option
-            wants = v1 > 0.0
-            parked[active[~wants]] = True                # outside option wins
-            bidders = active[wants]
-            if len(bidders) == 0:
-                continue
-            kb = k1[wants]
-            bid = prices[kb] + (v1[wants] - v2[wants]) + eps
-            # per-slot winner: highest bid, ties to the lowest request index
-            best = np.full(K, -np.inf)
-            np.maximum.at(best, kb, bid)
-            winner = np.full(K, n, dtype=np.int64)
-            at_best = bid == best[kb]                    # exact float match
-            np.minimum.at(winner, kb[at_best], bidders[at_best])
-            slots_won = np.nonzero(winner < n)[0]
-            # displace previous owners first (a displaced request may itself
-            # be winning a different slot this very round)
-            prev = owner[slots_won]
-            slot_of[prev[prev >= 0]] = -1
-            owner[slots_won] = winner[slots_won]
-            slot_of[winner[slots_won]] = slots_won
-            prices[slots_won] = best[slots_won]
-
-    def _reverse_until_clean(eps) -> None:
-        """Reverse auction rounds: every free slot with a positive (stale)
-        price lowers it to β₂ − ε — the second-best support over requests —
-        and grabs its best supporter, or drops to 0 when unsupported.
-        Price decreases of ≥ ε (or request-profit gains of ≥ ε) bound the
-        number of rounds; ε-CS is preserved exactly (Bertsekas–Castañón)."""
-        while True:
-            stale = np.nonzero((owner < 0) & (prices > 0.0))[0]
-            if len(stale) == 0:
-                return
-            rounds[0] += 1
-            if rounds[0] > max_rounds:
-                raise RuntimeError("dense auction reverse rounds exceeded "
-                                   f"{max_rounds} (n={n}, m={m})")
-            assigned = slot_of >= 0
-            pi = np.where(assigned, B[rows, np.maximum(slot_of, 0)]
-                          - prices[np.maximum(slot_of, 0)], 0.0)
-            V = B[:, stale] - pi[:, None]            # support for each slot
-            b1 = V.max(axis=0)
-            j1 = V.argmax(axis=0)
-            V[j1, np.arange(len(stale))] = -np.inf
-            b2 = V.max(axis=0) if n > 1 else np.full(len(stale), -np.inf)
-            weak = b1 <= eps                         # nobody worth grabbing
-            prices[stale[weak]] = 0.0
-            ks = stale[~weak]
-            if len(ks) == 0:
-                continue
-            js = j1[~weak]
-            newp = np.maximum(b2[~weak] - eps, 0.0)
-            # request-side conflicts: accept the best offer, ties to the
-            # lowest slot index
-            off = B[js, ks] - newp
-            bestoff = np.full(n, -np.inf)
-            np.maximum.at(bestoff, js, off)
-            at_best = off == bestoff[js]
-            take = np.full(n, K, dtype=np.int64)
-            np.minimum.at(take, js[at_best], ks[at_best])
-            sel = take[js] == ks
-            ks, js, newp = ks[sel], js[sel], newp[sel]
-            old = slot_of[js]
-            owner[old[old >= 0]] = -1    # freed, keeps price (maybe stale)
-            prices[ks] = newp
-            owner[ks] = js
-            slot_of[js] = ks
-            parked[js] = False
-
-    while True:
-        phases += 1
-        # forward/reverse alternation at this ε until neither has work
-        for _ in range(8 * (n + K) + 8):
-            if _evict(eps):
-                _bid_until_settled(eps)
-                _reverse_until_clean(eps)
-                continue
-            if ((owner < 0) & (prices > 0.0)).any():
-                _reverse_until_clean(eps)
-                continue
-            break
-        else:
-            raise RuntimeError("dense auction forward/reverse alternation "
-                               f"failed to settle (n={n}, m={m}, eps={eps:g})")
-        if eps <= eps_final * (1.0 + 1e-12):
-            break
-        eps = max(eps / theta, eps_final)
-
-    assignment = np.where(slot_of >= 0, slot_agent[np.maximum(slot_of, 0)], -1)
-    welfare = float(np.where(slot_of >= 0,
-                             w[rows, np.maximum(assignment, 0)], 0.0).sum())
-    profits = np.where(slot_of >= 0,
-                       B[rows, np.maximum(slot_of, 0)]
-                       - prices[np.maximum(slot_of, 0)], 0.0)
-    return DenseAuctionResult(
-        [int(a) for a in assignment], welfare, prices, slot_agent, profits,
-        eps, phases, rounds[0], 2.0 * n * eps)
-
-
-# --------------------------------------------------------------------------
-# jax.jit-able variant: identical algorithm, bidding rounds inside
-# lax.while_loop (fixed iteration cap) so the solve is one staged program.
-# --------------------------------------------------------------------------
-_JAX_CACHE: dict = {}
-
-
-def _build_jax_solver(max_rounds: int):
-    import jax  # noqa: F401  (kept for parity with the jit/vmap wrappers)
-    import jax.numpy as jnp
-    from jax import lax
-
-    def solve(B, p0, eps0, eps_final, theta):
-        n, K = B.shape
-        rows = jnp.arange(n)
-        big = jnp.asarray(jnp.finfo(B.dtype).max / 4, B.dtype)
-        tol = eps_final / 8.0
-
-        def cs_state(prices, owner, slot_of, parked, eps):
-            """(unpark-violators, evict-violators, any-stale) predicates."""
-            v1 = (B - prices[None, :]).max(axis=1)
-            assigned = slot_of >= 0
-            prof = jnp.where(assigned,
-                             B[rows, jnp.maximum(slot_of, 0)]
-                             - prices[jnp.maximum(slot_of, 0)], 0.0)
-            unpark = parked & (v1 > eps + tol)
-            viol = assigned & (prof < jnp.maximum(v1, 0.0) - eps - tol)
-            stale = (owner < 0) & (prices > 0.0)
-            return unpark, viol, stale
-
-        def evict(prices, owner, slot_of, parked, eps):
-            # prices are KEPT: with unchanged prices the eviction pass is
-            # idempotent, so a single sweep suffices (no cascade loop)
-            unpark, viol, _ = cs_state(prices, owner, slot_of, parked, eps)
-            parked = parked & ~unpark
-            owner = owner.at[jnp.where(viol, slot_of, K)].set(
-                -1, mode="drop")
-            slot_of = jnp.where(viol, -1, slot_of)
-            return owner, slot_of, parked
-
-        def bid_until_settled(prices, owner, slot_of, parked, eps, rounds):
-            def bid_cond(st):
-                _prices, _owner, slot_of, parked, r = st
-                return ((slot_of < 0) & ~parked).any() & (r < max_rounds)
-
-            def bid_body(st):
-                prices, owner, slot_of, parked, r = st
-                active = (slot_of < 0) & ~parked
-                P = jnp.where(active[:, None], B - prices[None, :], -big)
-                v1 = P.max(axis=1)
-                k1 = P.argmax(axis=1)
-                P2 = P.at[rows, k1].set(-big)
-                v2 = jnp.maximum(P2.max(axis=1), 0.0)
-                bidder = active & (v1 > 0.0)
-                parked = parked | (active & (v1 <= 0.0))
-                bid = jnp.where(bidder, prices[k1] + (v1 - v2) + eps, -big)
-                kb = jnp.where(bidder, k1, K)
-                best = jnp.full((K,), -big, B.dtype).at[kb].max(
-                    bid, mode="drop")
-                at_best = bidder & (bid == best[jnp.minimum(kb, K - 1)])
-                winner = jnp.full((K,), n, jnp.int32).at[
-                    jnp.where(at_best, kb, K)].min(
-                        rows.astype(jnp.int32), mode="drop")
-                won = winner < n
-                new_owner = jnp.where(won, winner, owner)
-                # displaced: my slot is now owned by someone else
-                displaced = (slot_of >= 0) & (
-                    new_owner[jnp.maximum(slot_of, 0)] != rows)
-                slot_of = jnp.where(displaced, -1, slot_of)
-                slot_won = jnp.full((n,), -1, jnp.int32).at[
-                    jnp.where(won, winner, n)].set(
-                        jnp.arange(K, dtype=jnp.int32), mode="drop")
-                slot_of = jnp.where(slot_won >= 0, slot_won, slot_of)
-                prices = jnp.where(won, best, prices)
-                return prices, new_owner, slot_of, parked, r + 1
-
-            return lax.while_loop(
-                bid_cond, bid_body, (prices, owner, slot_of, parked, rounds))
-
-        def reverse_until_clean(prices, owner, slot_of, parked, eps, rounds):
-            def rev_cond(st):
-                prices, owner, _slot_of, _parked, r = st
-                return ((owner < 0) & (prices > 0.0)).any() & (r < max_rounds)
-
-            def rev_body(st):
-                prices, owner, slot_of, parked, r = st
-                stale = (owner < 0) & (prices > 0.0)
-                assigned = slot_of >= 0
-                pi = jnp.where(assigned,
-                               B[rows, jnp.maximum(slot_of, 0)]
-                               - prices[jnp.maximum(slot_of, 0)], 0.0)
-                V = jnp.where(stale[None, :], B - pi[:, None], -big)
-                b1 = V.max(axis=0)
-                j1 = V.argmax(axis=0).astype(jnp.int32)
-                V2 = V.at[j1, jnp.arange(K)].set(-big)
-                b2 = V2.max(axis=0)
-                weak = stale & (b1 <= eps)
-                prices = jnp.where(weak, 0.0, prices)
-                strong = stale & ~weak
-                newp = jnp.maximum(b2 - eps, 0.0)
-                off = jnp.where(strong, B[j1, jnp.arange(K)] - newp, -big)
-                # request-side conflicts: best offer wins, ties to lowest slot
-                bestoff = jnp.full((n,), -big, B.dtype).at[
-                    jnp.where(strong, j1, n)].max(off, mode="drop")
-                at_best = strong & (off == bestoff[jnp.minimum(j1, n - 1)])
-                take = jnp.full((n,), K, jnp.int32).at[
-                    jnp.where(at_best, j1, n)].min(
-                        jnp.arange(K, dtype=jnp.int32), mode="drop")
-                sel = strong & (take[jnp.minimum(j1, n - 1)]
-                                == jnp.arange(K))
-                grab = jnp.full((n,), -1, jnp.int32).at[
-                    jnp.where(sel, j1, n)].set(
-                        jnp.arange(K, dtype=jnp.int32), mode="drop")
-                grabbed = grab >= 0
-                old = jnp.where(grabbed & (slot_of >= 0), slot_of, K)
-                owner = owner.at[old].set(-1, mode="drop")
-                owner = owner.at[jnp.where(sel, jnp.arange(K), K)].set(
-                    jnp.where(sel, j1, -1), mode="drop")
-                prices = jnp.where(sel, newp, prices)
-                slot_of = jnp.where(grabbed, grab, slot_of)
-                parked = parked & ~grabbed
-                return prices, owner, slot_of, parked, r + 1
-
-            return lax.while_loop(
-                rev_cond, rev_body, (prices, owner, slot_of, parked, rounds))
-
-        def settle(prices, owner, slot_of, parked, eps, rounds):
-            """Alternate forward bidding and reverse rounds at this ε."""
-            def alt_cond(st):
-                prices, owner, slot_of, parked, r = st
-                unpark, viol, stale = cs_state(
-                    prices, owner, slot_of, parked, eps)
-                active = (slot_of < 0) & ~parked
-                return (unpark.any() | viol.any() | stale.any()
-                        | active.any()) & (r < max_rounds)
-
-            def alt_body(st):
-                prices, owner, slot_of, parked, r = st
-                owner, slot_of, parked = evict(
-                    prices, owner, slot_of, parked, eps)
-                prices, owner, slot_of, parked, r = bid_until_settled(
-                    prices, owner, slot_of, parked, eps, r)
-                return reverse_until_clean(
-                    prices, owner, slot_of, parked, eps, r)
-
-            return lax.while_loop(
-                alt_cond, alt_body, (prices, owner, slot_of, parked, rounds))
-
-        def phase(carry):
-            prices, owner, slot_of, parked, eps, rounds = carry
-            prices, owner, slot_of, parked, rounds = settle(
-                prices, owner, slot_of, parked, eps, rounds)
-            eps = jnp.maximum(eps / theta, eps_final)
-            return prices, owner, slot_of, parked, eps, rounds
-
-        def phase_cond(carry):
-            _p, _o, _s, _pk, eps, rounds = carry
-            return (eps > eps_final * 1.0000000001) & (rounds < max_rounds)
-
-        init = (jnp.asarray(p0, B.dtype),
-                jnp.full((K,), -1, jnp.int32),
-                jnp.full((n,), -1, jnp.int32),
-                jnp.zeros((n,), bool),
-                jnp.asarray(eps0, B.dtype), jnp.asarray(0, jnp.int32))
-        # one final settle at eps_final after the loop drives eps down
-        carry = lax.while_loop(phase_cond, phase, init)
-        prices, owner, slot_of, parked, rounds = settle(
-            *carry[:4], jnp.asarray(eps_final, B.dtype), carry[5])
-        return prices, owner, slot_of, rounds
-
-    return solve
-
-
-def _get_jax_solver(max_rounds: int, batched: bool):
-    """jit (and, for hub batches, vmap) wrappers around the staged solve.
-
-    The vmapped variant maps over every argument — (H, n, K) weight blocks
-    with per-hub (p0, ε₀, ε_final, θ) vectors — so hubs padded to one shape
-    bucket share a single traced program; `lax.while_loop`'s batching rule
-    freezes already-converged hubs while the stragglers keep bidding.
-    """
-    import jax
-
-    key = (max_rounds, batched)
-    solver = _JAX_CACHE.get(key)
-    if solver is None:
-        solve = _build_jax_solver(max_rounds)
-        solver = jax.jit(jax.vmap(solve)) if batched else jax.jit(solve)
-        _JAX_CACHE[key] = solver
-    return solver
-
-
-def _jax_eps_final(wmax: float, dtype) -> float:
-    # resolution bound: ε (and the ε/8 slack) must stay well above one
-    # ulp at price magnitude or CS tests cycle on rounding noise
-    ulp = float(np.finfo(dtype).eps) * max(wmax, 1.0)
-    return max(1e-5 * max(wmax, 1.0), 64.0 * ulp)
-
-
-def _materialize_jax(w_np, slot_agent, prices, slot_of, rounds, eps_final,
-                     *, warm_started=False, fallback=False):
-    """Host-side DenseAuctionResult from one staged solve's final state."""
-    n = w_np.shape[0]
-    slot_of = np.asarray(slot_of)
-    prices_np = np.asarray(prices, dtype=np.float64)
-    rows = np.arange(n)
-    assignment = np.where(slot_of >= 0, slot_agent[np.maximum(slot_of, 0)], -1)
-    welfare = float(np.where(slot_of >= 0,
-                             w_np[rows, np.maximum(assignment, 0)], 0.0).sum())
-    profits = np.where(
-        slot_of >= 0,
-        np.maximum(w_np, 0.0)[rows, np.maximum(assignment, 0)]
-        - prices_np[np.maximum(slot_of, 0)], 0.0)
-    return DenseAuctionResult(
-        [int(a) for a in assignment], welfare, prices_np, slot_agent, profits,
-        float(eps_final), -1, int(rounds), 2.0 * n * float(eps_final),
-        warm_started=warm_started, fallback=fallback)
-
-
-def solve_dense_auction_jax(w, caps, *, eps_final: float | None = None,
-                            theta: float = _THETA,
-                            max_rounds: int = 200_000,
-                            start_prices: np.ndarray | None = None):
-    """JAX variant. Returns a DenseAuctionResult (host-side numpy values).
-
-    Runs in the input dtype (float32 under default JAX config), so the
-    certified gap is wider than the NumPy/float64 path; the NumPy solver is
-    the reference, this one is the accelerator-resident building block.
-    ``start_prices`` seeds the duals exactly like the NumPy solver's warm
-    path (skipped coarse phase, cold re-solve on round-budget exhaustion).
-    """
-    import jax.numpy as jnp
-
-    w_np = np.asarray(w, dtype=np.float64)
-    n, m = w_np.shape
-    slot_agent = _expand_slots(caps, n)
-    K = len(slot_agent)
-    if n == 0 or K == 0 or float(w_np.max(initial=0.0)) <= 0.0:
-        return DenseAuctionResult([-1] * n, 0.0, np.zeros(K), slot_agent,
-                                  np.zeros(n), 0.0, 0, 0, 0.0)
-    B = jnp.asarray(np.maximum(w_np, 0.0)[:, slot_agent])
-    wmax = float(w_np.max())
-    if eps_final is None:
-        eps_final = _jax_eps_final(wmax, B.dtype)
-    cold_eps0 = max(wmax / theta, eps_final)
-    solver = _get_jax_solver(max_rounds, batched=False)
-
-    warm = start_prices is not None
-    if warm:
-        p0 = np.clip(np.asarray(start_prices, dtype=np.float64),
-                     0.0, None).astype(B.dtype)
-        if p0.shape != (K,):
-            raise ValueError(f"start_prices shape {p0.shape} does not match "
-                             f"the slot layout ({K},) for this (caps, n)")
-        eps0 = min(max(wmax / theta ** 3, eps_final), cold_eps0)
-        budget = min(max_rounds,
-                     _WARM_ROUNDS_PER_NODE * (n + K) + _WARM_ROUNDS_FLOOR)
-        warm_solver = _get_jax_solver(budget, batched=False)
-        prices, owner, slot_of, rounds = warm_solver(
-            B, jnp.asarray(p0), float(eps0), float(eps_final), float(theta))
-        if int(rounds) < budget:
-            return _materialize_jax(w_np, slot_agent, prices, slot_of, rounds,
-                                    eps_final, warm_started=True)
-        # warm attempt tripped its budget -> cold re-solve below
-    prices, owner, slot_of, rounds = solver(
-        B, jnp.zeros((K,), B.dtype), float(cold_eps0), float(eps_final),
-        float(theta))
-    if int(rounds) >= max_rounds:
-        # the staged while_loops stop silently at the cap; surface it the
-        # same way the NumPy solver does instead of returning a bad matching
-        raise RuntimeError(
-            f"dense auction (jax) failed to converge in {max_rounds} rounds"
-            f" (n={n}, m={m}, eps_final={eps_final:g})")
-    return _materialize_jax(w_np, slot_agent, prices, slot_of, rounds,
-                            eps_final, warm_started=warm, fallback=warm)
-
-
-def _pow2_bucket(x: int, floor: int = 8) -> int:
-    """Smallest power of two >= max(x, floor) — the vmap shape bucket."""
-    return 1 << (max(int(x), floor) - 1).bit_length()
-
-
-def solve_dense_auction_jax_batch(ws, caps_list, *,
-                                  eps_final: float | None = None,
-                                  theta: float = _THETA,
-                                  max_rounds: int = 200_000,
-                                  start_prices_list=None
-                                  ) -> list[DenseAuctionResult]:
-    """Solve many independent hub blocks in one vmapped program per bucket.
-
-    ``ws[h]`` is hub h's dense (n_h, m_h) weight block and ``caps_list[h]``
-    its per-agent capacities.  Blocks are zero-padded to power-of-two
-    (n, K) shape buckets (padding is behavior-neutral — see the module
-    docstring) and every bucket is solved by ONE `jax.vmap`-of-`jit` call,
-    so K hubs of uneven size cost one trace + one device dispatch per
-    distinct bucket instead of K dispatches.  ``start_prices_list[h]``
-    optionally warm-starts hub h (None entries cold-start); any block whose
-    staged solve hits the round cap is transparently re-solved by the
-    float64 NumPy reference solver (``result.fallback``).
-    """
-    import jax.numpy as jnp
-
-    H = len(ws)
-    sp_list = start_prices_list or [None] * H
-    results: list[DenseAuctionResult | None] = [None] * H
-    prep = []                      # (h, w_np, slot_agent, B, p0, eps0, eps_f)
-    for h, (w, caps) in enumerate(zip(ws, caps_list)):
-        w_np = np.asarray(w, dtype=np.float64)
-        n = w_np.shape[0]
-        slot_agent = _expand_slots(caps, n)
-        K = len(slot_agent)
-        if n == 0 or K == 0 or float(w_np.max(initial=0.0)) <= 0.0:
-            results[h] = DenseAuctionResult(
-                [-1] * n, 0.0, np.zeros(K), slot_agent, np.zeros(n),
-                0.0, 0, 0, 0.0)
-            continue
-        B = np.maximum(w_np, 0.0)[:, slot_agent].astype(np.float32)
-        wmax = float(B.max())
-        eps_f = eps_final if eps_final is not None \
-            else _jax_eps_final(wmax, B.dtype)
-        sp = sp_list[h]
-        if sp is not None:
-            p0 = np.clip(np.asarray(sp, np.float64), 0.0, None)
-            if p0.shape != (K,):
-                raise ValueError(
-                    f"start_prices for block {h}: shape {p0.shape} does not "
-                    f"match the slot layout ({K},) for this (caps, n)")
-            p0 = p0.astype(np.float32)
-            eps0 = min(max(wmax / theta ** 3, eps_f),
-                       max(wmax / theta, eps_f))
-            warm = True
-        else:
-            p0 = np.zeros(K, np.float32)
-            eps0 = max(wmax / theta, eps_f)
-            warm = False
-        prep.append((h, w_np, slot_agent, B, p0, eps0, eps_f, warm))
-
-    # group by (shape bucket, warm?) so uneven hubs share one traced solve;
-    # warm and cold hubs never share a group — warm groups run under the
-    # warm round budget (a bad seed must not drag the group to the global
-    # cap) and that budget must not apply to cold solves
-    groups: dict[tuple[int, int, bool], list] = {}
-    for item in prep:
-        _, w_np, slot_agent, B, *_, warm = item
-        bucket = (_pow2_bucket(B.shape[0]), _pow2_bucket(B.shape[1]), warm)
-        groups.setdefault(bucket, []).append(item)
-
-    for (bn, bK, warm_group), members in groups.items():
-        G = len(members)
-        cap = max_rounds
-        if warm_group:
-            cap = min(max_rounds,
-                      _WARM_ROUNDS_PER_NODE * (bn + bK) + _WARM_ROUNDS_FLOOR)
-        vsolver = _get_jax_solver(cap, batched=True)
-        Bs = np.zeros((G, bn, bK), np.float32)
-        p0s = np.zeros((G, bK), np.float32)
-        eps0s = np.zeros(G, np.float32)
-        eps_fs = np.zeros(G, np.float32)
-        for g, (_h, _w, _sa, B, p0, eps0, eps_f, _warm) in enumerate(members):
-            Bs[g, :B.shape[0], :B.shape[1]] = B
-            p0s[g, :len(p0)] = p0
-            eps0s[g] = eps0
-            eps_fs[g] = eps_f
-        thetas = np.full(G, theta, np.float32)
-        prices, owner, slot_of, rounds = vsolver(
-            jnp.asarray(Bs), jnp.asarray(p0s), jnp.asarray(eps0s),
-            jnp.asarray(eps_fs), jnp.asarray(thetas))
-        prices = np.asarray(prices)
-        slot_of = np.asarray(slot_of)
-        rounds = np.asarray(rounds)
-        for g, (h, w_np, slot_agent, B, p0, eps0, eps_f, warm) in \
-                enumerate(members):
-            n, K = B.shape
-            if int(rounds[g]) >= cap:
-                # capped mid-solve: the float64 reference re-solves this hub
-                results[h] = solve_dense_auction(w_np, caps_list[h])
-                results[h].warm_started = warm
-                results[h].fallback = True
-                continue
-            results[h] = _materialize_jax(
-                w_np, slot_agent, prices[g, :K], slot_of[g, :n], rounds[g],
-                eps_f, warm_started=warm)
-    return results
-
-
-# --------------------------------------------------------------------------
-# Batched Clarke-pivot payments from the final matching.
-# --------------------------------------------------------------------------
-def dense_clarke_payments(w: np.ndarray, costs: np.ndarray, caps,
-                          assignment) -> list:
-    """p_j = c_ij + max(0, -d_j) for matched j, where d_j is the cheapest
-    residual walk absorbing the unit freed by removing request j — all
-    matched requests solved at once by one batched Bellman-Ford.
-
-    Mirrors `auction.run_auction(payment_mode="warmstart")`: per batch member
-    b, request j_b's node is blocked and agent i_b's sink arc is blocked; the
-    target distance is min(dist_from_s[i_b], dist_from_t[i_b]).
-
-    Contract: ``assignment`` must be (near-)welfare-optimal — the residual
-    graph of an optimal matching has no negative cycles, which is what makes
-    the iteration-capped Bellman-Ford exact. On an ε-optimal matching the
-    error is bounded by (n+m+3)·2n·ε; keep ε at the float64 default (the
-    NumPy solver) for DSIC-grade payments and treat the float32 jax path's
-    payments as approximate to its reported gap_bound.
-    """
-    w = np.asarray(w, dtype=np.float64)
-    costs = np.asarray(costs, dtype=np.float64)
-    n, m = w.shape
-    caps_arr = np.asarray([int(c) for c in caps], dtype=np.int64)
-    payments = [0.0] * n
-    matched = [j for j, i in enumerate(assignment) if i >= 0]
-    if not matched:
-        return payments
-    B = len(matched)
-    j_blk = np.asarray(matched)
-    i_blk = np.asarray([assignment[j] for j in matched])
-
-    X = np.zeros((n, m), dtype=bool)
-    for j, i in enumerate(assignment):
-        if i >= 0:
-            X[j, i] = True
-    used = X.sum(axis=0)
-    row_matched = X.any(axis=1)
-    mi = np.where(row_matched, np.argmax(X, axis=1), -1)   # agent of request
-    inf = np.inf
-    # forward matching arcs j -> i: cost -w where an unused edge exists
-    Cf = np.where((w > 0) & ~X, -w, inf)                    # (n, m)
-    # backward arcs i -> j (undo match): cost +w on matched pairs
-    w_back = np.where(row_matched, w[np.arange(n), np.maximum(mi, 0)], inf)
-    has_free = used < caps_arr                              # i -> t arcs
-    has_flow = used > 0                                     # t -> i arcs
-    brange = np.arange(B)
-
-    def _bf(from_t: bool) -> np.ndarray:
-        """Batched Bellman-Ford; returns dist-to-agent matrix (B, m)."""
-        D_req = np.full((B, n), inf)
-        D_ag = np.full((B, m), inf)
-        D_s = np.full(B, 0.0 if not from_t else inf)
-        D_t = np.full(B, 0.0 if from_t else inf)
-        for _ in range(n + m + 3):
-            changed = False
-            # s -> j' (unmatched rows, cost 0)
-            upd = np.where(~row_matched[None, :], D_s[:, None], inf)
-            # i -> j' (matched rows, cost +w)
-            upd_b = np.where(row_matched[None, :],
-                             D_ag[:, np.maximum(mi, 0)] + w_back[None, :], inf)
-            upd = np.minimum(upd, upd_b)
-            upd[brange, j_blk] = inf                        # blocked request
-            new = np.minimum(D_req, upd)
-            changed |= (new < D_req).any()
-            D_req = new
-            # j' -> i (forward, cost -w): the big dense relaxation
-            upd = (D_req[:, :, None] + Cf[None, :, :]).min(axis=1)
-            # t -> i (cost 0) where flow exists, minus the blocked sink arc
-            upd_t = np.where(has_flow[None, :], D_t[:, None], inf)
-            upd_t[brange, i_blk] = inf
-            new = np.minimum(D_ag, np.minimum(upd, upd_t))
-            changed |= (new < D_ag).any()
-            D_ag = new
-            # i -> t (cost 0) where free capacity, minus the blocked sink arc
-            cand = np.where(has_free[None, :], D_ag, inf)
-            cand[brange, i_blk] = inf
-            new = np.minimum(D_t, cand.min(axis=1))
-            changed |= (new < D_t).any()
-            D_t = new
-            # j' -> s (matched rows, cost 0)
-            cand = np.where(row_matched[None, :], D_req, inf)
-            new = np.minimum(D_s, cand.min(axis=1))
-            changed |= (new < D_s).any()
-            D_s = new
-            if not changed:
-                break
-        return D_ag
-
-    d = np.minimum(_bf(from_t=False)[brange, i_blk],
-                   _bf(from_t=True)[brange, i_blk])
-    gain = np.where(np.isfinite(d), np.maximum(0.0, -d), 0.0)
-    for b, j in enumerate(matched):
-        payments[j] = float(gain[b] + costs[j, assignment[j]])
-    return payments

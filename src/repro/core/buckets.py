@@ -1,0 +1,21 @@
+"""Power-of-two shape buckets for jit-staged array programs.
+
+JAX retraces a jitted program whenever an argument's shape changes, and the
+serving loop's array shapes wobble constantly — batch sizes per round, slot
+counts per hub, node-pool sizes as Hoeffding trees split.  Padding every
+such dimension up to the next power of two collapses the shape space to
+O(log) distinct buckets, so steady-state traffic reuses a handful of traced
+programs instead of recompiling per shape.  The PR-3 hub-sharded auction
+introduced the trick (`solve_dense_auction_jax_batch`); this module is the
+shared home so the dense/Pallas auction backends and the jax predictor
+walker bucket the same way.  Kept stdlib-only (core imports jax lazily).
+
+Callers are responsible for making the padding behavior-neutral (zero-weight
+auction rows/columns, leaf-marked tree nodes, discarded output rows).
+"""
+from __future__ import annotations
+
+
+def pow2_bucket(x: int, floor: int = 8) -> int:
+    """Smallest power of two >= max(x, floor) — the jit shape bucket."""
+    return 1 << (max(int(x), floor) - 1).bit_length()

@@ -26,6 +26,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.buckets import pow2_bucket
+
 
 class _LeafStats:
     """Per-leaf sufficient statistics with per-feature binned sub-stats."""
@@ -243,14 +245,39 @@ def _jax_descend():
 
 
 def descend_jax(tree: CompiledTree, X, roots=None) -> np.ndarray:
-    """`descend` via the jit-staged fori_loop walker (float32 on device)."""
+    """`descend` via the jit-staged fori_loop walker (float32 on device).
+
+    Shape-bucketed: the feature matrix's batch dimension, the node pool and
+    the loop depth are all padded up to power-of-two buckets before hitting
+    the jit cache, so batch-size wobble between serving rounds and
+    node-count growth from tree splits reuse O(log) traced programs instead
+    of retracing per shape.  Padding is behavior-neutral — padded rows
+    descend from node 0 and are sliced off, padded nodes are unreachable
+    leaves, and extra depth iterations leave settled rows in place.
+    """
     X = np.asarray(X)
+    n_rows = X.shape[0]
     if roots is None:
-        roots = np.zeros(X.shape[0], dtype=np.int32)
-    out = _jax_descend()(tree.feature, tree.threshold, tree.left, tree.right,
-                         tree.value, np.asarray(roots, np.int32), X,
-                         tree.depth + 1)
-    return np.asarray(out, dtype=np.float64)
+        roots = np.zeros(n_rows, dtype=np.int32)
+    nb = pow2_bucket(n_rows)
+    if nb != n_rows:
+        X = np.pad(X, ((0, nb - n_rows), (0, 0)))
+        roots = np.pad(np.asarray(roots, np.int32), (0, nb - n_rows))
+    n_nodes = len(tree.feature)
+    kb = pow2_bucket(n_nodes)
+    feature, threshold = tree.feature, tree.threshold
+    left, right, value = tree.left, tree.right, tree.value
+    if kb != n_nodes:
+        pad = kb - n_nodes
+        feature = np.pad(feature, (0, pad), constant_values=-1)  # leaves
+        threshold = np.pad(threshold, (0, pad))
+        left = np.pad(left, (0, pad))
+        right = np.pad(right, (0, pad))
+        value = np.pad(value, (0, pad))
+    out = _jax_descend()(feature, threshold, left, right, value,
+                         np.asarray(roots, np.int32), X,
+                         pow2_bucket(tree.depth + 1, floor=4))
+    return np.asarray(out, dtype=np.float64)[:n_rows]
 
 
 class _HoeffdingTreeBase:

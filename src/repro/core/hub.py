@@ -151,7 +151,8 @@ class SlotPriceBook:
 
         ``slot_counts[i]`` is the number of unit slots agent ``agent_ids[i]``
         exposes this round (``min(free capacity, batch size)`` — the
-        ``_expand_slots`` layout, agents contiguous in ``agent_ids`` order).
+        `repro.core.solvers.dense_common.expand_slots` layout, agents
+        contiguous in ``agent_ids`` order).
         """
         entry = self._book.get(hub_id)
         if entry is None or entry[0] != version or entry[1] != tuple(agent_ids):

@@ -8,15 +8,28 @@ Per micro-batch of requests:
            pass (compiled tree forests); ``batched=False`` keeps the
            per-pair scalar loop as the semantic oracle — both produce
            bit-identical decisions (tests/test_predictor_batch.py).
-  Phase 2  welfare maximization per proxy hub (Eq. 7 / Thm 4.1): exact MCMF
-           or the vectorized dense ε-scaling auction (``solver=`` kwarg).
-           With ``n_hubs > 1`` the batch's welfare matrix is carved into
-           per-hub blocks and each block is auctioned independently
-           (``run_sharded_auction``; the ``dense-jax`` solver batches the
-           uneven blocks through one vmapped program per shape bucket), and
-           with ``warm_start=True`` each hub's final slot prices seed the
-           next round's ε-scaling — keyed by hub id + elastic agent-set
-           version, cold-starting whenever membership changed.
+  Phase 2  welfare maximization per proxy hub (Eq. 7 / Thm 4.1): any
+           backend in the ``core/solvers`` registry (``solver=`` kwarg —
+           exact MCMF oracle, dense NumPy/jax ε-scaling auction, or the
+           Pallas-kernel variant).  With ``n_hubs > 1`` the batch's welfare
+           matrix is carved into per-hub blocks and each block is auctioned
+           independently (``run_sharded_auction``; batch-capable backends
+           solve the uneven blocks through one vmapped program per shape
+           bucket), with ``warm_start=True`` each hub's final slot prices
+           seed the next round's ε-scaling — keyed by hub id + elastic
+           agent-set version, cold-starting whenever membership changed —
+           and with ``spill=True`` (default) requests a saturated hub left
+           unmatched re-auction once over every hub's residual capacity
+           (cross-hub spill), so hard hub pinning no longer strands
+           welfare when another hub has slack.  Incentive caveat: payments
+           are Clarke pivots *within each round's market*.  Hub sharding
+           already trades exact global VCG for speed (Fig. 6), and the
+           spill round inherits that: a bidder who tanks round 1 to buy
+           uncontested residual capacity in round 2 can profit, so the
+           DSIC theorems hold per-market, not across rounds.  Deployments
+           that need strict DSIC at ``n_hubs > 1`` should run
+           ``spill=False`` (``--no-spill``) and accept the stranded-welfare
+           tail that `benchmarks/hub_sharding.py` quantifies.
   Phase 3  VCG Clarke-pivot payments (Eq. 8) + dispatch.
   Phase 4  execution feedback: predictor updates + prefix-ledger updates.
 
@@ -31,8 +44,9 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.affinity import PrefixLedger
-from repro.core.auction import run_sharded_auction
+from repro.core.auction import SPILL_HUB, run_sharded_auction
 from repro.core.hub import (Hub, SlotPriceBook, cluster_agents, route_to_hub)
+from repro.core.solvers import get_solver
 from repro.distributed.elastic import AgentSetVersion
 from repro.core.predictor import (PredictorInput, PredictorPool, QoSEstimate,
                                   feature_tensor)
@@ -100,7 +114,7 @@ class IEMASRouter:
                  payment_mode: str = "warmstart",
                  solver: str = "mcmf",
                  n_hubs: int = 1, hub_scheme: str = "domain",
-                 warm_start: bool = False,
+                 warm_start: bool = False, spill: bool = True,
                  use_kernel_affinity: bool = False,
                  batched: bool = True, predictor_backend: str = "numpy",
                  predictor_kw: dict | None = None):
@@ -108,9 +122,11 @@ class IEMASRouter:
         self.valuation = valuation or ValuationConfig()
         self.payment_mode = payment_mode
         self.solver = solver
-        # cross-round slot-price reuse is a dense-solver concept (the mcmf
-        # oracle keeps no duals); silently a no-op otherwise
-        self.warm_start = warm_start and solver in ("dense", "dense-jax")
+        self.spill = spill
+        # cross-round slot-price reuse needs persistent duals; the registry
+        # capability flag says which backends have them (the mcmf oracle
+        # does not) — silently a no-op otherwise
+        self.warm_start = warm_start and get_solver(solver).supports_warm_start
         self.use_kernel_affinity = use_kernel_affinity
         self.batched = batched
         self.predictor_backend = predictor_backend
@@ -120,7 +136,7 @@ class IEMASRouter:
         self._pending: dict[str, tuple] = {}  # request_id -> (x, agent, req)
         self.accounts = {"payments": 0.0, "agent_costs": 0.0,
                          "welfare_realized": 0.0, "surplus": 0.0,
-                         "matched": 0, "unmatched": 0}
+                         "matched": 0, "unmatched": 0, "spill_rescued": 0}
         self.n_hubs = n_hubs
         self.hub_scheme = hub_scheme
         self.agent_set_version = AgentSetVersion()
@@ -263,11 +279,10 @@ class IEMASRouter:
             a_idx = [i for i in range(m) if hub_of_agent.get(i, -1) == h]
             if not r_idx:
                 continue
-            if not a_idx:
-                for j in r_idx:
-                    decisions[j] = RouteDecision(requests[j], None, 0.0, None,
-                                                 0.0, h)
-                continue
+            # a hub whose live agents are all gone (quarantine/scale-in)
+            # still gets an EMPTY block: its requests trivially lose round 1
+            # there, which keeps them eligible for the cross-hub spill round
+            # and keeps the matched/unmatched ledger honest
             blocks[h] = (r_idx, a_idx)
 
         # warm-start seeds: last round's duals, replayed only when the hub's
@@ -275,6 +290,8 @@ class IEMASRouter:
         start_prices: dict[int, np.ndarray] = {}
         if self.warm_start:
             for h, (r_idx, a_idx) in blocks.items():
+                if not a_idx:
+                    continue
                 version, ids = self.agent_set_version.fingerprint(
                     live[i].agent_id for i in a_idx)
                 counts = [min(caps[i], len(r_idx)) for i in a_idx]
@@ -285,11 +302,32 @@ class IEMASRouter:
         results = run_sharded_auction(values, cst, caps, blocks,
                                       payment_mode=self.payment_mode,
                                       solver=self.solver,
-                                      start_prices=start_prices)
+                                      start_prices=start_prices,
+                                      spill=self.spill,
+                                      spill_agents=sorted(hub_of_agent))
+
+        def _record_match(j, i, pay, weight, pred_cost, h):
+            """Decision + pending-feedback entry for one matched pair."""
+            agent = live[i]
+            if xs is None:  # batched: materialize matched pairs only
+                x = PredictorInput(*(float(v) for v in X[j, i]))
+                est = QoSEstimate(float(lat[j, i]), float(cst[j, i]),
+                                  float(qual[j, i]))
+            else:
+                x, est = xs[j][i]
+            decisions[j] = RouteDecision(requests[j], agent.agent_id, pay,
+                                         est, weight, h)
+            self._pending[requests[j].request_id] = (x, agent, requests[j],
+                                                     pay, pred_cost)
+            self.accounts["matched"] += 1
+
         for h, result in results.items():
+            if h == SPILL_HUB:
+                continue  # cross-hub second round, spliced below
             r_idx, a_idx = blocks[h]
             cc = result.costs
-            if self.warm_start and "slot_prices" in result.solver_stats:
+            if self.warm_start and a_idx and \
+                    "slot_prices" in result.solver_stats:
                 version, ids = self.agent_set_version.fingerprint(
                     live[i].agent_id for i in a_idx)
                 self.price_book.store(
@@ -303,20 +341,25 @@ class IEMASRouter:
                                                  0.0, h)
                     self.accounts["unmatched"] += 1
                     continue
-                i = a_idx[li]
-                agent = live[i]
-                if xs is None:  # batched: materialize matched pairs only
-                    x = PredictorInput(*(float(v) for v in X[j, i]))
-                    est = QoSEstimate(float(lat[j, i]), float(cst[j, i]),
-                                      float(qual[j, i]))
-                else:
-                    x, est = xs[j][i]
-                pay = result.payments[local_j]
-                decisions[j] = RouteDecision(requests[j], agent.agent_id, pay,
-                                             est, result.weights[local_j, li], h)
-                self._pending[requests[j].request_id] = (x, agent, requests[j],
-                                                         pay, cc[local_j, li])
-                self.accounts["matched"] += 1
+                _record_match(j, a_idx[li], result.payments[local_j],
+                              result.weights[local_j, li], cc[local_j, li], h)
+
+        spill_result = results.get(SPILL_HUB)
+        if spill_result is not None:
+            # second-round winners override their first-round "unmatched"
+            # decisions; payments are Clarke pivots within the spill market
+            blk = spill_result.solver_stats["spill"]
+            for local_j, j in enumerate(blk["r_idx"]):
+                li = spill_result.assignment[local_j]
+                if li < 0:
+                    continue
+                i = blk["a_idx"][li]
+                _record_match(j, i, spill_result.payments[local_j],
+                              spill_result.weights[local_j, li],
+                              spill_result.costs[local_j, li],
+                              hub_of_agent.get(i, -1))
+                self.accounts["unmatched"] -= 1
+                self.accounts["spill_rescued"] += 1
         return decisions
 
     # ---------------- Phase 4: feedback ----------------

@@ -1,0 +1,46 @@
+"""Pluggable Phase-2 solver backends.
+
+One module per backend, one :class:`~repro.core.solvers.base.SolverBackend`
+protocol, one registry — ``run_auction``/``run_sharded_auction`` and the
+whole config/CLI stack resolve ``solver=`` names through
+:func:`get_solver`, so a new solver is a new module plus a
+:func:`register_solver` call (``core/auction.py`` stays untouched).
+
+Registered backends:
+
+========== ================================================= ===== ======
+name       implementation                                    warm  batch
+========== ================================================= ===== ======
+mcmf       exact MCMF oracle (pure Python, float64)          no    no
+dense      vectorized NumPy ε-scaling auction (float64)      yes   no
+dense-jax  jit-staged auction, lax.while_loop (float32)      yes   vmap
+pallas     staged auction, Pallas-kernel bidding round       yes   vmap
+========== ================================================= ===== ======
+"""
+from repro.core.solvers.base import (AuctionResult, SolverBackend,
+                                     available_solvers, get_solver,
+                                     register_solver,
+                                     sequential_solve_batch)
+from repro.core.solvers.dense_common import (DenseAuctionResult,
+                                             dense_clarke_payments)
+from repro.core.solvers.dense_jax import (DenseJaxBackend,
+                                          solve_dense_auction_jax,
+                                          solve_dense_auction_jax_batch)
+from repro.core.solvers.dense_np import DenseNumpyBackend, solve_dense_auction
+from repro.core.solvers.mcmf import McmfBackend, solve_allocation
+from repro.core.solvers.pallas_backend import (PallasBackend,
+                                               solve_dense_auction_pallas)
+
+register_solver(McmfBackend())
+register_solver(DenseNumpyBackend())
+register_solver(DenseJaxBackend())
+register_solver(PallasBackend())
+
+__all__ = [
+    "AuctionResult", "SolverBackend", "available_solvers", "get_solver",
+    "register_solver", "sequential_solve_batch",
+    "DenseAuctionResult", "dense_clarke_payments",
+    "DenseNumpyBackend", "DenseJaxBackend", "McmfBackend", "PallasBackend",
+    "solve_allocation", "solve_dense_auction", "solve_dense_auction_jax",
+    "solve_dense_auction_jax_batch", "solve_dense_auction_pallas",
+]

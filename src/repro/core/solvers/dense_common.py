@@ -1,0 +1,218 @@
+"""Shared machinery of the dense ε-scaling auction backends.
+
+The NumPy, jax and Pallas backends all solve the same slot-level market
+(agents expanded into unit slots, requests bidding under ε-complementary
+slackness) and return the same dual state; this module holds the pieces
+they share — the slot expansion, the ε schedules and warm-start round
+budgets, the :class:`DenseAuctionResult` dual-state record, the batched
+Clarke-pivot payment solver, and the helpers that package a dense solve
+into the registry-level :class:`~repro.core.solvers.base.AuctionResult`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.solvers.base import AuctionResult
+
+# gap_bound = 2 * n * eps_final; the default keeps it below 1e-7 for any
+# n <= ~500 at unit weight scale, comfortably inside the 1e-6 tolerances
+# used by the mechanism tests.
+EPS_FINAL_REL = 1e-10
+THETA = 5.0
+# warm solves skip the coarsest scaling phases (ε₀ = wmax/θ³ vs wmax/θ) and
+# run under a bounded round budget; tripping it falls back to a cold solve
+WARM_ROUNDS_PER_NODE = 40
+WARM_ROUNDS_FLOOR = 2_000
+
+
+class DenseAuctionResult:
+    """Allocation + dual state of one dense-auction solve."""
+
+    __slots__ = ("assignment", "welfare", "slot_prices", "slot_agent",
+                 "profits", "eps", "phases", "rounds", "gap_bound",
+                 "warm_started", "fallback")
+
+    def __init__(self, assignment, welfare, slot_prices, slot_agent, profits,
+                 eps, phases, rounds, gap_bound, warm_started=False,
+                 fallback=False):
+        self.assignment = assignment        # request j -> agent index or -1
+        self.welfare = welfare              # sum of matched w_ij
+        self.slot_prices = slot_prices      # dual price per unit slot
+        self.slot_agent = slot_agent        # slot -> agent index
+        self.profits = profits              # per-request profit pi_j
+        self.eps = eps                      # final epsilon
+        self.phases = phases
+        self.rounds = rounds                # total Jacobi bidding rounds
+        self.gap_bound = gap_bound          # certified welfare gap (2*n*eps)
+        self.warm_started = warm_started    # seeded from prior slot prices
+        self.fallback = fallback            # warm attempt tripped -> re-ran cold
+
+
+def expand_slots(caps, n: int) -> np.ndarray:
+    """Agent capacities -> the slot -> agent map (min(b_i, n) unit slots)."""
+    caps = np.asarray([int(c) for c in caps], dtype=np.int64)
+    if (caps < 0).any():
+        raise ValueError("negative capacity")
+    return np.repeat(np.arange(len(caps)), np.minimum(caps, n))
+
+
+def warm_round_budget(n: int, K: int, max_rounds: int) -> int:
+    """Round cap for a warm attempt before falling back to a cold solve."""
+    return min(max_rounds, WARM_ROUNDS_PER_NODE * (n + K) + WARM_ROUNDS_FLOOR)
+
+
+def check_start_prices(start_prices, K: int, *, block: int | None = None
+                       ) -> np.ndarray:
+    """Validate + clip a warm-start seed against this market's slot layout."""
+    p0 = np.clip(np.asarray(start_prices, dtype=np.float64), 0.0, None)
+    if p0.shape != (K,):
+        where = f"start_prices for block {block}: " if block is not None \
+            else "start_prices "
+        raise ValueError(f"{where}shape {p0.shape} does not match the "
+                         f"slot layout ({K},) for this (caps, n)")
+    return p0
+
+
+def jax_eps_final(wmax: float, dtype) -> float:
+    """Resolution-bounded ε_final for reduced-precision (float32) solves."""
+    # ε (and the ε/8 slack) must stay well above one ulp at price
+    # magnitude or CS tests cycle on rounding noise
+    ulp = float(np.finfo(dtype).eps) * max(wmax, 1.0)
+    return max(1e-5 * max(wmax, 1.0), 64.0 * ulp)
+
+
+def materialize_staged(w_np, slot_agent, prices, slot_of, rounds, eps_final,
+                       *, warm_started=False, fallback=False
+                       ) -> DenseAuctionResult:
+    """Host-side DenseAuctionResult from one staged solve's final state."""
+    n = w_np.shape[0]
+    slot_of = np.asarray(slot_of)
+    prices_np = np.asarray(prices, dtype=np.float64)
+    rows = np.arange(n)
+    assignment = np.where(slot_of >= 0, slot_agent[np.maximum(slot_of, 0)], -1)
+    welfare = float(np.where(slot_of >= 0,
+                             w_np[rows, np.maximum(assignment, 0)], 0.0).sum())
+    profits = np.where(
+        slot_of >= 0,
+        np.maximum(w_np, 0.0)[rows, np.maximum(assignment, 0)]
+        - prices_np[np.maximum(slot_of, 0)], 0.0)
+    return DenseAuctionResult(
+        [int(a) for a in assignment], welfare, prices_np, slot_agent, profits,
+        float(eps_final), -1, int(rounds), 2.0 * n * float(eps_final),
+        warm_started=warm_started, fallback=fallback)
+
+
+def dense_stats(solver: str, res: DenseAuctionResult) -> dict:
+    """The ``solver_stats`` dict a dense backend attaches to its result."""
+    return {"solver": solver, "payment_mode": "dual-batched",
+            "phases": res.phases, "rounds": res.rounds,
+            "eps": res.eps, "gap_bound": res.gap_bound,
+            "slot_prices": res.slot_prices, "slot_agent": res.slot_agent,
+            "warm_started": res.warm_started, "warm_fallback": res.fallback}
+
+
+def package_dense(solver: str, w: np.ndarray, costs: np.ndarray, caps,
+                  res: DenseAuctionResult) -> AuctionResult:
+    """DenseAuctionResult -> AuctionResult: batched Clarke payments + stats."""
+    payments = dense_clarke_payments(w, costs, caps, res.assignment)
+    return AuctionResult(
+        assignment=list(res.assignment), welfare=res.welfare,
+        payments=payments, weights=w, costs=costs,
+        solver_stats=dense_stats(solver, res))
+
+
+# --------------------------------------------------------------------------
+# Batched Clarke-pivot payments from the final matching.
+# --------------------------------------------------------------------------
+def dense_clarke_payments(w: np.ndarray, costs: np.ndarray, caps,
+                          assignment) -> list:
+    """p_j = c_ij + max(0, -d_j) for matched j, where d_j is the cheapest
+    residual walk absorbing the unit freed by removing request j — all
+    matched requests solved at once by one batched Bellman-Ford.
+
+    Mirrors the mcmf backend's ``payment_mode="warmstart"``: per batch member
+    b, request j_b's node is blocked and agent i_b's sink arc is blocked; the
+    target distance is min(dist_from_s[i_b], dist_from_t[i_b]).
+
+    Contract: ``assignment`` must be (near-)welfare-optimal — the residual
+    graph of an optimal matching has no negative cycles, which is what makes
+    the iteration-capped Bellman-Ford exact. On an ε-optimal matching the
+    error is bounded by (n+m+3)·2n·ε; keep ε at the float64 default (the
+    NumPy solver) for DSIC-grade payments and treat the float32 staged
+    paths' payments as approximate to their reported gap_bound.
+    """
+    w = np.asarray(w, dtype=np.float64)
+    costs = np.asarray(costs, dtype=np.float64)
+    n, m = w.shape
+    caps_arr = np.asarray([int(c) for c in caps], dtype=np.int64)
+    payments = [0.0] * n
+    matched = [j for j, i in enumerate(assignment) if i >= 0]
+    if not matched:
+        return payments
+    B = len(matched)
+    j_blk = np.asarray(matched)
+    i_blk = np.asarray([assignment[j] for j in matched])
+
+    X = np.zeros((n, m), dtype=bool)
+    for j, i in enumerate(assignment):
+        if i >= 0:
+            X[j, i] = True
+    used = X.sum(axis=0)
+    row_matched = X.any(axis=1)
+    mi = np.where(row_matched, np.argmax(X, axis=1), -1)   # agent of request
+    inf = np.inf
+    # forward matching arcs j -> i: cost -w where an unused edge exists
+    Cf = np.where((w > 0) & ~X, -w, inf)                    # (n, m)
+    # backward arcs i -> j (undo match): cost +w on matched pairs
+    w_back = np.where(row_matched, w[np.arange(n), np.maximum(mi, 0)], inf)
+    has_free = used < caps_arr                              # i -> t arcs
+    has_flow = used > 0                                     # t -> i arcs
+    brange = np.arange(B)
+
+    def _bf(from_t: bool) -> np.ndarray:
+        """Batched Bellman-Ford; returns dist-to-agent matrix (B, m)."""
+        D_req = np.full((B, n), inf)
+        D_ag = np.full((B, m), inf)
+        D_s = np.full(B, 0.0 if not from_t else inf)
+        D_t = np.full(B, 0.0 if from_t else inf)
+        for _ in range(n + m + 3):
+            changed = False
+            # s -> j' (unmatched rows, cost 0)
+            upd = np.where(~row_matched[None, :], D_s[:, None], inf)
+            # i -> j' (matched rows, cost +w)
+            upd_b = np.where(row_matched[None, :],
+                             D_ag[:, np.maximum(mi, 0)] + w_back[None, :], inf)
+            upd = np.minimum(upd, upd_b)
+            upd[brange, j_blk] = inf                        # blocked request
+            new = np.minimum(D_req, upd)
+            changed |= (new < D_req).any()
+            D_req = new
+            # j' -> i (forward, cost -w): the big dense relaxation
+            upd = (D_req[:, :, None] + Cf[None, :, :]).min(axis=1)
+            # t -> i (cost 0) where flow exists, minus the blocked sink arc
+            upd_t = np.where(has_flow[None, :], D_t[:, None], inf)
+            upd_t[brange, i_blk] = inf
+            new = np.minimum(D_ag, np.minimum(upd, upd_t))
+            changed |= (new < D_ag).any()
+            D_ag = new
+            # i -> t (cost 0) where free capacity, minus the blocked sink arc
+            cand = np.where(has_free[None, :], D_ag, inf)
+            cand[brange, i_blk] = inf
+            new = np.minimum(D_t, cand.min(axis=1))
+            changed |= (new < D_t).any()
+            D_t = new
+            # j' -> s (matched rows, cost 0)
+            cand = np.where(row_matched[None, :], D_req, inf)
+            new = np.minimum(D_s, cand.min(axis=1))
+            changed |= (new < D_s).any()
+            D_s = new
+            if not changed:
+                break
+        return D_ag
+
+    d = np.minimum(_bf(from_t=False)[brange, i_blk],
+                   _bf(from_t=True)[brange, i_blk])
+    gain = np.where(np.isfinite(d), np.maximum(0.0, -d), 0.0)
+    for b, j in enumerate(matched):
+        payments[j] = float(gain[b] + costs[j, assignment[j]])
+    return payments

@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the framework's compute hot-spots.
+
+Three-file pattern per op: ``<name>.py`` holds the `pl.pallas_call` kernel
+(compiled on TPU, interpret mode elsewhere), ``ref.py`` the simplest-possible
+pure-jnp oracle it is validated against, and ``ops.py`` the dispatch wrapper
+callers import.  Current kernels: LCP affinity (router Phase 1), the dense
+auction's forward-bidding round (router Phase 2), flash/decode attention,
+WKV6 and SSD recurrences (serving engines).
+"""

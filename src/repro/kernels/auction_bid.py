@@ -1,0 +1,156 @@
+"""Pallas kernel: one Jacobi forward-bidding round of the dense auction.
+
+The Phase-2 ε-scaling auction (`repro.core.solvers`) spends almost all of
+its time in the forward bidding round: every unassigned request scans the
+full slot row for its top-2 profits, then the winning bids are scattered
+into the per-slot price vector as a segment max (ties to the lowest request
+index).  This kernel computes one such round for a (n × K) slot-level
+weight matrix:
+
+    P[j, k]  = B[j, k] - prices[k]            (only active rows compete)
+    v1, k1   = top profit and its slot        (per request)
+    v2       = second profit, floored at the outside option 0
+    bid[j]   = prices[k1] + (v1 - v2) + ε     (only if v1 > 0, else park)
+    best[k]  = max over bidders with k1 = k of bid[j]   (segment max)
+    winner[k]= min j among bidders at best[k]           (deterministic ties)
+
+Tiling
+------
+Grid over request tiles: ``(n / bn,)`` programs, each holding a [bn, K]
+weight tile, the full [1, K] price row and a [bn, 1] active mask in VMEM
+(slots are NOT tiled — K is the per-hub slot count, a few thousand floats).
+The per-request outputs (``wants``) block-map one tile per program; the
+per-slot outputs (``best``, ``winner``) map every program onto the SAME
+[1, K] block, exploiting the sequential grid execution on a TPU core: each
+program folds its tile's segment max into the accumulator (max for prices,
+three-way merge for the tie-broken winner), with ``pl.when(i == 0)``
+initialization.  With bn = 8 and K = 4096 float32 the working set is
+8·4096·4 B ≈ 128 KiB — comfortably inside a v5e core's VMEM, and the
+scatter never leaves the tile (the one-hot trick: a segment max over k1 is
+a masked row-max, no gather/scatter primitives needed).
+
+The caller pads n to the tile size and K to the lane width; padded rows
+are inactive and padded slots carry weight 0 at price +big, so neither can
+attract or place a bid.  ``kernels/ref.py::auction_bid_ref`` is the pure
+jnp oracle; the interpret-mode kernel is bit-identical to it (same op
+order; max/argmax reductions are order-independent, the one-hot price
+gather adds exact zeros).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BN = 8          # request rows per tile
+LANE = 128      # slot-dimension padding multiple on real hardware
+
+
+def _bid_kernel(b_ref, p_ref, a_ref, e_ref, best_ref, win_ref, wants_ref,
+                *, n_total: int, bn: int):
+    i = pl.program_id(0)
+    B = b_ref[...]                       # [bn, K] slot-level weights
+    prices = p_ref[...]                  # [1, K]
+    act = a_ref[...] != 0                # [bn, 1]
+    eps = e_ref[0, 0]
+    K = B.shape[1]
+    big = jnp.asarray(jnp.finfo(B.dtype).max / 4, B.dtype)
+
+    P = jnp.where(act, B - prices, -big)                     # [bn, K]
+    v1 = P.max(axis=1)
+    k1 = P.argmax(axis=1)
+    onehot = jax.lax.broadcasted_iota(jnp.int32, (bn, K), 1) == k1[:, None]
+    v2 = jnp.maximum(jnp.where(onehot, -big, P).max(axis=1), 0.0)
+    wants = act[:, 0] & (v1 > 0.0)
+    # prices[k1] as a masked sum: exactly one nonzero term, so bit-exact
+    p_k1 = jnp.where(onehot, prices, 0.0).sum(axis=1)
+    bid = p_k1 + (v1 - v2) + eps
+
+    # segment max of bids into slots, entirely within the tile
+    contrib = jnp.where(onehot & wants[:, None], bid[:, None], -big)
+    tile_best = contrib.max(axis=0)                          # [K]
+    rowid = i * bn + jax.lax.broadcasted_iota(jnp.int32, (bn, K), 0)
+    cand = jnp.where((contrib == tile_best[None, :]) & (contrib > -big),
+                     rowid, n_total)
+    tile_win = cand.min(axis=0).astype(jnp.int32)            # [K]
+
+    wants_ref[...] = wants[:, None].astype(jnp.int32)
+
+    @pl.when(i == 0)
+    def _init():
+        best_ref[...] = tile_best[None, :]
+        win_ref[...] = tile_win[None, :]
+
+    @pl.when(i > 0)
+    def _fold():
+        prev_best = best_ref[0, :]
+        prev_win = win_ref[0, :]
+        # ties to the lowest request index; earlier tiles hold lower rows,
+        # so equality keeps the accumulated winner via min
+        best_ref[...] = jnp.maximum(prev_best, tile_best)[None, :]
+        win_ref[...] = jnp.where(
+            tile_best > prev_best, tile_win,
+            jnp.where(tile_best < prev_best, prev_win,
+                      jnp.minimum(prev_win, tile_win)))[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def auction_bid(B, prices, active, eps, *, bn: int = BN,
+                interpret: bool = True):
+    """One Jacobi forward-bidding round over slot-level weights.
+
+    ``B``: [n, K] non-negative weights; ``prices``: [K]; ``active``: [n]
+    bool (unassigned, not parked); ``eps`` scalar.  Returns
+    ``(best, winner, wants)``: the per-slot segment-max bid [K] (−big where
+    no bid), the winning request per slot [K] int32 (n where none), and the
+    per-request wants-to-bid mask [n] bool (active rows with positive top
+    profit; active rows with ``~wants`` park on the outside option).
+
+    n is padded to the tile size (and K to the lane width off-interpret)
+    internally; callers that pre-pad to power-of-two shape buckets hit a
+    single trace across batch-size wobble.
+    """
+    B = jnp.asarray(B)
+    n, K = B.shape
+    pn = (-n) % bn
+    pk = 0 if interpret else (-K) % LANE
+    big = jnp.asarray(jnp.finfo(B.dtype).max / 4, B.dtype)
+    if pn:
+        B = jnp.pad(B, ((0, pn), (0, 0)))
+        active = jnp.pad(jnp.asarray(active), (0, pn))
+    if pk:
+        # padded slots: weight 0 at price +big -> profit is hugely negative,
+        # so they can never be a request's top-2 nor receive a bid
+        B = jnp.pad(B, ((0, 0), (0, pk)))
+        prices = jnp.pad(jnp.asarray(prices), (0, pk), constant_values=big)
+    nn, kk = B.shape
+
+    best, winner, wants = pl.pallas_call(
+        functools.partial(_bid_kernel, n_total=nn, bn=bn),
+        grid=(nn // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, kk), lambda i: (i, 0)),
+            pl.BlockSpec((1, kk), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kk), lambda i: (0, 0)),
+            pl.BlockSpec((1, kk), lambda i: (0, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, kk), B.dtype),
+            jax.ShapeDtypeStruct((1, kk), jnp.int32),
+            jax.ShapeDtypeStruct((nn, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(B,
+      jnp.asarray(prices, B.dtype).reshape(1, kk),
+      jnp.asarray(active, jnp.int32).reshape(nn, 1),
+      jnp.asarray(eps, B.dtype).reshape(1, 1))
+    # padded rows never bid, so any no-winner sentinel folds back to n
+    return (best[0, :K], jnp.minimum(winner[0, :K], n),
+            wants[:n, 0].astype(bool))

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels.auction_bid import auction_bid
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.lcp_affinity import lcp_affinity
@@ -19,25 +20,35 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def auction_bid_op(B, prices, active, eps, *, bn=8):
+    """One forward-bidding round: B [n, K], prices [K], active [n], eps
+    scalar -> (best [K], winner [K], wants [n]); see kernels/auction_bid."""
+    return auction_bid(B, prices, active, eps, bn=bn, interpret=_interpret())
+
+
 def lcp_affinity_op(prompts, ledgers):
     """prompts [N, L], ledgers [N, M, L] -> lcp [N, M]."""
     return lcp_affinity(prompts, ledgers, interpret=_interpret())
 
 
 def flash_attention_op(q, k, v, *, causal=True, window=0, bq=128, bk=128):
+    """Tiled flash attention over [B, S, H, d] q/k/v (GQA by head group)."""
     return flash_attention(q, k, v, causal=causal, window=window, bq=bq,
                            bk=bk, interpret=_interpret())
 
 
 def decode_attention_op(q, k_cache, v_cache, valid, *, bk=256):
+    """Single-token decode attention against a masked [B, M, Hkv, d] cache."""
     return decode_attention(q, k_cache, v_cache, valid, bk=bk,
                             interpret=_interpret())
 
 
 def wkv6_op(r, k, v, log_w, u, *, chunk=16):
+    """Chunked WKV6 (RWKV-6) recurrence over [B, S, H, dk] inputs."""
     return wkv6(r, k, v, log_w, u, chunk=chunk, interpret=_interpret())
 
 
 def ssd_op(x, bmat, cmat, dt, a_log, d_skip, *, chunk=16):
+    """Chunked SSD (Mamba-2) state-space scan over [B, S, H, hd] inputs."""
     return ssd(x, bmat, cmat, dt, a_log, d_skip, chunk=chunk,
                interpret=_interpret())

@@ -28,6 +28,38 @@ def lcp_ref(prompts: np.ndarray, ledgers: np.ndarray) -> np.ndarray:
     return out
 
 
+# ---------------- auction bidding round ----------------
+
+def auction_bid_ref(B, prices, active, eps):
+    """One Jacobi forward-bidding round, pure jnp (the kernel's oracle).
+
+    B: [n, K] slot-level weights; prices: [K]; active: [n] bool; eps scalar.
+    Returns (best [K], winner [K] int32, wants [n] bool) — the segment-max
+    bid per slot, the winning request per slot (ties to the lowest index,
+    n where no bid), and which active requests bid at all (top profit > 0).
+    """
+    B = jnp.asarray(B)
+    prices = jnp.asarray(prices, B.dtype)
+    active = jnp.asarray(active, bool)
+    n, K = B.shape
+    big = jnp.asarray(jnp.finfo(B.dtype).max / 4, B.dtype)
+    P = jnp.where(active[:, None], B - prices[None, :], -big)
+    v1 = P.max(axis=1)
+    k1 = P.argmax(axis=1)
+    v2 = jnp.maximum(
+        jnp.where(jnp.arange(K)[None, :] == k1[:, None], -big, P).max(axis=1),
+        0.0)
+    wants = active & (v1 > 0.0)
+    bid = prices[k1] + (v1 - v2) + eps
+    best = jnp.full((K,), -big, B.dtype).at[
+        jnp.where(wants, k1, K)].max(bid, mode="drop")
+    at_best = wants & (bid == best[jnp.minimum(k1, K - 1)])
+    winner = jnp.full((K,), n, jnp.int32).at[
+        jnp.where(at_best, k1, K)].min(
+            jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return best, winner, wants
+
+
 # ---------------- attention ----------------
 
 def attention_ref(q, k, v, *, causal=True, window=0, scale=None):

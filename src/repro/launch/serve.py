@@ -9,16 +9,17 @@ import json
 
 from repro.core import IEMASRouter
 from repro.core.baselines import BASELINES
+from repro.core.solvers import available_solvers
 from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
 
 
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
                  solver: str = "mcmf", warm_start: bool = False,
-                 batched: bool = True,
+                 spill: bool = True, batched: bool = True,
                  predictor_backend: str = "numpy", seed: int = 0):
     if name == "iemas":
         return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
-                           solver=solver, warm_start=warm_start,
+                           solver=solver, warm_start=warm_start, spill=spill,
                            batched=batched,
                            predictor_backend=predictor_backend)
     return BASELINES[name](infos, seed=seed)
@@ -35,11 +36,15 @@ def main():
                     help="shard Phase 2 across K proxy hubs (§4.4); each "
                          "batch is auctioned per hub block")
     ap.add_argument("--solver", default="mcmf",
-                    choices=["mcmf", "dense", "dense-jax"])
+                    choices=available_solvers(),
+                    help="Phase-2 backend from the core/solvers registry")
     ap.add_argument("--warm-start", action="store_true",
                     help="seed each hub's dense auction from the previous "
                          "round's slot prices (cold-starts on membership "
-                         "changes; dense solvers only)")
+                         "changes; warm-start-capable solvers only)")
+    ap.add_argument("--no-spill", action="store_true",
+                    help="disable the cross-hub spill re-auction of "
+                         "requests a saturated hub left unmatched")
     ap.add_argument("--payment-mode", default="warmstart",
                     choices=["warmstart", "naive"])
     ap.add_argument("--scalar-phase1", action="store_true",
@@ -61,6 +66,7 @@ def main():
     router = build_router(args.router, cluster.agent_infos(), n_hubs=args.hubs,
                           payment_mode=args.payment_mode, solver=args.solver,
                           warm_start=args.warm_start,
+                          spill=not args.no_spill,
                           batched=not args.scalar_phase1,
                           predictor_backend=args.predictor_backend,
                           seed=args.seed)

@@ -1,0 +1,295 @@
+"""Pallas auction backend: bidding-round kernel bit-parity vs the jnp
+oracle, full-solve parity vs the NumPy reference backend (including
+degenerate shapes), warm starts, the sharded/spill paths, and the solver
+registry protocol contract."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.auction import (SPILL_HUB, run_auction, run_sharded_auction)
+from repro.core.solvers import (SolverBackend, available_solvers, get_solver,
+                                register_solver, solve_dense_auction,
+                                solve_dense_auction_pallas)
+
+ATOL = 1e-6
+
+
+def _instance(rng, n_max=24, m_max=12):
+    n = int(rng.integers(1, n_max + 1))
+    m = int(rng.integers(1, m_max + 1))
+    sparsity = rng.uniform(0.0, 0.7)
+    values = rng.uniform(0, 6, (n, m)) * (rng.random((n, m)) > sparsity)
+    costs = rng.uniform(0, 3, (n, m))
+    caps = rng.integers(1, 5, m).tolist()
+    return values, costs, caps
+
+
+# ------------------------------------------------------ kernel bit parity --
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6))
+def test_bid_kernel_bit_parity_with_oracle(seed):
+    """Interpret-mode kernel == pure-jnp oracle, bit for bit."""
+    from repro.kernels.ops import auction_bid_op
+    from repro.kernels.ref import auction_bid_ref
+
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 48))
+    K = int(rng.integers(1, 72))
+    B = np.maximum(rng.uniform(-1, 4, (n, K)), 0.0).astype(np.float32)
+    prices = rng.uniform(0, 3, K).astype(np.float32)
+    active = rng.random(n) > rng.uniform(0, 1)
+    eps = np.float32(rng.uniform(1e-4, 0.5))
+    got = auction_bid_op(B, prices, active, eps)
+    want = auction_bid_ref(B, prices, active, eps)
+    for g, w, name in zip(got, want, ("best", "winner", "wants")):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), \
+            f"{name} mismatch (n={n}, K={K})"
+
+
+def test_bid_kernel_parity_degenerate_inputs():
+    """Single request / single slot / nobody active / all-zero weights."""
+    from repro.kernels.ops import auction_bid_op
+    from repro.kernels.ref import auction_bid_ref
+
+    cases = [
+        (np.ones((1, 1), np.float32), np.zeros(1, np.float32),
+         np.ones(1, bool)),
+        (np.zeros((4, 3), np.float32), np.zeros(3, np.float32),
+         np.ones(4, bool)),
+        (np.ones((5, 2), np.float32), np.ones(2, np.float32),
+         np.zeros(5, bool)),
+        (np.full((3, 7), 2.5, np.float32), np.zeros(7, np.float32),
+         np.ones(3, bool)),   # total ties
+    ]
+    for B, prices, active in cases:
+        got = auction_bid_op(B, prices, active, np.float32(0.1))
+        want = auction_bid_ref(B, prices, active, np.float32(0.1))
+        for g, w in zip(got, want):
+            assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+# ------------------------------------------------------- full-solve parity --
+def test_pallas_solver_matches_numpy_backend():
+    """Assignments, Clarke payments and certificates track the float64
+    NumPy backend within the float32 staged tolerances."""
+    rng = np.random.default_rng(11)
+    agreed = 0
+    for _ in range(6):
+        values, costs, caps = _instance(rng)
+        r_np = run_auction(values, costs, caps, solver="dense")
+        r_pl = run_auction(values, costs, caps, solver="pallas")
+        tol = max(ATOL, r_pl.solver_stats["gap_bound"] + 1e-4)
+        assert abs(r_np.welfare - r_pl.welfare) <= tol
+        assert r_pl.solver_stats["gap_bound"] == pytest.approx(
+            2.0 * values.shape[0] * r_pl.solver_stats["eps"])
+        if r_pl.assignment == r_np.assignment:
+            agreed += 1
+            assert np.allclose(r_pl.payments, r_np.payments, atol=1e-4)
+    assert agreed >= 3  # ties aside, the float32 path finds the optimum
+
+
+def test_pallas_solver_degenerate_shapes():
+    from repro.core.solvers.dense_common import DenseAuctionResult
+
+    # n=1, one agent
+    res = solve_dense_auction_pallas(np.array([[2.0]]), [1])
+    assert res.assignment == [0] and res.welfare == pytest.approx(2.0, abs=1e-4)
+    # all-zero weights: nobody matches
+    res = solve_dense_auction_pallas(np.zeros((3, 2)), [1, 1])
+    assert res.assignment == [-1, -1, -1] and res.welfare == 0.0
+    # zero capacity
+    res = solve_dense_auction_pallas(np.ones((2, 2)), [0, 0])
+    assert res.assignment == [-1, -1]
+    # capacity > n clamps to n slots
+    res = solve_dense_auction_pallas(np.array([[2.0]]), [50])
+    assert isinstance(res, DenseAuctionResult)
+    assert res.assignment == [0] and res.welfare == pytest.approx(2.0, abs=1e-4)
+    # empty request set
+    res = solve_dense_auction_pallas(np.zeros((0, 2)), [1, 1])
+    assert res.assignment == [] and res.welfare == 0.0
+
+
+def test_pallas_warm_start_roundtrip():
+    rng = np.random.default_rng(5)
+    values, costs, caps = _instance(rng, 16, 6)
+    w = np.maximum(values - costs, 0.0)
+    cold = solve_dense_auction_pallas(w, caps)
+    warm = solve_dense_auction_pallas(w, caps, start_prices=cold.slot_prices)
+    assert warm.warm_started and not warm.fallback
+    assert warm.welfare == pytest.approx(cold.welfare, abs=1e-4)
+    bad = np.ones(len(cold.slot_prices) + 3)
+    with pytest.raises(ValueError, match="slot layout"):
+        solve_dense_auction_pallas(w, caps, start_prices=bad)
+
+
+def test_pallas_run_auction_full_result():
+    rng = np.random.default_rng(7)
+    values, costs, caps = _instance(rng, 16, 8)
+    r = run_auction(values, costs, caps, solver="pallas")
+    assert r.solver_stats["solver"] == "pallas"
+    for j, i in enumerate(r.assignment):
+        if i < 0:
+            assert r.payments[j] == 0.0
+        else:
+            assert r.payments[j] >= costs[j, i] - 1e-4
+
+
+@pytest.mark.slow
+def test_pallas_sharded_batch_matches_per_block():
+    """The vmapped bucket batch path equals solo pallas solves per block."""
+    rng = np.random.default_rng(13)
+    values = rng.uniform(0, 5, (24, 8))
+    costs = rng.uniform(0, 2, (24, 8))
+    caps = rng.integers(1, 4, 8).tolist()
+    blocks = {0: (list(range(12)), [0, 1, 2, 3]),
+              1: (list(range(12, 24)), [4, 5, 6, 7])}
+    sharded = run_sharded_auction(values, costs, caps, blocks, solver="pallas")
+    for h, (r_idx, a_idx) in blocks.items():
+        solo = run_auction(values[np.ix_(r_idx, a_idx)],
+                           costs[np.ix_(r_idx, a_idx)],
+                           [caps[i] for i in a_idx], solver="pallas")
+        tol = max(ATOL, sharded[h].solver_stats["gap_bound"] + 1e-4)
+        assert abs(sharded[h].welfare - solo.welfare) <= tol
+
+
+# ------------------------------------------------------------------ spill --
+def test_cross_hub_spill_rescues_unmatched():
+    """A saturated hub's losers re-auction over another hub's slack."""
+    # hub 0: 4 requests, 1 slot; hub 1: 0 requests, 3 slots of slack
+    values = np.full((4, 4), 4.0)
+    costs = np.full((4, 4), 1.0)
+    caps = [1, 1, 1, 1]
+    blocks = {0: ([0, 1, 2, 3], [0]), 1: ([], [1, 2, 3])}
+    for solver in ("dense", "mcmf", "pallas"):
+        plain = run_sharded_auction(values, costs, caps, blocks, solver=solver)
+        spilled = run_sharded_auction(values, costs, caps, blocks,
+                                      solver=solver, spill=True)
+        # first-round results untouched (splice parity preserved)
+        for h in plain:
+            assert spilled[h].assignment == plain[h].assignment
+        sp = spilled[SPILL_HUB]
+        info = sp.solver_stats["spill"]
+        assert info["candidates"] == 3 and info["rescued"] == 3
+        assert info["a_idx"] == [1, 2, 3]
+        w_plain = sum(r.welfare for r in plain.values())
+        w_spill = sum(r.welfare for h, r in spilled.items())
+        assert w_spill == pytest.approx(w_plain + 3 * 3.0, abs=1e-3)
+
+
+def test_spill_noop_when_no_residual_or_no_losers():
+    values = np.full((2, 2), 4.0)
+    costs = np.full((2, 2), 1.0)
+    # everyone matches in round 1 -> no candidates
+    res = run_sharded_auction(values, costs, [1, 1],
+                              {0: ([0], [0]), 1: ([1], [1])},
+                              solver="dense", spill=True)
+    assert SPILL_HUB not in res
+    # losers exist but zero residual capacity -> no spill round
+    res = run_sharded_auction(values, costs, [1, 1],
+                              {0: ([0, 1], [0, 1])}, solver="dense",
+                              spill=True)
+    assert SPILL_HUB not in res
+
+
+def test_router_spill_rescues_and_accounts():
+    from repro.core import AgentInfo, IEMASRouter, Request, TokenPrices
+
+    def agents():
+        # two single-capacity "code" agents, two idle "math" agents
+        return [AgentInfo(f"c{i}", TokenPrices(0.001, 0.0001, 0.003), 1,
+                          ("code",)) for i in range(2)] + \
+               [AgentInfo(f"m{i}", TokenPrices(0.001, 0.0001, 0.003), 1,
+                          ("math",)) for i in range(2)]
+
+    def reqs(k):
+        return [Request(f"r{j}", f"d{j}", np.arange(40, dtype=np.int32), 0,
+                        domain="code") for j in range(k)]
+
+    on = IEMASRouter(agents(), n_hubs=2, solver="dense", spill=True,
+                     predictor_kw={"warm_n": 99})
+    off = IEMASRouter(agents(), n_hubs=2, solver="dense", spill=False,
+                      predictor_kw={"warm_n": 99})
+    d_on = on.route_batch(reqs(4), {})
+    d_off = off.route_batch(reqs(4), {})
+    assert sum(1 for d in d_on if d.agent_id) > \
+        sum(1 for d in d_off if d.agent_id)
+    assert on.accounts["spill_rescued"] > 0
+    assert on.accounts["matched"] - on.accounts["unmatched"] >= \
+        off.accounts["matched"] - off.accounts["unmatched"]
+    # spill winners must route to real agents with per-agent capacity kept
+    used = {}
+    for d in d_on:
+        if d.agent_id:
+            used[d.agent_id] = used.get(d.agent_id, 0) + 1
+    assert all(v <= 1 for v in used.values())
+
+
+def test_router_spill_rescues_from_dead_hub():
+    """A hub whose live agents are all quarantined still spills its pinned
+    requests onto other hubs' residual capacity (empty round-1 block)."""
+    from repro.core import AgentInfo, IEMASRouter, Request, TokenPrices
+
+    agents = [AgentInfo(f"c{i}", TokenPrices(0.001, 0.0001, 0.003), 1,
+                        ("code",)) for i in range(2)] + \
+             [AgentInfo(f"m{i}", TokenPrices(0.001, 0.0001, 0.003), 2,
+                        ("math",)) for i in range(2)]
+    router = IEMASRouter(agents, n_hubs=2, solver="dense", spill=True,
+                         predictor_kw={"warm_n": 99})
+    router.quarantine("c0")
+    router.quarantine("c1")
+    reqs = [Request(f"r{j}", f"d{j}", np.arange(30, dtype=np.int32), 0,
+                    domain="code") for j in range(2)]
+    decisions = router.route_batch(reqs, {})
+    assert all(d.agent_id in ("m0", "m1") for d in decisions)
+    assert router.accounts["spill_rescued"] == 2
+    assert router.accounts["matched"] == 2
+    assert router.accounts["unmatched"] == 0
+
+
+# --------------------------------------------------------------- registry --
+def test_every_registered_backend_satisfies_protocol():
+    for name in available_solvers():
+        backend = get_solver(name)
+        assert isinstance(backend, SolverBackend), name
+        assert backend.name == name
+        assert isinstance(backend.supports_warm_start, bool)
+        assert isinstance(backend.supports_batch, bool)
+
+
+def test_registry_rejects_unknown_and_malformed():
+    with pytest.raises(ValueError, match="unknown solver"):
+        get_solver("nope")
+
+    class NotABackend:
+        name = "broken"
+
+    with pytest.raises(TypeError):
+        register_solver(NotABackend())
+
+
+def test_backend_certificates():
+    rng = np.random.default_rng(3)
+    values, costs, caps = _instance(rng, 10, 5)
+    for name in available_solvers():
+        backend = get_solver(name)
+        r = run_auction(values, costs, caps, solver=name)
+        cert = backend.certificate(r)
+        assert cert >= 0.0
+        if name == "mcmf":
+            assert cert == 0.0
+        else:
+            assert cert == r.solver_stats["gap_bound"]
+
+
+def test_auction_module_has_no_per_solver_branching():
+    """The acceptance criterion, enforced: core/auction.py resolves every
+    solver through the registry — no conditionals on the solver name."""
+    import inspect
+    import re
+
+    import repro.core.auction as auction
+
+    src = inspect.getsource(auction)
+    assert not re.search(r"solver\s*(==|!=|\bin\b\s*\()", src), \
+        "core/auction.py still branches on the solver name"
+    assert "get_solver" in src

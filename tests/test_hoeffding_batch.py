@@ -108,3 +108,40 @@ def test_jax_backend_close_to_numpy_oracle():
     ref = tree.predict_batch(X)
     jx = tree.predict_batch(X, backend="jax")
     assert np.max(np.abs(jx - ref)) < 1e-4
+
+
+def test_jax_backend_shape_buckets_bound_retracing():
+    """descend_jax pads the batch, node pool and depth to pow-2 buckets, so
+    batch-size wobble and tree splits reuse O(log) traced programs."""
+    from repro.core.hoeffding import _jax_descend
+
+    rng = np.random.default_rng(5)
+    tree = HoeffdingTreeRegressor(4, **SPLITTY)
+    for _ in range(150):
+        x = rng.uniform(-1, 1, 4)
+        tree.learn_one(x, 4.0 * (x[1] > 0) + rng.normal(0, 0.1))
+    before = _jax_descend()._cache_size()
+    # every batch size in one pow-2 bucket (9..16) plus ongoing splits
+    for b in range(9, 17):
+        X = rng.uniform(-1, 1, (b, 4))
+        ref = tree.predict_batch(X)
+        jx = tree.predict_batch(X, backend="jax")
+        assert np.max(np.abs(jx - ref)) < 1e-4
+        tree.learn_one(rng.uniform(-1, 1, 4), rng.normal())
+    grew = _jax_descend()._cache_size() - before
+    assert grew <= 2, f"descend_jax retraced {grew} times across one bucket"
+
+
+def test_jax_backend_bucket_padding_is_behavior_neutral():
+    """Padded rows/nodes never leak into real outputs, any batch size."""
+    rng = np.random.default_rng(7)
+    tree = HoeffdingTreeRegressor(3, **SPLITTY)
+    for _ in range(200):
+        x = rng.uniform(-1, 1, 3)
+        tree.learn_one(x, 3.0 * (x[0] > 0) + rng.normal(0, 0.05))
+    for b in (1, 2, 7, 8, 9, 31, 64):
+        X = rng.uniform(-1, 1, (b, 3))
+        ref = tree.predict_batch(X)
+        jx = tree.predict_batch(X, backend="jax")
+        assert jx.shape == (b,)
+        assert np.max(np.abs(jx - ref)) < 1e-4

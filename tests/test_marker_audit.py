@@ -14,6 +14,7 @@ TIER1_MODULES = {
     "test_affinity",
     "test_auction",
     "test_auction_dense",
+    "test_auction_pallas",
     "test_docs",
     "test_hoeffding",
     "test_hoeffding_batch",
