@@ -158,7 +158,12 @@ def run(smoke: bool = False, oracle: bool | None = None):
         pin, _ = _time(lambda: run_sharded_auction(
             values, costs, caps, pblocks, solver="dense"), 1)
         # spill_agents widens the residual market to hubs pinned routing
-        # sent nothing (their capacity is 100% idle), like the router does
+        # sent nothing (their capacity is 100% idle), like the router does;
+        # the spill round is warm-seeded from the donor hubs' duals by
+        # default — the cold run quantifies what the seed saves
+        pin_spill_cold, t_spill_cold = _time(lambda: run_sharded_auction(
+            values, costs, caps, pblocks, solver="dense", spill=True,
+            spill_agents=list(range(m)), spill_warm=False), 1)
         pin_spill, t_spill = _time(lambda: run_sharded_auction(
             values, costs, caps, pblocks, solver="dense", spill=True,
             spill_agents=list(range(m))), 1)
@@ -166,6 +171,10 @@ def run(smoke: bool = False, oracle: bool | None = None):
         sp = pin_spill.get(SPILL_HUB)
         spill_stats = sp.solver_stats["spill"] if sp is not None else \
             {"rescued": 0, "candidates": 0}
+        sp_cold = pin_spill_cold.get(SPILL_HUB)
+        spill_rounds_warm = sp.solver_stats["rounds"] if sp is not None else 0
+        spill_rounds_cold = (sp_cold.solver_stats["rounds"]
+                             if sp_cold is not None else 0)
 
         cols = [f"global_us={t_global:.0f}", f"shard_us={t_shard:.0f}",
                 f"shard_jax_us={t_jax:.0f}", f"shard_pallas_us={t_pallas:.0f}",
@@ -178,7 +187,9 @@ def run(smoke: bool = False, oracle: bool | None = None):
                 f"pin_spill_frac={w_pin_spill / max(w_global, 1e-12):.4f}",
                 f"spill_rescued={spill_stats['rescued']}"
                 f"/{spill_stats['candidates']}",
-                f"pin_spill_us={t_spill:.0f}"]
+                f"pin_spill_us={t_spill:.0f}",
+                f"pin_spill_cold_us={t_spill_cold:.0f}",
+                f"spill_rounds={spill_rounds_warm}w/{spill_rounds_cold}c"]
 
         want_oracle = oracle if oracle is not None else (row == 0)
         if want_oracle and n <= 512:
@@ -200,6 +211,15 @@ def run(smoke: bool = False, oracle: bool | None = None):
             assert spill_stats["rescued"] > 0, "spill rescued nothing"
             assert w_pin_spill > w_pin, \
                 f"spill welfare {w_pin_spill} <= pinned {w_pin}"
+            # donor-dual seeding: warm-spill rounds never exceed cold's,
+            # and the rescue welfare matches within certificates
+            assert spill_rounds_warm <= spill_rounds_cold, \
+                f"warm spill rounds {spill_rounds_warm} > " \
+                f"cold {spill_rounds_cold}"
+            if sp is not None and sp_cold is not None:
+                gap = (sp.solver_stats["gap_bound"]
+                       + sp_cold.solver_stats["gap_bound"] + 1e-9)
+                assert abs(sp.welfare - sp_cold.welfare) <= gap
             for h in pin:
                 assert pin_spill[h].assignment == pin[h].assignment, \
                     f"hub {h}: spill round altered a first-round result"

@@ -18,6 +18,10 @@ reduced sizes used in CI-style runs).
   phase1   §4.1     — Phase-1 QoS throughput: scalar per-pair loop vs the
                       batched compiled-forest tensor path (+ jax descend)
   kernels  —        — kernel validation-path timings + batched-LCP speedup
+  servingscale §5   — event-driven open-loop serving at 16->128 agents x
+                      1k->10k dialogues: per-phase routing overhead as a
+                      fraction of simulated engine compute + the >=10%
+                      crossover report
 """
 from __future__ import annotations
 
@@ -56,6 +60,9 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import kernel_bench
         kernel_bench.run()
+    if want("servingscale"):
+        from benchmarks import serving_scale
+        serving_scale.run(smoke=QUICK)
     if want("fig3"):
         from benchmarks import fig3_predictor
         fig3_predictor.run()

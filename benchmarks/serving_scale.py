@@ -1,0 +1,170 @@
+"""Serving-scale sweep: routing overhead vs engine compute, 16 -> 128 agents.
+
+The ISSUE-5 tentpole measurement (ROADMAP: "scale the serving simulation to
+100+ agents / 10k dialogues and profile where routing overhead crosses 10%
+of engine compute").  For each workload family the event-driven open-loop
+simulator (`repro.serving.simulator.EventSimulator`) drives a Poisson
+dialogue stream through an analytic-engine cluster while a
+`RoutingProfiler` attributes the router's real wall-clock per phase
+(Phase-1 predict, Phase-2 solve per backend, cross-hub spill, price-book
+ops, Phase-4 feedback) against the *simulated engine compute* the cluster
+reports.  Per cell it emits::
+
+    servingscale/<family>_a<agents>_d<dialogues>,<wall us>,
+        overhead_pct=..  p1_pct=..  p2_pct=..  spill_pct=..  book_pct=..
+        fb_pct=..  engine_s=..  route_calls=..  n=..  kv=..  ...
+
+and after each family a crossover line naming the smallest fleet size where
+total routing overhead reached 10% of engine compute (or reporting that it
+never did — measured: the dense hub-sharded warm-started hot path stays at
+4–7% up to 128 agents / 10k dialogues; see docs/benchmarks.md for the
+table).  Pass ``--oracle`` to add an exact-MCMF row at the smallest size:
+at micro-batch markets even the Python oracle is affordable (~1.3%) — its
+blowup is market-size-driven (`mcmf_scaling.py`), which is exactly what
+hub sharding keeps bounded.
+
+Acceptance gate: the full run completes the 128-agent / 10k-dialogue cell
+per family (all dialogues finish, nothing truncated).  ``--smoke`` runs one
+reduced cell with structural gates for CI.
+
+    PYTHONPATH=src:. python benchmarks/serving_scale.py [--smoke] [--oracle]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import QUICK, emit
+from repro.configs.iemas_cluster import SCALE_128
+from repro.serving import (EventSimulator, PoissonArrivals, RoutingProfiler,
+                           SimCluster, WorkloadSpec, iter_dialogues,
+                           make_router)
+from repro.serving.workload import WORKLOADS
+
+#: (n_agents, n_dialogues) sweep — dialogues scale with the fleet so every
+#: cell runs a comparable virtual-time window at the SCALE_128 per-agent
+#: arrival rate; the last entry is the headline SCALE_128 cell itself
+SIZES = [(16, 1000), (32, 2000), (64, 5000),
+         (SCALE_128.n_agents, SCALE_128.n_dialogues)]
+SMOKE_SIZES = [(16, 150)]
+CROSSOVER = 0.10
+
+
+def run_cell(family: str, n_agents: int, n_dialogues: int, *,
+             solver: str | None = None, seed: int = 0) -> dict:
+    """One sweep cell at the `SCALE_128` preset knobs (fleet size varies)."""
+    cfg = SCALE_128
+    cluster = SimCluster(n_agents=n_agents, seed=seed,
+                         engine_mode=cfg.engine_mode,
+                         max_new_tokens=cfg.max_new_tokens)
+    router = make_router(cluster, cfg.router_config(n_agents),
+                         **({"solver": solver} if solver else {}))
+    spec = WorkloadSpec(family, n_dialogues=n_dialogues, seed=seed + 1)
+    sim = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=PoissonArrivals(
+                             rate=cfg.arrival_rate(n_agents), seed=seed + 2),
+                         batch_cap=cfg.batch_cap,
+                         batch_window=cfg.batch_window,
+                         max_inflight=cfg.max_inflight,
+                         max_new_tokens=cfg.max_new_tokens,
+                         profiler=RoutingProfiler(), lean=True,
+                         max_events=20_000_000, max_rounds=2_000_000)
+    t0 = time.perf_counter()
+    out = sim.run()
+    out["bench_wall_s"] = time.perf_counter() - t0
+    return out
+
+
+def _pct(report: dict, prefix: str) -> float:
+    """Summed frac-of-engine (as %) over phases starting with ``prefix``.
+
+    ``frac_of_engine`` is None on zero-engine-compute runs (see
+    `RoutingProfiler.report`); such phases contribute 0 here so a
+    degenerate cell still emits a diagnosable row.
+    """
+    return 100.0 * sum(p["frac_of_engine"] or 0.0
+                       for name, p in report["phases"].items()
+                       if name.startswith(prefix))
+
+
+def _row(family: str, n_agents: int, n_dialogues: int, out: dict) -> float:
+    """Emit one CSV row; returns the total overhead fraction (0 when no
+    engine compute was simulated — a degenerate cell)."""
+    rep = out["routing"]
+    overhead = rep["overhead_frac"] or 0.0
+    route_calls = rep["phases"].get("route_batch", {}).get("calls", 0)
+    cols = [
+        f"overhead_pct={100.0 * overhead:.2f}",
+        f"p1_pct={_pct(rep, 'phase1_predict'):.2f}",
+        f"p2_pct={_pct(rep, 'phase2_solve'):.2f}",
+        f"spill_pct={_pct(rep, 'phase2_spill'):.2f}",
+        f"book_pct={_pct(rep, 'price_book'):.3f}",
+        f"fb_pct={_pct(rep, 'phase4_feedback'):.2f}",
+        f"engine_s={rep['engine_compute_s']:.1f}",
+        f"route_calls={route_calls}",
+        f"n={out.get('n', 0)}",
+        f"kv={out.get('kv_hit_rate', 0.0):.3f}",
+        f"lat_p95_ms={out.get('latency_ms_p95', 0.0):.1f}",
+        f"wait_ms={1e3 * out.get('queue_wait_mean_s', 0.0):.1f}",
+        f"done={out.get('dialogues_completed', 0)}"
+        f"/{out.get('dialogues_arrived', 0)}",
+        f"truncated={out.get('truncated', False)}",
+    ]
+    emit(f"servingscale/{family}_a{n_agents}_d{n_dialogues}",
+         out["bench_wall_s"] * 1e6, " ".join(cols))
+    return overhead
+
+
+def run(smoke: bool = False, oracle: bool = False):
+    """Sweep the (family x fleet-size) grid and report 10% crossovers."""
+    quick = smoke or QUICK
+    sizes = SMOKE_SIZES if quick else SIZES
+    families = WORKLOADS[:1] if smoke else WORKLOADS
+    for family in families:
+        crossover_at = None
+        for n_agents, n_dialogues in sizes:
+            out = run_cell(family, n_agents, n_dialogues)
+            overhead = _row(family, n_agents, n_dialogues, out)
+            if crossover_at is None and overhead >= CROSSOVER:
+                crossover_at = n_agents
+            if smoke:
+                # structural gates (size-independent correctness)
+                rep = out["routing"]
+                assert out["dialogues_completed"] == n_dialogues, \
+                    f"{out['dialogues_completed']}/{n_dialogues} completed"
+                assert not out["truncated"], "smoke run truncated"
+                assert rep["engine_compute_s"] > 0
+                assert 0 < rep["overhead_frac"] < 10
+                for need in ("route_batch", "phase1_predict",
+                             "phase2_solve[dense]", "phase4_feedback"):
+                    assert need in rep["phases"], f"missing phase {need}"
+                assert out["requests_per_dialogue_max"] >= 1
+            else:
+                assert not out["truncated"], \
+                    f"{family} a{n_agents} d{n_dialogues} truncated"
+        if oracle and not smoke:
+            # exact-solver comparison row: the Python oracle at micro-batch
+            # markets (its blowup is market-size-driven — mcmf_scaling.py)
+            n_agents, n_dialogues = sizes[0]
+            out = run_cell(family, n_agents, max(200, n_dialogues // 5),
+                           solver="mcmf")
+            _row(f"{family}_mcmf", n_agents, max(200, n_dialogues // 5), out)
+        tag = (f"crossover at {crossover_at} agents" if crossover_at
+               else f"no >= {100 * CROSSOVER:.0f}% crossover up to "
+                    f"{sizes[-1][0]} agents")
+        print(f"servingscale/{family}_crossover,0.0,{tag}", flush=True)
+
+
+def main():
+    """CLI entry point."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one reduced cell + structural gates (CI)")
+    ap.add_argument("--oracle", action="store_true",
+                    help="add an exact-MCMF comparison row per family")
+    args = ap.parse_args()
+    run(smoke=args.smoke, oracle=args.oracle)
+
+
+if __name__ == "__main__":
+    main()

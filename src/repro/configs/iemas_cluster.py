@@ -76,6 +76,50 @@ class RouterConfig:
 
 DEFAULT_ROUTER = RouterConfig()
 
+
+@dataclass(frozen=True)
+class ClusterScaleConfig:
+    """Preset for open-loop scale runs (`repro.serving.simulator`).
+
+    Bundles the population size with the serving-loop knobs a scale run
+    needs to be meaningful: an analytic engine mode (real JAX engines at
+    128 agents would swamp the sweep in reduced-model matmuls), an
+    open-loop Poisson arrival rate (scaled per agent so every fleet size
+    runs a comparable virtual-time window), the streaming-admission
+    window, the micro-batch cap/window, and a hub-sharded warm-started
+    dense router.  This is the configuration `benchmarks/serving_scale.py`
+    sweeps (``run_cell`` consumes these fields at varying ``n_agents``).
+    """
+
+    n_agents: int = 128
+    n_dialogues: int = 10_000
+    engine_mode: str = "analytic"
+    rate_per_agent: float = 0.75   # Poisson dialogues/s per agent
+    max_inflight: int = 256        # streaming admission window
+    batch_cap: int = 64            # micro-batch size per router invocation
+    batch_window: float = 0.05     # batching delay, seconds
+    max_new_tokens: int = 6
+    agents_per_hub: int = 16       # n_hubs = max(1, n_agents // this)
+    solver: str = "dense"
+    warm_start: bool = True
+
+    def arrival_rate(self, n_agents: int | None = None) -> float:
+        """Open-loop arrival rate (dialogues/s) for a given fleet size."""
+        return self.rate_per_agent * (n_agents or self.n_agents)
+
+    def n_hubs(self, n_agents: int | None = None) -> int:
+        """Hub count for a given fleet size."""
+        return max(1, (n_agents or self.n_agents) // self.agents_per_hub)
+
+    def router_config(self, n_agents: int | None = None) -> RouterConfig:
+        """The matching mechanism-side RouterConfig."""
+        return RouterConfig(solver=self.solver, n_hubs=self.n_hubs(n_agents),
+                            warm_start=self.warm_start)
+
+
+#: the 128-agent / 10k-dialogue headline scale preset
+SCALE_128 = ClusterScaleConfig()
+
 MODEL_CLASSES = {
     # name: (n_layers, d_model, n_heads, d_ff, relative scale)
     # sized so CPU prefill compute dominates dispatch noise, preserving the

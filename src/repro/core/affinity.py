@@ -16,6 +16,8 @@ batched form is backed by the Pallas LCP kernel (repro.kernels) when
 """
 from __future__ import annotations
 
+import heapq
+
 import numpy as np
 
 
@@ -29,11 +31,31 @@ def lcp_length(a: np.ndarray, b: np.ndarray) -> int:
 
 
 class PrefixLedger:
-    """Per-(agent, dialogue) record of the last prompt each agent served."""
+    """Per-(agent, dialogue) record of the last prompt each agent served.
 
-    def __init__(self):
+    Entries are indexed per agent (``_by_agent``) so the hot-path queries —
+    ``recent_sessions`` every batch, ``evict``/``sessions`` on membership
+    events — cost O(sessions of that agent), not O(every ledger entry ever
+    written): at 10k streamed dialogues the flat scan made Phase 1 grow
+    quadratically over a serving run.
+
+    ``max_sessions_per_agent`` (None = unbounded, the default) LRU-caps the
+    tracked sessions per agent, bounding ledger memory on streamed runs.
+    Setting it to at least the agent's published ``cache_slots`` is
+    behavior-neutral on the router path: any session older than the
+    ``cache_slots`` most recent is presumed backend-evicted and has its
+    affinity zeroed by ``apply_lru`` anyway, so dropping its ledger entry
+    changes nothing the auction sees (the router sizes the cap from the
+    live agents' published cache capacities).
+    """
+
+    def __init__(self, max_sessions_per_agent: int | None = None):
         self._store: dict[tuple, np.ndarray] = {}
-        self._touch: dict[tuple, int] = {}
+        # agent_id -> {dialogue_id: last-touch clock}, kept in sync with
+        # _store (the per-agent LRU index; insertion order tracks recency
+        # because every touch deletes + reinserts)
+        self._by_agent: dict[str, dict[str, int]] = {}
+        self.max_sessions_per_agent = max_sessions_per_agent
         self._clock = 0
 
     def update(self, agent_id: str, dialogue_id: str, prompt_tokens) -> None:
@@ -41,16 +63,26 @@ class PrefixLedger:
         self._clock += 1
         self._store[(agent_id, dialogue_id)] = np.asarray(prompt_tokens,
                                                           dtype=np.int32)
-        self._touch[(agent_id, dialogue_id)] = self._clock
+        touched = self._by_agent.setdefault(agent_id, {})
+        touched.pop(dialogue_id, None)   # re-insert at the recent end
+        touched[dialogue_id] = self._clock
+        cap = self.max_sessions_per_agent
+        if cap is not None and len(touched) > cap:
+            victim = next(iter(touched))  # oldest (dict preserves order)
+            del touched[victim]
+            self._store.pop((agent_id, victim), None)
 
     def recent_sessions(self, agent_id: str, limit: int) -> set:
         """The ``limit`` most-recently-served sessions of an agent — a local
         LRU model of the backend's cache (the hub's 'compact cache-state
         summary', §4.4). Sessions beyond it are presumed evicted."""
-        items = [(self._touch[k], k[1]) for k in self._store
-                 if k[0] == agent_id]
-        items.sort(reverse=True)
-        return {d for _, d in items[:limit]}
+        touched = self._by_agent.get(agent_id)
+        if touched is None:
+            return set()
+        if len(touched) <= limit:
+            return set(touched)
+        return {d for d, _ in heapq.nlargest(limit, touched.items(),
+                                             key=lambda kv: kv[1])}
 
     def apply_lru(self, o: np.ndarray, dialogue_ids: list,
                   agent_ids: list, cache_slots: list) -> np.ndarray:
@@ -75,13 +107,17 @@ class PrefixLedger:
         """Drop ledger entries (agent cache eviction resync, Appx C.2.2)."""
         if dialogue_id is not None:
             self._store.pop((agent_id, dialogue_id), None)
+            touched = self._by_agent.get(agent_id)
+            if touched is not None:
+                touched.pop(dialogue_id, None)
         else:
-            for key in [k for k in self._store if k[0] == agent_id]:
-                self._store.pop(key)
+            for d in list(self._by_agent.get(agent_id, ())):
+                self._store.pop((agent_id, d), None)
+            self._by_agent.pop(agent_id, None)
 
     def sessions(self, agent_id: str) -> list[str]:
         """Dialogue ids with a live ledger entry for this agent."""
-        return [d for (a, d) in self._store if a == agent_id]
+        return list(self._by_agent.get(agent_id, ()))
 
     def affinity(self, agent_id: str, dialogue_id: str, prompt_tokens,
                  *, extension_only: bool = False) -> float:

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core.solvers import (AuctionResult, available_solvers, get_solver,
                                 solve_allocation)
+from repro.utils.timing import phase_scope
 
 __all__ = ["AuctionResult", "run_auction", "run_sharded_auction",
            "client_utilities", "solve_allocation", "available_solvers",
@@ -41,6 +42,8 @@ def _prune(values, costs) -> np.ndarray:
     w = np.asarray(values, dtype=np.float64) - np.asarray(costs,
                                                           dtype=np.float64)
     return np.where(w > 0, w, 0.0)
+
+
 
 
 def run_auction(values: np.ndarray, costs: np.ndarray, caps,
@@ -72,6 +75,8 @@ def run_sharded_auction(values: np.ndarray, costs: np.ndarray, caps,
                         start_prices: dict[int, np.ndarray] | None = None,
                         spill: bool = False,
                         spill_agents: list[int] | None = None,
+                        spill_warm: bool = True,
+                        profiler=None,
                         ) -> dict[int, AuctionResult]:
     """Phase 2 sharded across proxy hubs: one independent auction per block.
 
@@ -96,7 +101,16 @@ def run_sharded_auction(values: np.ndarray, costs: np.ndarray, caps,
     still holds hub by hub.  ``spill_agents`` widens the residual market to
     agents outside every block (a hub that received no requests this batch
     still has slack worth spilling onto); it defaults to the union of the
-    blocks' agents.
+    blocks' agents.  With ``spill_warm=True`` (default) the spill round is
+    seeded from the donor hubs' first-round duals: each agent's residual
+    slots inherit its *lowest* first-round slot prices (the unsold slots —
+    exactly the goods the spill market is selling), which the warm-capable
+    dense backends use as ε-scaling start prices.  ``spill_warm=False``
+    keeps the cold-start behaviour for A/B measurement.
+
+    ``profiler`` (duck-typed ``phase(name)`` context manager, e.g.
+    `repro.serving.simulator.RoutingProfiler`) attributes wall-clock to
+    ``phase2_solve[<solver>]`` and ``phase2_spill``.
 
     Returns ``{hub_id: AuctionResult}`` — assignments/payments indexed
     *within* the block; the caller maps them back through ``blocks[h]``
@@ -115,33 +129,78 @@ def run_sharded_auction(values: np.ndarray, costs: np.ndarray, caps,
         costs_b.append(costs[np.ix_(r_idx, a_idx)])
         caps_b.append([caps[i] for i in a_idx])
         seeds.append(sp.get(h) if backend.supports_warm_start else None)
-    if backend.supports_batch and len(blocks) > 1:
-        results = backend.solve_batch(ws, costs_b, caps_b,
-                                      payment_mode=payment_mode,
-                                      start_prices_list=seeds)
-    else:
-        results = [backend.solve(w, c, cb, payment_mode=payment_mode,
-                                 start_prices=s)
-                   for w, c, cb, s in zip(ws, costs_b, caps_b, seeds)]
+    with phase_scope(profiler, f"phase2_solve[{solver}]"):
+        if backend.supports_batch and len(blocks) > 1:
+            results = backend.solve_batch(ws, costs_b, caps_b,
+                                          payment_mode=payment_mode,
+                                          start_prices_list=seeds)
+        else:
+            results = [backend.solve(w, c, cb, payment_mode=payment_mode,
+                                     start_prices=s)
+                       for w, c, cb, s in zip(ws, costs_b, caps_b, seeds)]
     out = dict(zip(hub_ids, results))
     if spill:
-        spill_res = _spill_round(values, costs, caps, blocks, out, backend,
-                                 payment_mode, spill_agents)
+        with phase_scope(profiler, "phase2_spill"):
+            spill_res = _spill_round(values, costs, caps, blocks, out,
+                                     backend, payment_mode, spill_agents,
+                                     warm=spill_warm)
         if spill_res is not None:
             out[SPILL_HUB] = spill_res
     return out
 
 
+def _spill_seed(results, blocks, a_idx, residual, n_spill
+                ) -> np.ndarray | None:
+    """Warm-start seed for the spill market from the donor hubs' duals.
+
+    The spill market sells each agent's ``min(residual, n_spill)`` leftover
+    unit slots.  A first-round dense solve left per-slot prices behind
+    (``solver_stats["slot_prices"]`` / ``["slot_agent"]``); sorted
+    ascending, an agent's cheapest slots are the unsold ones — the very
+    goods on sale here — so they are a near-equilibrium seed for the
+    residual market.  Agents with no first-round dual state (e.g. members
+    of a hub that received no requests this batch) seed at 0, the free-slot
+    boundary price.  Returns None when no donor duals exist at all (exact
+    backends without persistent duals).
+    """
+    per_agent: dict[int, np.ndarray] = {}
+    for h, (_br, ba) in blocks.items():
+        stats = results[h].solver_stats
+        if "slot_prices" not in stats:
+            continue
+        sp = np.asarray(stats["slot_prices"], dtype=np.float64)
+        sa = np.asarray(stats["slot_agent"])
+        for li, gi in enumerate(ba):
+            per_agent[gi] = np.sort(sp[sa == li])
+    if not per_agent:
+        return None
+    segs = []
+    for gi in a_idx:
+        k = min(int(residual[gi]), n_spill)
+        seg = np.zeros(k)
+        prev = per_agent.get(gi)
+        if prev is not None and k:
+            take = min(k, len(prev))
+            seg[:take] = prev[:take]
+        segs.append(seg)
+    return np.concatenate(segs) if segs else None
+
+
 def _spill_round(values, costs, caps, blocks, results, backend,
-                 payment_mode, spill_agents=None) -> AuctionResult | None:
+                 payment_mode, spill_agents=None, warm: bool = True
+                 ) -> AuctionResult | None:
     """One cross-hub re-auction of first-round losers over residual slots.
 
     Gathers every request its hub left unmatched, computes each agent's
     residual capacity after the first round, and runs ONE more auction
     (same backend) over that global residual market.  Welfare can only
     increase: first-round matches are untouched and residual capacity was,
-    by construction, going unused.  Returns None when there is nothing to
-    re-auction (no losers, no slack, or no positive cross-hub edge).
+    by construction, going unused.  With ``warm=True`` and a warm-capable
+    backend the solve is seeded from the donor hubs' duals (`_spill_seed`);
+    the budgeted warm attempt falls back to a cold solve transparently, so
+    the result is identical within the solver's certificate either way.
+    Returns None when there is nothing to re-auction (no losers, no slack,
+    or no positive cross-hub edge).
     """
     r_idx: list[int] = []
     used: dict[int, int] = {}
@@ -163,13 +222,18 @@ def _spill_round(values, costs, caps, blocks, results, backend,
     w = _prune(values[np.ix_(r_idx, a_idx)], costs[np.ix_(r_idx, a_idx)])
     if float(w.max(initial=0.0)) <= 0.0:
         return None
+    residual = {i: caps[i] - used.get(i, 0) for i in a_idx}
+    seed = None
+    if warm and backend.supports_warm_start:
+        seed = _spill_seed(results, blocks, a_idx, residual, len(r_idx))
     res = backend.solve(w, costs[np.ix_(r_idx, a_idx)],
-                        [caps[i] - used.get(i, 0) for i in a_idx],
-                        payment_mode=payment_mode, start_prices=None)
+                        [residual[i] for i in a_idx],
+                        payment_mode=payment_mode, start_prices=seed)
     res.solver_stats["spill"] = {
         "r_idx": r_idx, "a_idx": a_idx,
         "candidates": len(r_idx),
         "rescued": sum(1 for a in res.assignment if a >= 0),
+        "warm_started": seed is not None,
     }
     return res
 

@@ -52,6 +52,7 @@ from repro.core.predictor import (PredictorInput, PredictorPool, QoSEstimate,
                                   feature_tensor)
 from repro.core.pricing import TokenPrices, observed_cost
 from repro.core.valuation import ValuationConfig, client_value
+from repro.utils.timing import phase_scope
 
 
 @dataclass
@@ -121,6 +122,10 @@ class IEMASRouter:
         self.agents = list(agents)
         self.valuation = valuation or ValuationConfig()
         self.payment_mode = payment_mode
+        # optional serving-layer RoutingProfiler (duck-typed: anything with a
+        # phase(name) context manager); attributes per-phase wall-clock for
+        # the overhead-crossover study — None keeps every section a no-op
+        self.profiler = None
         self.solver = solver
         self.spill = spill
         # cross-round slot-price reuse needs persistent duals; the registry
@@ -131,6 +136,7 @@ class IEMASRouter:
         self.batched = batched
         self.predictor_backend = predictor_backend
         self.ledger = PrefixLedger()
+        self._refresh_ledger_cap()
         self.pool = PredictorPool({a.agent_id: a.prices for a in agents},
                                   **(predictor_kw or {}))
         self._pending: dict[str, tuple] = {}  # request_id -> (x, agent, req)
@@ -145,6 +151,21 @@ class IEMASRouter:
         self.quarantined: set[str] = set()
 
     # ---------------- elastic membership ----------------
+    def _refresh_ledger_cap(self):
+        """Bound ledger memory when every agent publishes a cache size.
+
+        Sessions older than an agent's ``cache_slots`` most recent are
+        presumed evicted and affinity-masked by ``apply_lru`` regardless, so
+        an LRU cap at 2x the largest published cache is behavior-neutral on
+        the routing path while keeping streamed runs' ledger bounded.  Any
+        agent publishing 0 (= unknown/unbounded cache) disables the cap.
+        """
+        slots = [a.cache_slots for a in self.agents]
+        if slots and all(s > 0 for s in slots):
+            self.ledger.max_sessions_per_agent = 2 * max(slots)
+        else:
+            self.ledger.max_sessions_per_agent = None
+
     def _rebuild_hubs(self):
         self.hubs = cluster_agents([a.domains for a in self.agents],
                                    [a.scale for a in self.agents],
@@ -158,6 +179,7 @@ class IEMASRouter:
         """Elastic scale-out: admit an agent and recut the proxy hubs."""
         self.agents.append(agent)
         self.pool.add_agent(agent.agent_id, agent.prices)
+        self._refresh_ledger_cap()
         self._rebuild_hubs()
 
     def remove_agent(self, agent_id: str) -> None:
@@ -166,6 +188,7 @@ class IEMASRouter:
         self.pool.remove_agent(agent_id)
         self.ledger.evict(agent_id)
         self.quarantined.discard(agent_id)
+        self._refresh_ledger_cap()
         self._rebuild_hubs()
 
     def quarantine(self, agent_id: str) -> None:
@@ -177,17 +200,13 @@ class IEMASRouter:
         self.quarantined.discard(agent_id)
 
     # ---------------- Algorithm 1 ----------------
-    def route_batch(self, requests: list[Request], telemetry: dict,
-                    free_slots: dict | None = None) -> list[RouteDecision]:
-        """telemetry: router_inflight, router_rps, per-agent inflight/rps.
-        free_slots (optional) caps per-agent concurrency below capacity."""
-        if not requests:
-            return []
-        live = [a for a in self.agents if a.agent_id not in self.quarantined]
-        if not live:
-            return [RouteDecision(r, None, 0.0, None, 0.0, -1) for r in requests]
-        idx_of = {a.agent_id: k for k, a in enumerate(self.agents)}
+    def _phase(self, name: str):
+        """Profiler section ``name`` — a no-op unless a profiler is attached."""
+        return phase_scope(self.profiler, name)
 
+    def _phase1(self, requests, live, telemetry):
+        """Phase 1a/1b: affinity + QoS matrices + Eq.-1 values (see
+        route_batch); returns (lat, cst, qual, values, X, xs)."""
         # Phase 1a: affinity matrix over LIVE agents
         prompts = [r.tokens for r in requests]
         dlg = [r.dialogue_id for r in requests]
@@ -255,6 +274,22 @@ class IEMASRouter:
                 xs.append(row)
 
         values = client_value(qual, lat, self.valuation)
+        return lat, cst, qual, values, (X if self.batched else None), xs
+
+    def route_batch(self, requests: list[Request], telemetry: dict,
+                    free_slots: dict | None = None) -> list[RouteDecision]:
+        """telemetry: router_inflight, router_rps, per-agent inflight/rps.
+        free_slots (optional) caps per-agent concurrency below capacity."""
+        if not requests:
+            return []
+        live = [a for a in self.agents if a.agent_id not in self.quarantined]
+        if not live:
+            return [RouteDecision(r, None, 0.0, None, 0.0, -1) for r in requests]
+        n, m = len(requests), len(live)
+
+        with self._phase("phase1_predict"):
+            lat, cst, qual, values, X, xs = self._phase1(requests, live,
+                                                         telemetry)
 
         # Phase 1c/2/3 per hub
         caps = []
@@ -289,22 +324,24 @@ class IEMASRouter:
         # exact live-agent set (and the elastic version) still matches
         start_prices: dict[int, np.ndarray] = {}
         if self.warm_start:
-            for h, (r_idx, a_idx) in blocks.items():
-                if not a_idx:
-                    continue
-                version, ids = self.agent_set_version.fingerprint(
-                    live[i].agent_id for i in a_idx)
-                counts = [min(caps[i], len(r_idx)) for i in a_idx]
-                seed = self.price_book.lookup(h, version, ids, counts)
-                if seed is not None:
-                    start_prices[h] = seed
+            with self._phase("price_book"):
+                for h, (r_idx, a_idx) in blocks.items():
+                    if not a_idx:
+                        continue
+                    version, ids = self.agent_set_version.fingerprint(
+                        live[i].agent_id for i in a_idx)
+                    counts = [min(caps[i], len(r_idx)) for i in a_idx]
+                    seed = self.price_book.lookup(h, version, ids, counts)
+                    if seed is not None:
+                        start_prices[h] = seed
 
         results = run_sharded_auction(values, cst, caps, blocks,
                                       payment_mode=self.payment_mode,
                                       solver=self.solver,
                                       start_prices=start_prices,
                                       spill=self.spill,
-                                      spill_agents=sorted(hub_of_agent))
+                                      spill_agents=sorted(hub_of_agent),
+                                      profiler=self.profiler)
 
         def _record_match(j, i, pay, weight, pred_cost, h):
             """Decision + pending-feedback entry for one matched pair."""
@@ -328,12 +365,13 @@ class IEMASRouter:
             cc = result.costs
             if self.warm_start and a_idx and \
                     "slot_prices" in result.solver_stats:
-                version, ids = self.agent_set_version.fingerprint(
-                    live[i].agent_id for i in a_idx)
-                self.price_book.store(
-                    h, version, ids,
-                    result.solver_stats["slot_prices"],
-                    result.solver_stats["slot_agent"])
+                with self._phase("price_book"):
+                    version, ids = self.agent_set_version.fingerprint(
+                        live[i].agent_id for i in a_idx)
+                    self.price_book.store(
+                        h, version, ids,
+                        result.solver_stats["slot_prices"],
+                        result.solver_stats["slot_agent"])
             for local_j, j in enumerate(r_idx):
                 li = result.assignment[local_j]
                 if li < 0:

@@ -61,6 +61,25 @@ def warm_round_budget(n: int, K: int, max_rounds: int) -> int:
     return min(max_rounds, WARM_ROUNDS_PER_NODE * (n + K) + WARM_ROUNDS_FLOOR)
 
 
+def warm_eps0(p0, wmax: float, eps_final: float,
+              theta: float = THETA) -> float:
+    """ε₀ for a warm attempt, scaled to how informative the seed is.
+
+    The fine schedule (ε₀ = wmax/θ³, skipping the coarse scaling phases)
+    only pays off when the seeded prices actually carry equilibrium signal
+    worth protecting.  A seed that is ~zero everywhere (e.g. duals of slots
+    that never sold, or a spill market drawn mostly from idle donors) is
+    indistinguishable from cold prices — running the fine schedule over it
+    replaces a few coarse phases with long bidding wars and *costs* rounds.
+    So: fine schedule iff the seed's price mass rises above the fine ε
+    level; the coarse cold schedule otherwise (warm ≤ cold by construction).
+    """
+    fine = max(wmax / theta ** 3, eps_final)
+    if float(np.asarray(p0).max(initial=0.0)) > fine:
+        return fine
+    return max(wmax / theta, eps_final)
+
+
 def check_start_prices(start_prices, K: int, *, block: int | None = None
                        ) -> np.ndarray:
     """Validate + clip a warm-start seed against this market's slot layout."""

@@ -28,7 +28,7 @@ from repro.core.solvers.dense_common import (DenseAuctionResult, THETA,
                                              check_start_prices, expand_slots,
                                              jax_eps_final,
                                              materialize_staged, package_dense,
-                                             warm_round_budget)
+                                             warm_eps0, warm_round_budget)
 from repro.core.solvers.dense_np import solve_dense_auction
 from repro.core.buckets import pow2_bucket
 
@@ -263,7 +263,7 @@ def solve_dense_auction_jax(w, caps, *, eps_final: float | None = None,
     if warm:
         p0 = np.zeros(K_pad, np.float64)
         p0[:K] = p0_np
-        eps0 = min(max(wmax / theta ** 3, eps_final), cold_eps0)
+        eps0 = min(warm_eps0(p0_np, wmax, eps_final, theta), cold_eps0)
         budget = warm_round_budget(n_pad, K_pad, max_rounds)
         warm_solver = _get_jax_solver(budget, batched=False,
                                       bid_round=bid_round)
@@ -332,7 +332,7 @@ def solve_dense_auction_jax_batch(ws, caps_list, *,
         sp = sp_list[h]
         if sp is not None:
             p0 = check_start_prices(sp, K, block=h).astype(np.float32)
-            eps0 = min(max(wmax / theta ** 3, eps_f),
+            eps0 = min(warm_eps0(p0, wmax, eps_f, theta),
                        max(wmax / theta, eps_f))
             warm = True
         else:

@@ -84,7 +84,8 @@ from repro.core.solvers.base import (AuctionResult, sequential_solve_batch)
 from repro.core.solvers.dense_common import (DenseAuctionResult,
                                              EPS_FINAL_REL, THETA,
                                              check_start_prices, expand_slots,
-                                             package_dense, warm_round_budget)
+                                             package_dense, warm_eps0,
+                                             warm_round_budget)
 
 __all__ = ["solve_dense_auction", "DenseNumpyBackend"]
 
@@ -123,7 +124,7 @@ def solve_dense_auction(w: np.ndarray, caps, *, eps_final: float | None = None,
                                   eps_final, theta, max_rounds)
     p0 = check_start_prices(start_prices, K)
     eps0 = start_eps if start_eps is not None \
-        else max(wmax / theta ** 3, eps_final)
+        else warm_eps0(p0, wmax, eps_final, theta)
     eps0 = min(max(eps0, eps_final), cold_eps0)
     budget = warm_round_budget(n, K, max_rounds)
     try:

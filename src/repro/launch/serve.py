@@ -1,6 +1,19 @@
 """Serving launcher: IEMAS (or a baseline) routing over the simulated cluster.
 
 ``python -m repro.launch.serve --router iemas --workload coqa_like``
+
+Two serving loops:
+
+  * ``--sim-mode closed`` (default) — the closed-loop `run_workload` round
+    loop over real JAX engines: the bit-comparable small-run oracle.
+  * ``--sim-mode event`` — the event-driven open-loop
+    `repro.serving.simulator.EventSimulator`: Poisson arrivals at
+    ``--arrival-rate``, streaming admission (``--max-inflight``), analytic
+    engines by default, and a `RoutingProfiler` report attributing routing
+    wall-clock per phase against simulated engine compute.  Scale example::
+
+        python -m repro.launch.serve --sim-mode event --agents 128 \\
+            --n-dialogues 10000 --arrival-rate 60 --hubs 8 --solver dense
 """
 from __future__ import annotations
 
@@ -10,13 +23,16 @@ import json
 from repro.core import IEMASRouter
 from repro.core.baselines import BASELINES
 from repro.core.solvers import available_solvers
-from repro.serving import SimCluster, WorkloadSpec, generate, run_workload
+from repro.serving import (EventSimulator, RoutingProfiler, SimCluster,
+                           WorkloadSpec, generate, iter_dialogues,
+                           make_arrivals, run_workload)
 
 
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
                  solver: str = "mcmf", warm_start: bool = False,
                  spill: bool = True, batched: bool = True,
                  predictor_backend: str = "numpy", seed: int = 0):
+    """Build the IEMAS router (or a named baseline) over ``infos``."""
     if name == "iemas":
         return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
                            solver=solver, warm_start=warm_start, spill=spill,
@@ -26,12 +42,34 @@ def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
 
 
 def main():
+    """Parse CLI flags, build cluster+router, run one serving simulation."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--router", default="iemas",
                     choices=["iemas", *BASELINES])
     ap.add_argument("--workload", default="coqa_like")
     ap.add_argument("--agents", type=int, default=9)
-    ap.add_argument("--dialogues", type=int, default=16)
+    ap.add_argument("--dialogues", "--n-dialogues", dest="dialogues",
+                    type=int, default=16)
+    ap.add_argument("--sim-mode", default="closed",
+                    choices=["closed", "event"],
+                    help="closed: lockstep run_workload oracle loop; "
+                         "event: open-loop event-driven simulator "
+                         "(repro.serving.simulator) with per-phase routing "
+                         "overhead attribution")
+    ap.add_argument("--arrival-rate", type=float, default=None,
+                    help="event mode: Poisson dialogue arrivals per virtual "
+                         "second (default: synchronous, all at t=0)")
+    ap.add_argument("--max-inflight", type=int, default=256,
+                    help="event mode: streaming-admission window (max "
+                         "concurrently active dialogues)")
+    ap.add_argument("--batch-cap", type=int, default=16,
+                    help="event mode: micro-batch size per router call")
+    ap.add_argument("--batch-window", type=float, default=0.02,
+                    help="event mode: batching delay in virtual seconds")
+    ap.add_argument("--engine-mode", default=None,
+                    choices=["real", "analytic"],
+                    help="engine backend (default: real in closed mode, "
+                         "analytic in event mode)")
     ap.add_argument("--hubs", type=int, default=1,
                     help="shard Phase 2 across K proxy hubs (§4.4); each "
                          "batch is auctioned per hub block")
@@ -59,10 +97,13 @@ def main():
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
+    engine_mode = args.engine_mode or (
+        "analytic" if args.sim_mode == "event" else "real")
     cluster = SimCluster(n_agents=args.agents, seed=args.seed,
                          fail_prob=args.fail_prob,
                          straggle_prob=args.straggle_prob,
-                         warmup=not args.no_warmup)
+                         warmup=not args.no_warmup and engine_mode == "real",
+                         engine_mode=engine_mode)
     router = build_router(args.router, cluster.agent_infos(), n_hubs=args.hubs,
                           payment_mode=args.payment_mode, solver=args.solver,
                           warm_start=args.warm_start,
@@ -70,9 +111,20 @@ def main():
                           batched=not args.scalar_phase1,
                           predictor_backend=args.predictor_backend,
                           seed=args.seed)
-    dialogues = generate(WorkloadSpec(args.workload, n_dialogues=args.dialogues,
-                                      seed=args.seed + 1))
-    metrics = run_workload(cluster, router, dialogues)
+    spec = WorkloadSpec(args.workload, n_dialogues=args.dialogues,
+                        seed=args.seed + 1)
+    if args.sim_mode == "event":
+        arrivals = make_arrivals(
+            "poisson" if args.arrival_rate else "sync",
+            rate=args.arrival_rate or 8.0, seed=args.seed + 2)
+        sim = EventSimulator(cluster, router, iter_dialogues(spec),
+                             arrivals=arrivals, batch_cap=args.batch_cap,
+                             batch_window=args.batch_window,
+                             max_inflight=args.max_inflight,
+                             profiler=RoutingProfiler(), lean=True)
+        metrics = sim.run()
+    else:
+        metrics = run_workload(cluster, router, generate(spec))
     if hasattr(router, "accounts"):
         metrics["accounts"] = dict(router.accounts)
     print(json.dumps(metrics, indent=2, default=float))

@@ -1,5 +1,12 @@
+"""Serving layer: engines, cluster, workloads, and the serving loops."""
+from repro.serving.analytic import AnalyticEngine
 from repro.serving.cluster import SimCluster, make_router, run_workload
 from repro.serving.engine import AgentEngine, ServeResult
 from repro.serving.evaluator import SimulatedSkillEvaluator, TokenSpanEvaluator
+from repro.serving.simulator import (EventSimulator, RoutingProfiler,
+                                     simulate_workload)
 from repro.serving.telemetry import TelemetryTracker
-from repro.serving.workload import WORKLOADS, DialogueScript, WorkloadSpec, generate
+from repro.serving.workload import (WORKLOADS, ArrivalProcess, DialogueScript,
+                                    PoissonArrivals, SyncArrivals,
+                                    TraceArrivals, WorkloadSpec, generate,
+                                    iter_dialogues, make_arrivals)

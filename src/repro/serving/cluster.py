@@ -13,11 +13,24 @@ Fault tolerance (required at 1000+-node scale):
                       predictor learns them and prices them out (the paper's
                       own mechanism IS the mitigation — measured in tests);
   * elastic scale  -> add_agent/remove_agent rebuild hubs + predictor pool.
+
+Engine modes: ``engine_mode="real"`` (default) runs the reduced JAX models
+(`repro.serving.engine.AgentEngine` — measured compute); ``"analytic"``
+swaps in `repro.serving.analytic.AnalyticEngine`, whose service times come
+from a roofline model calibrated against the real engines, enabling the
+128-agent / 10k-dialogue scale runs of `repro.serving.simulator`.
+
+`run_workload` below is the closed-loop, fixed-population oracle loop; the
+event-driven open-loop driver for scale runs lives in
+`repro.serving.simulator.EventSimulator` and reproduces this loop's
+decisions bit-for-bit under synchronous arrivals (tests/test_simulator.py).
 """
 from __future__ import annotations
 
 import heapq
+import warnings
 import zlib
+from collections import Counter, deque
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -31,6 +44,7 @@ from repro.serving.engine import AgentEngine
 from repro.serving.evaluator import SimulatedSkillEvaluator
 from repro.serving.telemetry import TelemetryTracker
 from repro.serving.workload import DialogueScript
+from repro.utils.timing import phase_scope
 
 
 def _engine_config(model_class: str, vocab: int):
@@ -48,6 +62,8 @@ def _engine_config(model_class: str, vocab: int):
 
 @dataclass
 class RequestRecord:
+    """Ledger entry for one dispatched request (metrics + turn threading)."""
+
     request: Request
     agent_id: str
     dispatched_at: float
@@ -69,6 +85,8 @@ class RequestRecord:
 
 @dataclass
 class AgentRuntime:
+    """One live agent: published info + engine + fault-injection knobs."""
+
     info: AgentInfo
     profile: AgentProfile
     engine: AgentEngine
@@ -79,15 +97,26 @@ class AgentRuntime:
 
 
 class SimCluster:
+    """Heterogeneous simulated cluster: engines + queueing + faults on a
+    deterministic virtual clock (see module docstring)."""
+
     def __init__(self, n_agents: int = 9, *, vocab: int = 255, seed: int = 0,
                  max_new_tokens: int = 6, fail_prob: float = 0.0,
                  straggle_prob: float = 0.0, cache_slots: int | None = None,
-                 quarantine_cooldown: float = 30.0, warmup: bool = False):
+                 quarantine_cooldown: float = 30.0, warmup: bool = False,
+                 engine_mode: str = "real"):
+        if engine_mode not in ("real", "analytic"):
+            raise ValueError(f"engine_mode must be real|analytic, "
+                             f"got {engine_mode!r}")
         self.rng = np.random.default_rng(seed)
         self.vocab = vocab
+        self.engine_mode = engine_mode
         self.telemetry = TelemetryTracker()
         self.evaluator = SimulatedSkillEvaluator(seed=seed + 1)
         self.quarantine_cooldown = quarantine_cooldown
+        # attached by serving-layer profilers (repro.serving.simulator):
+        # receives add_engine_compute() per dispatch + phase() around Phase 4
+        self.profiler = None
         self.agents: dict[str, AgentRuntime] = {}
         for prof in agent_profiles(n_agents, seed=seed):
             self._add_runtime(prof, fail_prob, straggle_prob, cache_slots,
@@ -102,11 +131,20 @@ class SimCluster:
 
     def _add_runtime(self, prof: AgentProfile, fail_prob, straggle_prob,
                      cache_slots, max_new_tokens):
-        cfg = _engine_config(prof.model_class, self.vocab)
-        engine = AgentEngine(
-            cfg, seed=zlib.crc32(prof.agent_id.encode()) % (2**31), speed=prof.speed,
-            cache_slots=cache_slots or prof.cache_slots,
-            max_new_tokens=max_new_tokens)
+        eng_seed = zlib.crc32(prof.agent_id.encode()) % (2**31)
+        if self.engine_mode == "analytic":
+            from repro.serving.analytic import AnalyticEngine
+
+            engine = AnalyticEngine(
+                prof.model_class, vocab=self.vocab, seed=eng_seed,
+                speed=prof.speed, cache_slots=cache_slots or prof.cache_slots,
+                max_new_tokens=max_new_tokens)
+        else:
+            cfg = _engine_config(prof.model_class, self.vocab)
+            engine = AgentEngine(
+                cfg, seed=eng_seed, speed=prof.speed,
+                cache_slots=cache_slots or prof.cache_slots,
+                max_new_tokens=max_new_tokens)
         info = AgentInfo(
             agent_id=prof.agent_id,
             prices=TokenPrices(prof.price_miss, prof.price_hit, prof.price_out),
@@ -118,20 +156,24 @@ class SimCluster:
 
     # ---------------- elastic membership ----------------
     def agent_infos(self) -> list[AgentInfo]:
+        """Published AgentInfo profiles of every live runtime."""
         return [rt.info for rt in self.agents.values()]
 
     def add_agent(self, profile: AgentProfile, router=None) -> None:
+        """Elastic scale-out: spin up a runtime (and tell the router)."""
         self._add_runtime(profile, 0.0, 0.0, None, 6)
         if router is not None and hasattr(router, "add_agent"):
             router.add_agent(self.agents[profile.agent_id].info)
 
     def remove_agent(self, agent_id: str, router=None) -> None:
+        """Elastic scale-in: drop a runtime (and tell the router)."""
         self.agents.pop(agent_id, None)
         if router is not None and hasattr(router, "remove_agent"):
             router.remove_agent(agent_id)
 
     # ---------------- serving rounds ----------------
     def free_slots(self) -> dict:
+        """Per-agent free concurrency slots (capacity minus inflight)."""
         inflight = self.telemetry.agent_inflight
         return {aid: max(0, rt.info.capacity - inflight.get(aid, 0))
                 for aid, rt in self.agents.items()}
@@ -178,18 +220,37 @@ class SimCluster:
                             output_tokens=result.output_tokens)
         obs = CompletionObs(latency, result.n_prompt, result.n_hit,
                             result.n_gen, quality)
+        self.telemetry.on_busy(rt.info.agent_id, total)
+        if self.profiler is not None:
+            # virtual engine seconds — the overhead-attribution denominator
+            self.profiler.add_engine_compute(total)
         heapq.heappush(self._completions, (self.now + total, self._seq, rec, obs))
         self._seq += 1
         return rec
 
+    def next_completion_time(self) -> float | None:
+        """Virtual time of the earliest scheduled completion (event hook)."""
+        return self._completions[0][0] if self._completions else None
+
     def advance(self, dt: float, router) -> list[RequestRecord]:
-        """Advance the virtual clock, delivering completions to the router."""
-        self.now += dt
+        """Advance the virtual clock by ``dt``, delivering completions."""
+        return self.advance_to(self.now + dt, router)
+
+    def advance_to(self, t: float, router) -> list[RequestRecord]:
+        """Advance the clock to absolute virtual time ``t`` (>= now),
+        delivering every completion due by then to the router.
+
+        The event simulator jumps straight to the next event with this hook
+        (setting ``now`` exactly, no float drift against heap timestamps);
+        the closed-loop ``advance`` above is a thin wrapper.
+        """
+        self.now = max(self.now, float(t))
         done = []
         while self._completions and self._completions[0][0] <= self.now:
             _, _, rec, obs = heapq.heappop(self._completions)
             self.telemetry.on_complete(rec.agent_id, self.now)
-            router.on_complete(rec.request.request_id, obs)
+            with phase_scope(self.profiler, "phase4_feedback"):
+                router.on_complete(rec.request.request_id, obs)
             if not rec.failed:
                 self.records.append(rec)
             done.append(rec)
@@ -203,6 +264,8 @@ class SimCluster:
 
     # ---------------- metrics ----------------
     def metrics(self) -> dict:
+        """Aggregate request-level metrics over completed (non-failed)
+        records: KV hit rate, latency, cost, quality."""
         if not self.records:
             return {"n": 0}
         hits = np.array([r.n_hit / max(1, r.n_prompt) for r in self.records])
@@ -214,6 +277,7 @@ class SimCluster:
             "kv_hit_rate": float(hits.mean()),
             "latency_ms_median": float(np.median(lat) * 1e3),
             "latency_ms_mean": float(lat.mean() * 1e3),
+            "latency_ms_p95": float(np.percentile(lat, 95) * 1e3),
             "cost_mean": float(cost.mean()),
             "quality_mean": float(qual.mean()),
         }
@@ -239,51 +303,84 @@ def run_workload(cluster: SimCluster, router, dialogues: list[DialogueScript],
 
     Dialogue causality: turn t+1 is issued only after turn t completes, with
     the engine's actual answer appended to the conversation (Appendix C.1).
+
+    Fairness: ready dialogues queue through a FIFO deque ordered by when
+    their turn became ready — a request skipped by the ``batch_per_round``
+    cap keeps its place at the head next round.  (The seed scanned the
+    ``state`` dict in insertion order every round and broke at the cap, so
+    late-inserted dialogues were starved whenever the ready count exceeded
+    it.)  Requests the auction leaves unmatched return to the *front* of
+    the queue in order; failed requests re-enter at the back when their
+    failure is delivered, like any other newly-ready turn.
+
+    Truncation: exhausting ``max_rounds`` is no longer silent — the result
+    carries ``unfinished_dialogues`` / ``completed_turns`` / ``truncated``
+    and a ``RuntimeWarning`` fires, so scaled runs cannot quietly drop the
+    tail of the latency distribution.  ``dispatched_requests`` and the
+    ``requests_per_dialogue_*`` stats attribute dispatch counts (including
+    fault-path retries) per dialogue.
+
+    This loop is the closed-loop oracle: `repro.serving.simulator` must
+    reproduce its decisions bit-for-bit under synchronous arrivals.
     """
     state = {d.dialogue_id: {"script": d, "turn": 0, "history": np.zeros(0, np.int32),
                              "busy": False} for d in dialogues}
     pending_next: dict[str, np.ndarray] = {
         d.dialogue_id: d.turns[0] for d in dialogues}
+    ready: deque[str] = deque(d.dialogue_id for d in dialogues)
     rid = 0
     rounds = 0
-    record_of: dict[str, str] = {}
+    # per-dialogue dispatch attribution (includes fault-path retries); this
+    # replaces the seed's write-only record_of dict
+    dispatch_count: Counter = Counter()
+    dispatched = 0
     while rounds < max_rounds:
         rounds += 1
-        # collect up to batch_per_round ready requests (micro-batching, C.2.1)
+        # collect up to batch_per_round ready requests (micro-batching,
+        # C.2.1), FIFO by readiness time
         batch = []
-        for did, st in state.items():
-            if st["busy"] or did not in pending_next:
-                continue
+        while ready and len(batch) < batch_per_round:
+            did = ready.popleft()
+            st = state[did]
             script = st["script"]
             prompt = np.concatenate([st["history"], pending_next[did]])
-            req = Request(request_id=f"r{rid}", dialogue_id=did,
-                          tokens=prompt.astype(np.int32), turn=st["turn"],
-                          domain=script.domain,
-                          max_new_tokens=max_new_tokens,
-                          meta={"difficulty": script.difficulty})
-            batch.append(req)
+            batch.append(Request(request_id=f"r{rid}", dialogue_id=did,
+                                 tokens=prompt.astype(np.int32), turn=st["turn"],
+                                 domain=script.domain,
+                                 max_new_tokens=max_new_tokens,
+                                 meta={"difficulty": script.difficulty}))
             rid += 1
-            if len(batch) >= batch_per_round:
-                break
         if batch:
             telem = cluster.telemetry.snapshot(cluster.now)
             decisions = router.route_batch(batch, telem,
                                            free_slots=cluster.free_slots())
+            unmatched = []
             for dec in decisions:
                 did = dec.request.dialogue_id
                 if dec.agent_id is None:
-                    continue  # retry next round
+                    unmatched.append(did)  # retry, keeping queue priority
+                    continue
+                if cluster.execute(dec, router) is None:
+                    # dead dispatch target (agent removed from the cluster
+                    # but not the router): report it as a failure so the
+                    # router quarantines it and clears its pending entry,
+                    # instead of re-matching the same dead agent forever
+                    router.on_complete(dec.request.request_id, CompletionObs(
+                        0.0, len(dec.request.tokens), 0, 0, 0.0, failed=True))
+                    unmatched.append(did)
+                    continue
                 state[did]["busy"] = True
-                record_of[dec.request.request_id] = did
-                cluster.execute(dec, router)
+                dispatch_count[did] += 1
+                dispatched += 1
+            ready.extendleft(reversed(unmatched))
         done = cluster.advance(round_dt, router)
         for rec in done:
             did = rec.request.dialogue_id
             st = state[did]
-            if rec.failed:
-                st["busy"] = False  # re-issue same turn next round
-                continue
             st["busy"] = False
+            if rec.failed:
+                ready.append(did)  # re-issue the same turn next round
+                continue
             new_user = pending_next.pop(did)
             st["history"] = np.concatenate(
                 [st["history"], new_user, rec.output_tokens]).astype(np.int32)
@@ -291,11 +388,30 @@ def run_workload(cluster: SimCluster, router, dialogues: list[DialogueScript],
             script = st["script"]
             if st["turn"] < len(script.turns):
                 pending_next[did] = script.turns[st["turn"]]
+                ready.append(did)
         if not pending_next and not any(st["busy"] for st in state.values()):
             break
         if on_round is not None:
             on_round(rounds, cluster)
     out = cluster.metrics()
+    out["rounds"] = rounds
+    out["completed_turns"] = sum(st["turn"] for st in state.values())
+    # a dialogue is unfinished iff a turn of it is still pending (waiting,
+    # in the ready queue, or in flight when the round budget ran out)
+    out["unfinished_dialogues"] = len(pending_next)
+    out["truncated"] = bool(pending_next)
+    out["dispatched_requests"] = dispatched
+    if dispatch_count:
+        # same definition as EventSimulator: mean over dialogues that were
+        # actually dispatched (identical when nothing truncated)
+        out["requests_per_dialogue_mean"] = dispatched / len(dispatch_count)
+        out["requests_per_dialogue_max"] = max(dispatch_count.values())
+    if pending_next:
+        warnings.warn(
+            f"run_workload: round budget ({max_rounds}) exhausted with "
+            f"{len(pending_next)}/{len(state)} dialogues unfinished "
+            f"({out['completed_turns']} turns completed); metrics cover "
+            f"completed requests only", RuntimeWarning, stacklevel=2)
     # warm-start effectiveness (IEMASRouter only): how often a hub's auction
     # was seeded from the previous round's slot prices vs cold-started
     book = getattr(router, "price_book", None)

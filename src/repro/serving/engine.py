@@ -39,6 +39,8 @@ def _bucket(n: int, lo: int = 16) -> int:
 
 @dataclass
 class SessionCache:
+    """One dialogue's cached model state + the prompt it encodes."""
+
     cache: object             # model cache pytree (B=1)
     prompt: np.ndarray        # tokens whose state the cache encodes
     last_used: float = 0.0
@@ -46,6 +48,8 @@ class SessionCache:
 
 @dataclass
 class ServeResult:
+    """Measured outcome of one request: tokens, timings, cache accounting."""
+
     output_tokens: np.ndarray
     ttft: float               # seconds (scaled by agent speed)
     total_time: float
@@ -75,6 +79,9 @@ def _shared_fns(cfg: ModelConfig, max_len: int):
 
 
 class AgentEngine:
+    """One agent's inference engine: real JAX prefill/extend/decode with
+    per-dialogue KV/state reuse (see module docstring)."""
+
     def __init__(self, cfg: ModelConfig, *, seed: int = 0, speed: float = 1.0,
                  cache_slots: int = 6, max_len: int = 1024,
                  max_new_tokens: int = 8):
@@ -128,6 +135,9 @@ class AgentEngine:
     # ---------------- serving ----------------
     def serve(self, dialogue_id: str, prompt: np.ndarray, now: float = 0.0,
               max_new_tokens: int | None = None) -> ServeResult:
+        """Serve one request: cache-aware prefill/extend + greedy decode,
+        measuring TTFT/total wall-clock (scaled by agent speed) and exact
+        cached-token counts."""
         prompt = np.asarray(prompt, dtype=np.int32)
         n_prompt = len(prompt)
         max_new = max_new_tokens or self.max_new
@@ -227,4 +237,5 @@ class AgentEngine:
         return self._decode_j(self.params, cache, tok)
 
     def drop_session(self, dialogue_id: str) -> None:
+        """Forget one dialogue's cached state."""
         self.sessions.pop(dialogue_id, None)

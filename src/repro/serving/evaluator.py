@@ -15,7 +15,10 @@ import numpy as np
 
 
 class TokenSpanEvaluator:
+    """Deterministic span-match evaluator (paper's TokenSpanCoqaEvaluator)."""
+
     def score(self, output_tokens, gold_tokens) -> float:
+        """1.0 iff the gold span occurs contiguously in the output."""
         o = np.asarray(output_tokens)
         g = np.asarray(gold_tokens)
         if len(g) == 0 or len(o) < len(g):
@@ -35,11 +38,13 @@ class SimulatedSkillEvaluator:
 
     def prob_correct(self, agent_scale: float, domain_match: bool,
                      difficulty: float) -> float:
+        """Correctness probability from the (scale, domain, difficulty) skill model."""
         z = (self.a * agent_scale + self.b * float(domain_match)
              - self.c * difficulty + self.bias)
         return float(1.0 / (1.0 + np.exp(-z)))
 
     def score(self, agent_scale: float, domain_match: bool,
               difficulty: float) -> float:
+        """One Bernoulli quality draw at ``prob_correct``."""
         return float(self.rng.random()
                      < self.prob_correct(agent_scale, domain_match, difficulty))

@@ -1,0 +1,470 @@
+"""Event-driven, open-loop serving simulator for 100+-agent scale runs.
+
+`repro.serving.cluster.run_workload` is a closed-loop, fixed-population
+round loop: the whole dialogue population is pre-materialized into one
+``state`` dict and the clock ticks in fixed ``round_dt`` steps whether or
+not anything happens.  That is the right *oracle* for small bit-comparable
+runs, but it cannot express the paper's system-level regime — sustained
+many-to-many load at 100+ agents and 10k dialogues, where arrivals are an
+open-loop process and routing overhead must be attributed against engine
+compute.  This module replaces it for scale runs:
+
+  * **event queue** — a single heap carries dialogue ARRIVAL events (from a
+    Poisson/trace `repro.serving.workload.ArrivalProcess`) and ROUTE
+    (router-invocation) events; engine completions stay in the cluster's
+    own completion heap and the simulator jumps the virtual clock straight
+    to the next of the three (``SimCluster.next_completion_time`` /
+    ``advance_to`` hooks) — no empty rounds are ever spun.
+  * **streaming admission** — dialogue scripts are pulled lazily from an
+    iterator (`repro.serving.workload.iter_dialogues`) one arrival at a
+    time, and at most ``max_inflight`` dialogues hold state concurrently;
+    the rest wait in an admission backlog.  10k dialogues flow through a
+    bounded window instead of one pre-built dict.
+  * **`RoutingProfiler`** — attributes real wall-clock per routing phase
+    (Phase-1 predict, Phase-2 solve per backend, the cross-hub spill round,
+    price-book ops, Phase-4 feedback) against *simulated engine compute*
+    (the virtual busy-seconds the engines report), so
+    `benchmarks/serving_scale.py` can report where routing overhead crosses
+    10% of engine compute as n_agents and batch size grow.
+
+Closed-loop parity: with ``quantize=round_dt`` the ROUTE events fall on the
+exact round boundaries of ``run_workload`` and completions are delivered at
+those boundaries only — under `SyncArrivals` the simulator then reproduces
+``run_workload``'s decisions bit-for-bit (tests/test_simulator.py), which
+keeps the old loop useful as the oracle while this one owns the scale runs.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+import time
+import warnings
+from collections import Counter, deque
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.mechanism import CompletionObs, Request
+from repro.serving.workload import (ArrivalProcess, DialogueScript,
+                                    SyncArrivals)
+from repro.utils.timing import phase_scope
+
+# heap-event kinds; completions live in the cluster's heap.  ARRIVAL < ROUTE
+# so same-instant arrivals are admitted before the batch is formed.
+_ARRIVAL, _ROUTE = 0, 1
+_EMPTY = np.zeros(0, np.int32)
+
+
+class RoutingProfiler:
+    """Wall-clock-per-phase accounting against simulated engine compute.
+
+    The router and cluster wrap their sections in ``phase(name)`` (no-ops
+    until a profiler is attached): ``route_batch`` is the umbrella around
+    one router invocation, inside which the IEMAS router nests
+    ``phase1_predict``, ``price_book``, ``phase2_solve[<backend>]`` and
+    ``phase2_spill``; ``phase4_feedback`` wraps completion feedback.  The
+    cluster reports each dispatch's virtual engine seconds through
+    ``add_engine_compute``.  ``report()`` divides the top-level routing
+    wall-clock (``route_batch`` + ``phase4_feedback`` — nested phases are
+    *inside* the umbrella and not double-counted) by the engine compute to
+    give the routing-overhead fraction the scale benchmark tables.
+    """
+
+    #: top-level (non-nested) phases whose sum is "routing overhead"
+    TOP_PHASES = ("route_batch", "phase4_feedback")
+
+    def __init__(self):
+        self.phases: dict[str, float] = {}
+        self.calls: dict[str, int] = {}
+        self.engine_compute = 0.0   # virtual engine busy seconds
+
+    @contextmanager
+    def phase(self, name: str):
+        """Time one section under ``name`` (re-entrant safe, additive)."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            self.phases[name] = self.phases.get(name, 0.0) + dt
+            self.calls[name] = self.calls.get(name, 0) + 1
+
+    def add_engine_compute(self, seconds: float) -> None:
+        """Accumulate one dispatch's simulated engine seconds."""
+        self.engine_compute += float(seconds)
+
+    def attach(self, cluster, router) -> "RoutingProfiler":
+        """Hook this profiler into a cluster + router pair; returns self."""
+        cluster.profiler = self
+        router.profiler = self
+        return self
+
+    def routing_wall(self) -> float:
+        """Total top-level routing wall-clock seconds."""
+        return sum(self.phases.get(p, 0.0) for p in self.TOP_PHASES)
+
+    def report(self) -> dict:
+        """JSON-friendly attribution table (fractions of engine compute).
+
+        With zero engine compute (e.g. every dispatch failed) the fractions
+        are undefined and reported as ``None`` — strict-JSON safe, unlike
+        ``inf``.
+        """
+        ec = self.engine_compute
+        routing = self.routing_wall()
+        return {
+            "engine_compute_s": ec,
+            "routing_wall_s": routing,
+            "overhead_frac": (routing / ec) if ec > 0 else None,
+            "phases": {
+                name: {
+                    "wall_s": wall,
+                    "calls": self.calls.get(name, 0),
+                    "frac_of_engine": (wall / ec) if ec > 0 else None,
+                }
+                for name, wall in sorted(self.phases.items())
+            },
+        }
+
+
+@dataclass
+class _Dialogue:
+    """In-flight dialogue state (exists only between admission and finish)."""
+
+    script: DialogueScript
+    arrived_at: float
+    turn: int = 0
+    history: np.ndarray = field(default_factory=lambda: _EMPTY)
+    pending: np.ndarray | None = None   # next user turn awaiting dispatch
+    busy: bool = False
+    ready_since: float = 0.0
+
+
+class EventSimulator:
+    """Open-loop event-driven serving driver (see module docstring).
+
+    Parameters
+    ----------
+    cluster, router : the `SimCluster` + router pair to drive.
+    dialogues : iterable of `DialogueScript` — consumed lazily, one script
+        per arrival (pass `repro.serving.workload.iter_dialogues` output
+        for streaming scale runs).
+    arrivals : `ArrivalProcess` pacing dialogue arrivals (default: all at
+        t=0, the closed-loop population).
+    batch_cap : max requests per router invocation (micro-batch size).
+    batch_window : seconds a ROUTE event waits after work appears, letting
+        a micro-batch accumulate (also the retry pacing for unmatched
+        requests).  Ignored when ``quantize`` is set.
+    quantize : when set, ROUTE events tick on exact multiples of this
+        round length and completions are delivered only at those
+        boundaries — the bit-comparable ``run_workload`` lockstep regime.
+    max_inflight : admission-window bound on concurrently-active dialogues
+        (None = unbounded, required for closed-loop parity).
+    max_new_tokens : generation budget per request.
+    profiler : optional `RoutingProfiler`; attached to cluster + router.
+    max_rounds : router-invocation budget (mirrors ``run_workload``'s
+        ``max_rounds``); exceeding it truncates the run with a warning.
+    max_events : hard safety cap on processed events.
+    horizon : optional virtual-time cap; reaching it truncates the run.
+    lean : drop per-request token arrays once a completion is fully
+        processed (bounds memory on 10k-dialogue runs; decisions are
+        unaffected — the ledger/engines hold their own copies).
+    on_round : optional callback ``(n_rounds, cluster)`` after each ROUTE.
+    """
+
+    def __init__(self, cluster, router, dialogues, *,
+                 arrivals: ArrivalProcess | None = None,
+                 batch_cap: int = 16, batch_window: float = 0.02,
+                 quantize: float | None = None,
+                 max_inflight: int | None = None,
+                 max_new_tokens: int = 6,
+                 profiler: RoutingProfiler | None = None,
+                 max_rounds: int = 100_000,
+                 max_events: int = 5_000_000,
+                 horizon: float | None = None,
+                 lean: bool = False,
+                 on_round=None):
+        self.cluster = cluster
+        self.router = router
+        self.arrivals = arrivals if arrivals is not None else SyncArrivals()
+        self.batch_cap = int(batch_cap)
+        self.batch_window = float(batch_window)
+        self.quantize = quantize
+        self.max_inflight = max_inflight
+        self.max_new_tokens = max_new_tokens
+        self.profiler = profiler
+        if profiler is not None:
+            profiler.attach(cluster, router)
+        self.max_rounds = max_rounds
+        self.max_events = max_events
+        self.horizon = horizon
+        self.lean = lean
+        self.on_round = on_round
+
+        if max_inflight is not None and max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.states: dict[str, _Dialogue] = {}
+        self.ready: deque[str] = deque()
+        self.backlog: deque[DialogueScript] = deque()
+        # per-dialogue dispatch attribution (includes fault-path retries)
+        self.dispatch_count: Counter[str] = Counter()
+        self.n_dispatched = 0
+        self._events: list = []               # (time, kind, seq, payload)
+        self._seq = 0
+        self._rid = 0
+        self._rounds = 0
+        self._n_processed = 0
+        self._route_at: float | None = None
+        self._dialogue_iter = iter(dialogues)
+        self._arrival_times = self.arrivals.times()
+        self._arrivals_open = True
+        self._truncated_reason: str | None = None
+        # aggregates (bounded memory — no per-dialogue lists)
+        self.n_arrived = 0
+        self.peak_inflight = 0
+        self.n_completed_dialogues = 0
+        self._dlg_latency_sum = 0.0
+        self._wait_sum = 0.0
+        self._wait_n = 0
+
+    # ---------------- event scheduling ----------------
+    def _push(self, t: float, kind: int, payload=None) -> None:
+        heapq.heappush(self._events, (t, kind, self._seq, payload))
+        self._seq += 1
+
+    def _schedule_next_arrival(self) -> None:
+        if not self._arrivals_open:
+            return
+        script = next(self._dialogue_iter, None)
+        if script is None:
+            self._arrivals_open = False
+            return
+        t = next(self._arrival_times, None)
+        if t is None:
+            # zip semantics (see ArrivalProcess): a finite trace shorter
+            # than the dialogue stream ends the arrivals — but loudly
+            self._arrivals_open = False
+            self._truncated_reason = "arrival process exhausted before " \
+                "the dialogue stream"
+            return
+        t = max(float(t), 0.0)
+        if self.quantize is not None:
+            # lockstep contract: everything happens on round boundaries
+            q = self.quantize
+            t = math.ceil(t / q - 1e-9) * q
+        self._push(t, _ARRIVAL, script)
+
+    def _schedule_route(self, t: float) -> None:
+        if self._route_at is None or t < self._route_at:
+            self._push(t, _ROUTE)
+            self._route_at = t
+
+    def _next_time(self) -> float | None:
+        cand = []
+        if self._events:
+            cand.append(self._events[0][0])
+        if self.quantize is None:
+            tc = self.cluster.next_completion_time()
+            if tc is not None:
+                cand.append(max(tc, self.cluster.now))
+        return min(cand) if cand else None
+
+    def _work_remains(self) -> bool:
+        return bool(self._arrivals_open or self.backlog or self.ready
+                    or self.states)
+
+    # ---------------- dialogue lifecycle ----------------
+    def _admit(self, script: DialogueScript) -> None:
+        now = self.cluster.now
+        self.states[script.dialogue_id] = _Dialogue(
+            script, arrived_at=now, pending=script.turns[0], ready_since=now)
+        self.peak_inflight = max(self.peak_inflight, len(self.states))
+        self.ready.append(script.dialogue_id)
+
+    def _on_arrival(self, script: DialogueScript) -> None:
+        self.n_arrived += 1
+        if self.max_inflight is not None and \
+                len(self.states) >= self.max_inflight:
+            self.backlog.append(script)     # admission window full: wait
+        else:
+            self._admit(script)
+
+    def _handle_completions(self, t: float) -> None:
+        done = self.cluster.advance_to(t, self.router)
+        now = self.cluster.now
+        for rec in done:
+            did = rec.request.dialogue_id
+            st = self.states[did]
+            st.busy = False
+            if rec.failed:
+                st.ready_since = now
+                self.ready.append(did)      # re-issue the same turn
+                continue
+            st.history = np.concatenate(
+                [st.history, st.pending, rec.output_tokens]).astype(np.int32)
+            st.turn += 1
+            if self.lean:
+                rec.request.tokens = _EMPTY
+                rec.output_tokens = _EMPTY
+            if st.turn < len(st.script.turns):
+                st.pending = st.script.turns[st.turn]
+                st.ready_since = now
+                self.ready.append(did)
+            else:
+                # dialogue finished: release its state, admit from backlog
+                self.n_completed_dialogues += 1
+                self._dlg_latency_sum += now - st.arrived_at
+                del self.states[did]
+                if self.backlog:
+                    self._admit(self.backlog.popleft())
+
+    # ---------------- routing ----------------
+    def _route_step(self) -> None:
+        cluster, router = self.cluster, self.router
+        batch = []
+        while self.ready and len(batch) < self.batch_cap:
+            did = self.ready.popleft()
+            st = self.states[did]
+            prompt = np.concatenate([st.history, st.pending])
+            batch.append(Request(
+                request_id=f"r{self._rid}", dialogue_id=did,
+                tokens=prompt.astype(np.int32), turn=st.turn,
+                domain=st.script.domain, max_new_tokens=self.max_new_tokens,
+                meta={"difficulty": st.script.difficulty}))
+            self._rid += 1
+        if not batch:
+            return
+        telem = cluster.telemetry.snapshot(cluster.now)
+        free = cluster.free_slots()
+        with phase_scope(self.profiler, "route_batch"):
+            decisions = router.route_batch(batch, telem, free_slots=free)
+        unmatched = []
+        for dec in decisions:
+            did = dec.request.dialogue_id
+            if dec.agent_id is None:
+                unmatched.append(did)
+                continue
+            if cluster.execute(dec, router) is None:
+                # dead dispatch target: fault-path feedback (quarantine +
+                # pending cleanup) so the router stops matching it — same
+                # handling as run_workload (parity contract)
+                router.on_complete(dec.request.request_id, CompletionObs(
+                    0.0, len(dec.request.tokens), 0, 0, 0.0, failed=True))
+                unmatched.append(did)
+                continue
+            st = self.states[did]
+            st.busy = True
+            self.dispatch_count[did] += 1
+            self.n_dispatched += 1
+            self._wait_sum += cluster.now - st.ready_since
+            self._wait_n += 1
+        # unmatched requests keep their queue priority, in order
+        self.ready.extendleft(reversed(unmatched))
+
+    # ---------------- main loop ----------------
+    def run(self) -> dict:
+        """Run to completion (or truncation) and return the metrics dict."""
+        wall0 = time.perf_counter()
+        self._schedule_next_arrival()
+        if self.quantize is not None:
+            self._schedule_route(0.0)
+        while True:
+            if self._n_processed >= self.max_events:
+                self._truncated_reason = f"max_events ({self.max_events})"
+                break
+            t = self._next_time()
+            if t is None:
+                if self._work_remains():
+                    # e.g. an admission window far smaller than the stream:
+                    # arrivals drained with the backlog still populated —
+                    # never exit silently with work on the floor
+                    self._truncated_reason = "event queue drained with " \
+                        "work remaining"
+                break
+            if self.horizon is not None and t > self.horizon:
+                self._truncated_reason = f"horizon ({self.horizon}s)"
+                break
+            self._handle_completions(t)
+            run_route = False
+            while self._events and self._events[0][0] <= t:
+                _, kind, _, payload = heapq.heappop(self._events)
+                self._n_processed += 1
+                if kind == _ARRIVAL:
+                    self._on_arrival(payload)
+                    self._schedule_next_arrival()
+                else:
+                    self._route_at = None
+                    run_route = True
+            if run_route:
+                self._rounds += 1
+                self._route_step()
+                if self.on_round is not None:
+                    self.on_round(self._rounds, self.cluster)
+                if self._rounds >= self.max_rounds:
+                    self._truncated_reason = f"max_rounds ({self.max_rounds})"
+                    break
+            # keep exactly one ROUTE event pending whenever work remains
+            if self.quantize is not None:
+                if self._route_at is None and self._work_remains():
+                    self._schedule_route(self.cluster.now + self.quantize)
+            elif self.ready and self._route_at is None:
+                self._schedule_route(self.cluster.now + self.batch_window)
+        return self._finalize(time.perf_counter() - wall0)
+
+    def _finalize(self, wall_s: float) -> dict:
+        out = self.cluster.metrics()
+        now = self.cluster.now
+        out.update({
+            "rounds": self._rounds,
+            "events": self._n_processed,
+            "sim_time_s": now,
+            "wall_time_s": wall_s,
+            "dialogues_arrived": self.n_arrived,
+            "dialogues_completed": self.n_completed_dialogues,
+            "peak_inflight": self.peak_inflight,
+            "unfinished_dialogues": len(self.states) + len(self.backlog),
+            "truncated": self._truncated_reason is not None,
+            "dispatched_requests": self.n_dispatched,
+        })
+        # turns completed = completed request records (retries excluded)
+        out["completed_turns"] = out.get("n", 0)
+        if self.dispatch_count:
+            out["requests_per_dialogue_mean"] = (
+                self.n_dispatched / len(self.dispatch_count))
+            out["requests_per_dialogue_max"] = max(self.dispatch_count.values())
+        if self.n_completed_dialogues:
+            out["dialogue_latency_mean_s"] = (
+                self._dlg_latency_sum / self.n_completed_dialogues)
+        if self._wait_n:
+            out["queue_wait_mean_s"] = self._wait_sum / self._wait_n
+        if now > 0:
+            out["throughput_rps"] = out.get("n", 0) / now
+            busy = self.cluster.telemetry.busy_seconds()
+            out["utilization"] = busy / (now * max(1, len(self.cluster.agents)))
+        if self._truncated_reason is not None:
+            warnings.warn(
+                f"EventSimulator: truncated by {self._truncated_reason} with "
+                f"{out['unfinished_dialogues']} admitted/backlogged dialogues "
+                f"unfinished (arrivals "
+                f"{'still open' if self._arrivals_open else 'drained'}); "
+                f"metrics cover completed requests only",
+                RuntimeWarning, stacklevel=2)
+        book = getattr(self.router, "price_book", None)
+        if book is not None and getattr(self.router, "warm_start", False):
+            out["warm_start"] = book.stats()
+        if self.profiler is not None:
+            out["routing"] = self.profiler.report()
+        return out
+
+
+def simulate_workload(cluster, router, dialogues, *, profile: bool = True,
+                      **kwargs) -> dict:
+    """One-call convenience wrapper: build, (optionally) profile, run.
+
+    ``kwargs`` pass through to `EventSimulator`; a fresh `RoutingProfiler`
+    is attached unless ``profile=False`` or one was passed explicitly.
+    """
+    if profile and "profiler" not in kwargs:
+        kwargs["profiler"] = RoutingProfiler()
+    return EventSimulator(cluster, router, dialogues, **kwargs).run()

@@ -14,10 +14,17 @@ properties the paper exploits:
 Turn t's prompt = full conversation so far (client appends the engine's
 actual generated answer, preserving conversational causality like the
 paper's client, Appendix C.1).
+
+Scale runs (`repro.serving.simulator`) consume the same scripts lazily via
+``iter_dialogues`` — 10k dialogues stream through the simulator's bounded
+admission window instead of being pre-materialized — and pace them with an
+:class:`ArrivalProcess` (open-loop Poisson, synchronous closed-loop, or an
+explicit trace), the standard methodology in serving-system evaluations.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Iterator
 
 import numpy as np
 import zlib
@@ -27,6 +34,8 @@ DOMAINS = ("dialogue", "longctx", "reasoning", "code", "math")
 
 @dataclass
 class DialogueScript:
+    """One scripted multi-turn dialogue (user turns only; answers are live)."""
+
     dialogue_id: str
     domain: str
     turns: list          # list of user-turn token arrays
@@ -35,6 +44,8 @@ class DialogueScript:
 
 @dataclass
 class WorkloadSpec:
+    """Parameters of one synthetic workload family draw."""
+
     name: str
     n_dialogues: int = 24
     vocab: int = 255     # token ids 1..vocab (0 reserved)
@@ -45,9 +56,14 @@ def _tok(rng, n, vocab):
     return rng.integers(1, vocab, size=n, dtype=np.int32)
 
 
-def generate(spec: WorkloadSpec) -> list[DialogueScript]:
+def iter_dialogues(spec: WorkloadSpec) -> Iterator[DialogueScript]:
+    """Yield ``spec.n_dialogues`` scripts lazily, in ``generate`` order.
+
+    Bit-identical to ``generate(spec)`` element by element (one shared rng
+    consumed in dialogue order), but streams: the 10k-dialogue scale runs
+    hold only the simulator's bounded in-flight window in memory.
+    """
     rng = np.random.default_rng(spec.seed + zlib.crc32(spec.name.encode()) % 100000)
-    out = []
     for d in range(spec.n_dialogues):
         if spec.name == "coqa_like":
             domain = "dialogue"
@@ -71,8 +87,96 @@ def generate(spec: WorkloadSpec) -> list[DialogueScript]:
             difficulty = float(rng.uniform(0.5, 0.9))
         else:
             raise KeyError(spec.name)
-        out.append(DialogueScript(f"{spec.name}-{d}", domain, turns, difficulty))
-    return out
+        yield DialogueScript(f"{spec.name}-{d}", domain, turns, difficulty)
+
+
+def generate(spec: WorkloadSpec) -> list[DialogueScript]:
+    """Materialize the whole workload (small closed-loop runs and tests)."""
+    return list(iter_dialogues(spec))
 
 
 WORKLOADS = ("coqa_like", "quac_like", "hotpot_like")
+
+
+# --------------------------------------------------------------------------
+# Arrival processes (open-loop load generation for the event simulator)
+# --------------------------------------------------------------------------
+class ArrivalProcess:
+    """Dialogue arrival-time source for `repro.serving.simulator`.
+
+    ``times()`` yields absolute arrival timestamps (virtual seconds,
+    non-decreasing), one per dialogue, until the dialogue stream runs dry —
+    implementations may be infinite generators; the simulator zips them
+    against the dialogue iterator.
+    """
+
+    def times(self) -> Iterator[float]:
+        """Yield non-decreasing absolute arrival timestamps."""
+        raise NotImplementedError
+
+
+@dataclass
+class SyncArrivals(ArrivalProcess):
+    """Closed-loop arrivals: every dialogue present at ``at`` (default t=0).
+
+    This is the `run_workload` regime — the whole population arrives up
+    front — and the arrival process the closed-loop parity suite uses.
+    """
+
+    at: float = 0.0
+
+    def times(self) -> Iterator[float]:
+        """Constant stream of ``at``."""
+        while True:
+            yield self.at
+
+
+@dataclass
+class PoissonArrivals(ArrivalProcess):
+    """Open-loop memoryless arrivals at ``rate`` dialogues per virtual second.
+
+    The standard serving-evaluation load model: inter-arrival gaps are
+    iid Exp(rate), independent of system state, so queueing pressure is
+    sustained rather than self-throttling.
+    """
+
+    rate: float
+    seed: int = 0
+    start: float = 0.0
+
+    def times(self) -> Iterator[float]:
+        """Exponential-gap timestamps from a dedicated seeded rng."""
+        if self.rate <= 0:
+            raise ValueError(f"arrival rate must be > 0, got {self.rate}")
+        rng = np.random.default_rng(self.seed)
+        t = self.start
+        while True:
+            t += float(rng.exponential(1.0 / self.rate))
+            yield t
+
+
+@dataclass
+class TraceArrivals(ArrivalProcess):
+    """Replay an explicit (sorted) timestamp trace, e.g. from a log."""
+
+    timestamps: tuple
+
+    def times(self) -> Iterator[float]:
+        """Yield the recorded timestamps in order."""
+        prev = -np.inf
+        for t in self.timestamps:
+            t = float(t)
+            if t < prev:
+                raise ValueError("trace timestamps must be non-decreasing")
+            prev = t
+            yield t
+
+
+def make_arrivals(name: str, *, rate: float = 8.0, seed: int = 0
+                  ) -> ArrivalProcess:
+    """CLI helper: ``"sync"`` or ``"poisson"`` (with ``rate``) by name."""
+    if name == "sync":
+        return SyncArrivals()
+    if name == "poisson":
+        return PoissonArrivals(rate=rate, seed=seed)
+    raise KeyError(f"unknown arrival process {name!r} (sync|poisson)")

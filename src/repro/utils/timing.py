@@ -2,8 +2,20 @@
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 
 import jax
+
+
+def phase_scope(profiler, name: str):
+    """``profiler.phase(name)`` or a no-op context when no profiler is set.
+
+    The one shared implementation of the serving-layer profiling idiom:
+    routers, the auction layer and the serving loops all call this instead
+    of re-deriving the nullcontext dispatch (the profiler itself is
+    duck-typed — see `repro.serving.simulator.RoutingProfiler`).
+    """
+    return profiler.phase(name) if profiler is not None else nullcontext()
 
 
 class Timer:

@@ -65,3 +65,48 @@ def test_affinity_matrix_python_vs_kernel():
     kr2 = led.affinity_matrix(prompts, dialogues, agents,
                               extension_only_mask=ext_mask, use_kernel=True)
     assert np.allclose(py2, kr2, atol=1e-6)
+
+
+def test_ledger_session_cap_is_lru_and_behavior_neutral():
+    """max_sessions_per_agent LRU-caps tracked sessions; within the cap the
+    index behaves exactly like the unbounded ledger."""
+    import numpy as np
+
+    from repro.core.affinity import PrefixLedger
+
+    led = PrefixLedger(max_sessions_per_agent=2)
+    tok = lambda *xs: np.asarray(xs, dtype=np.int32)
+    led.update("a", "d0", tok(1, 2))
+    led.update("a", "d1", tok(3, 4))
+    led.update("a", "d0", tok(1, 2, 5))   # touch d0 -> d1 is now oldest
+    led.update("a", "d2", tok(6))         # evicts d1, not d0
+    assert sorted(led.sessions("a")) == ["d0", "d2"]
+    assert led.get("a", "d1") is None
+    assert led.get("a", "d0") is not None
+    assert led.recent_sessions("a", 2) == {"d0", "d2"}
+    # cap sized >= cache_slots keeps recent_sessions(cache_slots) identical
+    unbounded = PrefixLedger()
+    for d in range(6):
+        unbounded.update("a", f"d{d}", tok(d))
+    capped = PrefixLedger(max_sessions_per_agent=3)
+    for d in range(6):
+        capped.update("a", f"d{d}", tok(d))
+    assert unbounded.recent_sessions("a", 3) == capped.recent_sessions("a", 3)
+
+
+def test_router_sizes_ledger_cap_from_published_caches():
+    """IEMASRouter bounds the ledger iff every agent publishes a cache size."""
+    from repro.core import AgentInfo, IEMASRouter, TokenPrices
+
+    def agents(slots):
+        return [AgentInfo(f"a{i}", TokenPrices(0.01, 0.001, 0.03), 2,
+                          ("dialogue",), cache_slots=s)
+                for i, s in enumerate(slots)]
+
+    r = IEMASRouter(agents([12, 8]))
+    assert r.ledger.max_sessions_per_agent == 24
+    r2 = IEMASRouter(agents([12, 0]))   # 0 = unknown/unbounded -> no cap
+    assert r2.ledger.max_sessions_per_agent is None
+    r.add_agent(agents([0, 0])[0].__class__("a-new", TokenPrices(0.01, 0.001, 0.03), 2,
+                                            ("dialogue",), cache_slots=0))
+    assert r.ledger.max_sessions_per_agent is None

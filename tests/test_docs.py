@@ -17,9 +17,10 @@ def test_core_docstring_coverage_full():
 
 
 def test_solvers_and_kernels_docstring_coverage_full():
-    """The solver registry and the kernels layer are public surface too:
-    95%+ coverage each (the CI gate mirrors this)."""
-    for sub in ("src/repro/core/solvers", "src/repro/kernels"):
+    """The solver registry, the kernels layer and the serving layer are
+    public surface too: 95%+ coverage each (the CI gate mirrors this)."""
+    for sub in ("src/repro/core/solvers", "src/repro/kernels",
+                "src/repro/serving"):
         documented, total, missing = audit([REPO / sub])
         pct = 100.0 * documented / max(total, 1)
         assert pct >= 95.0, \

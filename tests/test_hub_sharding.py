@@ -15,7 +15,7 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import AgentInfo, CompletionObs, IEMASRouter, Request, TokenPrices
-from repro.core.auction import run_auction, run_sharded_auction
+from repro.core.auction import SPILL_HUB, run_auction, run_sharded_auction
 from repro.core.auction_dense import solve_dense_auction
 from repro.core.hub import SlotPriceBook
 
@@ -163,6 +163,81 @@ def test_price_book_remaps_layout_and_guards_membership():
     assert stats["warm_hits"] == 2 and stats["cold_starts"] == 3
     book.invalidate()
     assert book.lookup(0, 1, ids, [2, 1]) is None
+
+
+# ------------------------------------------------------- warm spill --
+def _overloaded_market(seed=5):
+    """Hub 0 saturated (many losers), hub 1 lightly loaded (residual slack
+    + live first-round duals): the donor-dual spill-seeding regime."""
+    rng = np.random.default_rng(seed)
+    n, m = 34, 12
+    values = rng.uniform(1.5, 6.0, (n, m))
+    costs = rng.uniform(0.2, 1.0, (n, m))
+    caps = [3] * m
+    blocks = {0: (list(range(30)), list(range(6))),      # 30 reqs, 18 slots
+              1: (list(range(30, 34)), list(range(6, 12)))}  # 4 reqs, 18
+    return values, costs, caps, blocks
+
+
+def test_spill_seeded_from_donor_duals_rounds_and_welfare():
+    """ISSUE-5 satellite: the cross-hub spill round warm-starts from the
+    donor hubs' slot-price duals; warm-spill rounds <= cold-spill rounds,
+    welfare unchanged within the certificate, first round untouched."""
+    values, costs, caps, blocks = _overloaded_market()
+    cold = run_sharded_auction(values, costs, caps, blocks, solver="dense",
+                               spill=True, spill_warm=False)
+    warm = run_sharded_auction(values, costs, caps, blocks, solver="dense",
+                               spill=True, spill_warm=True)
+    sp_c, sp_w = cold[SPILL_HUB], warm[SPILL_HUB]
+    assert not sp_c.solver_stats["spill"]["warm_started"]
+    assert sp_w.solver_stats["spill"]["warm_started"]
+    assert sp_w.solver_stats["warm_started"]          # solver saw the seed
+    assert sp_w.solver_stats["rounds"] <= sp_c.solver_stats["rounds"], \
+        (sp_w.solver_stats["rounds"], sp_c.solver_stats["rounds"])
+    # the seed is pure reoptimization state: same rescue welfare (within
+    # both runs' certificates) and identical first-round results
+    tol = ATOL + sp_c.solver_stats["gap_bound"] + sp_w.solver_stats["gap_bound"]
+    assert abs(sp_w.welfare - sp_c.welfare) <= tol
+    for h in blocks:
+        assert warm[h].assignment == cold[h].assignment
+        assert warm[h].payments == cold[h].payments
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10**6))
+def test_spill_warm_seed_never_costs_welfare(seed):
+    """Property: across random overload markets, the seeded spill round's
+    welfare matches the cold spill round within certificates."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(8, 30))
+    m = int(rng.integers(4, 12))
+    values = rng.uniform(0, 6, (n, m)) * (rng.random((n, m)) > 0.2)
+    costs = rng.uniform(0, 2, (n, m))
+    caps = rng.integers(1, 3, m).tolist()
+    split = max(1, m // 2)
+    blocks = {0: (list(range(n)), list(range(split))),
+              1: ([], list(range(split, m)))}
+    cold = run_sharded_auction(values, costs, caps, blocks, solver="dense",
+                               spill=True, spill_warm=False)
+    warm = run_sharded_auction(values, costs, caps, blocks, solver="dense",
+                               spill=True, spill_warm=True)
+    assert (SPILL_HUB in cold) == (SPILL_HUB in warm)
+    if SPILL_HUB in cold:
+        sp_c, sp_w = cold[SPILL_HUB], warm[SPILL_HUB]
+        tol = ATOL + sp_c.solver_stats["gap_bound"] \
+            + sp_w.solver_stats["gap_bound"]
+        assert abs(sp_w.welfare - sp_c.welfare) <= tol
+        assert sp_w.solver_stats["spill"]["candidates"] == \
+            sp_c.solver_stats["spill"]["candidates"]
+
+
+def test_spill_seed_skipped_for_exact_backend():
+    """The mcmf oracle has no persistent duals: spill stays cold there."""
+    values, costs, caps, blocks = _overloaded_market()
+    res = run_sharded_auction(values, costs, caps, blocks, solver="mcmf",
+                              spill=True, spill_warm=True)
+    assert SPILL_HUB in res
+    assert not res[SPILL_HUB].solver_stats["spill"]["warm_started"]
 
 
 # ------------------------------------------------------------ router --

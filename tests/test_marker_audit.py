@@ -24,7 +24,9 @@ TIER1_MODULES = {
     "test_mechanism",
     "test_models",
     "test_predictor_batch",
+    "test_run_workload",
     "test_sharding",
+    "test_simulator",
     "test_system",
 }
 

@@ -1,0 +1,216 @@
+"""Event-driven serving simulator: determinism, closed-loop parity with
+run_workload, streaming admission, profiler attribution, 10k smoke.
+
+Everything here runs on ``engine_mode="analytic"`` clusters — deterministic
+virtual service times, so records can be compared bit-for-bit."""
+import numpy as np
+import pytest
+
+from repro.core import IEMASRouter
+from repro.serving import (EventSimulator, PoissonArrivals, RoutingProfiler,
+                           SimCluster, SyncArrivals, TraceArrivals,
+                           WorkloadSpec, generate, iter_dialogues,
+                           run_workload)
+
+
+def _fresh(seed=0, n_agents=4, fail=0.0, **router_kw):
+    cluster = SimCluster(n_agents=n_agents, seed=seed, max_new_tokens=3,
+                         engine_mode="analytic", fail_prob=fail)
+    kw = dict(solver="dense", n_hubs=2, warm_start=True)
+    kw.update(router_kw)
+    router = IEMASRouter(cluster.agent_infos(), **kw)
+    return cluster, router
+
+
+def _sig(cluster):
+    """Bit-comparable per-record signature, in completion order."""
+    return [(r.request.request_id, r.request.dialogue_id, r.request.turn,
+             r.agent_id, r.n_prompt, r.n_hit, r.payment, r.latency,
+             r.dispatched_at) for r in cluster.records]
+
+
+# -------------------------------------------------- closed-loop parity --
+@pytest.mark.parametrize("fail", [0.0, 0.2])
+def test_lockstep_parity_with_run_workload(fail):
+    """With synchronous arrivals and quantized round ticks the event
+    simulator reproduces run_workload's decisions bit-for-bit — including
+    the fault path (same rng draw order)."""
+    dlg = generate(WorkloadSpec("coqa_like", n_dialogues=7, seed=3))
+    c1, r1 = _fresh(fail=fail)
+    m1 = run_workload(c1, r1, dlg, max_rounds=3000, max_new_tokens=3,
+                      batch_per_round=4)
+    c2, r2 = _fresh(fail=fail)
+    m2 = EventSimulator(c2, r2, dlg, arrivals=SyncArrivals(), batch_cap=4,
+                        quantize=0.05, max_rounds=3000,
+                        max_new_tokens=3).run()
+    assert _sig(c1) == _sig(c2)
+    for key in ("n", "kv_hit_rate", "latency_ms_mean", "cost_mean",
+                "quality_mean", "completed_turns", "dispatched_requests"):
+        assert m1[key] == m2[key], key
+    assert m2["dialogues_completed"] == len(dlg)
+    assert not m1["truncated"] and not m2["truncated"]
+
+
+def test_lockstep_parity_other_workloads():
+    """Parity holds across workload families (different turn structure)."""
+    for family in ("quac_like", "hotpot_like"):
+        dlg = generate(WorkloadSpec(family, n_dialogues=4, seed=1))
+        c1, r1 = _fresh(seed=2)
+        run_workload(c1, r1, dlg, max_rounds=2000, max_new_tokens=3)
+        c2, r2 = _fresh(seed=2)
+        EventSimulator(c2, r2, dlg, arrivals=SyncArrivals(), batch_cap=16,
+                       quantize=0.05, max_rounds=2000,
+                       max_new_tokens=3).run()
+        assert _sig(c1) == _sig(c2), family
+
+
+# ------------------------------------------------------- determinism --
+def test_event_ordering_determinism():
+    """Two identical open-loop runs (Poisson arrivals, failures on) replay
+    the exact same event order, decisions and metrics under a fixed seed."""
+    def once():
+        cluster, router = _fresh(seed=5, fail=0.15)
+        spec = WorkloadSpec("coqa_like", n_dialogues=12, seed=9)
+        out = EventSimulator(
+            cluster, router, iter_dialogues(spec),
+            arrivals=PoissonArrivals(rate=6.0, seed=11), batch_cap=8,
+            batch_window=0.02, max_inflight=6, max_new_tokens=3).run()
+        return _sig(cluster), out
+
+    sig_a, out_a = once()
+    sig_b, out_b = once()
+    assert sig_a == sig_b
+    drop = ("wall_time_s",)  # the only wall-clock-dependent key
+    assert {k: v for k, v in out_a.items() if k not in drop} == \
+        {k: v for k, v in out_b.items() if k not in drop}
+
+
+# ------------------------------------------------ streaming admission --
+def test_admission_window_bounds_inflight():
+    """10k-style streaming: at most max_inflight dialogues hold state at
+    once; the rest queue in the backlog and everything still completes."""
+    cluster, router = _fresh(seed=1)
+    spec = WorkloadSpec("coqa_like", n_dialogues=10, seed=4)
+    out = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=SyncArrivals(), batch_cap=8,
+                         batch_window=0.02, max_inflight=3,
+                         max_new_tokens=3).run()
+    assert out["peak_inflight"] <= 3
+    assert out["dialogues_arrived"] == 10
+    assert out["dialogues_completed"] == 10
+    assert out["unfinished_dialogues"] == 0 and not out["truncated"]
+    # a window that can never admit anything is a configuration error, not
+    # a silent no-op run
+    with pytest.raises(ValueError, match="max_inflight"):
+        EventSimulator(cluster, router, [], max_inflight=0)
+
+
+def test_trace_arrivals_and_open_loop_pacing():
+    """TraceArrivals replays explicit timestamps; arrivals pace admission
+    (the second dialogue cannot be dispatched before its arrival time)."""
+    cluster, router = _fresh(seed=3)
+    dlg = generate(WorkloadSpec("hotpot_like", n_dialogues=3, seed=2))
+    out = EventSimulator(cluster, router, dlg,
+                         arrivals=TraceArrivals((0.0, 2.0, 2.5)),
+                         batch_cap=4, batch_window=0.01,
+                         max_new_tokens=3).run()
+    assert out["dialogues_completed"] == 3
+    first_dispatch = {}
+    for rec in cluster.records:
+        did = rec.request.dialogue_id
+        first_dispatch.setdefault(did, rec.dispatched_at)
+    times = [first_dispatch[d.dialogue_id] for d in dlg]
+    assert times[1] >= 2.0 and times[2] >= 2.5
+
+
+def test_short_trace_ends_arrivals_loudly():
+    """A trace shorter than the dialogue stream stops arrivals (zip
+    semantics) but flags the run instead of crashing or dropping silently."""
+    cluster, router = _fresh(seed=3)
+    dlg = generate(WorkloadSpec("hotpot_like", n_dialogues=5, seed=2))
+    with pytest.warns(RuntimeWarning, match="arrival process exhausted"):
+        out = EventSimulator(cluster, router, dlg,
+                             arrivals=TraceArrivals((0.0, 0.5)),
+                             batch_cap=4, batch_window=0.01,
+                             max_new_tokens=3).run()
+    assert out["truncated"]
+    assert out["dialogues_arrived"] == 2
+    assert out["dialogues_completed"] == 2
+
+
+def test_truncation_reported_with_warning():
+    """Hitting the round budget surfaces unfinished dialogues + a warning
+    instead of returning partial metrics silently."""
+    cluster, router = _fresh(seed=0)
+    dlg = generate(WorkloadSpec("coqa_like", n_dialogues=6, seed=3))
+    with pytest.warns(RuntimeWarning, match="truncated"):
+        out = EventSimulator(cluster, router, dlg, arrivals=SyncArrivals(),
+                             batch_cap=2, quantize=0.05, max_rounds=3,
+                             max_new_tokens=3).run()
+    assert out["truncated"]
+    assert out["unfinished_dialogues"] > 0
+    assert out["dialogues_completed"] < 6
+
+
+# ------------------------------------------------------- profiler --
+def test_profiler_attribution():
+    """The RoutingProfiler sees every phase the router runs and reports
+    overhead as routing wall-clock over simulated engine seconds."""
+    cluster, router = _fresh(seed=2)
+    prof = RoutingProfiler()
+    spec = WorkloadSpec("coqa_like", n_dialogues=6, seed=7)
+    out = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=PoissonArrivals(rate=8.0, seed=3),
+                         batch_cap=8, profiler=prof, lean=True,
+                         max_new_tokens=3).run()
+    rep = out["routing"]
+    assert rep["engine_compute_s"] > 0
+    assert rep["routing_wall_s"] > 0
+    assert rep["overhead_frac"] == pytest.approx(
+        rep["routing_wall_s"] / rep["engine_compute_s"])
+    for phase in ("route_batch", "phase1_predict", "phase2_solve[dense]",
+                  "price_book", "phase4_feedback"):
+        assert phase in rep["phases"], phase
+        assert rep["phases"][phase]["calls"] > 0
+    # nested phases are inside the umbrella, never bigger than it
+    assert rep["phases"]["phase1_predict"]["wall_s"] <= \
+        rep["phases"]["route_batch"]["wall_s"]
+    # engine compute matches the telemetry busy-seconds hook
+    assert rep["engine_compute_s"] == pytest.approx(
+        cluster.telemetry.busy_seconds())
+
+
+def test_profiler_noop_when_absent():
+    """Without a profiler nothing is attached and routing still works."""
+    cluster, router = _fresh(seed=2)
+    assert cluster.profiler is None and router.profiler is None
+    out = EventSimulator(cluster, router,
+                         generate(WorkloadSpec("coqa_like", n_dialogues=2,
+                                               seed=1)),
+                         max_new_tokens=3).run()
+    assert "routing" not in out
+    assert out["dialogues_completed"] == 2
+
+
+# ------------------------------------------------------- 10k smoke --
+@pytest.mark.slow
+def test_10k_dialogue_scale_smoke():
+    """The headline streaming regime: 10k dialogues flow through a bounded
+    window on a 64-agent analytic cluster with overhead attribution."""
+    cluster = SimCluster(n_agents=64, seed=0, engine_mode="analytic",
+                         max_new_tokens=4)
+    router = IEMASRouter(cluster.agent_infos(), solver="dense", n_hubs=4,
+                         warm_start=True)
+    spec = WorkloadSpec("coqa_like", n_dialogues=10_000, seed=1)
+    out = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=PoissonArrivals(rate=64.0, seed=2),
+                         batch_cap=64, batch_window=0.05, max_inflight=256,
+                         profiler=RoutingProfiler(), lean=True,
+                         max_new_tokens=4, max_events=20_000_000,
+                         max_rounds=2_000_000).run()
+    assert out["dialogues_arrived"] == 10_000
+    assert out["dialogues_completed"] == 10_000
+    assert out["unfinished_dialogues"] == 0 and not out["truncated"]
+    assert out["peak_inflight"] <= 256
+    assert out["routing"]["engine_compute_s"] > 0
+    assert 0 < out["routing"]["overhead_frac"] < 10
