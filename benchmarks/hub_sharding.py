@@ -136,7 +136,9 @@ def run(smoke: bool = False, oracle: bool | None = None):
         # final duals, cold re-solves from scratch
         rng = np.random.default_rng(31)
         v2 = np.maximum(values + rng.normal(0, 0.1, values.shape), 0.0)
-        seeds = {h: sharded[h].solver_stats["slot_prices"] for h in sharded}
+        seeds = {h: np.concatenate([np.asarray(p) for p in
+                                    sharded[h].solver_stats["agent_prices"]])
+                 for h in sharded}
         cold2, t_cold2 = _time(
             lambda: run_sharded_auction(v2, costs, caps, blocks,
                                         solver="dense"), repeats)

@@ -60,14 +60,19 @@ def run():
 
     B = jnp.asarray(np.maximum(rng.uniform(-1, 4, (256, 384)), 0.0),
                     jnp.float32)
-    prices = jnp.asarray(rng.uniform(0, 2, 384), jnp.float32)
+    ask = np.asarray(rng.uniform(0, 2, 384), np.float32)
+    ask2 = ask + np.asarray(rng.uniform(0, 1, 384), np.float32)
+    # ~20% single-unit agents: ask2 quotes the +big sentinel
+    one_unit = rng.random(384) < 0.2
+    ask2[one_unit] = np.float32(np.finfo(np.float32).max / 4)
+    ask, ask2 = jnp.asarray(ask), jnp.asarray(ask2)
     active = jnp.asarray(rng.random(256) > 0.25)
-    t_ref = bench_call(lambda: auction_bid_ref(B, prices, active, 0.01),
+    t_ref = bench_call(lambda: auction_bid_ref(B, ask, ask2, active, 0.01),
                        warmup=1, iters=3)
-    t_pal = bench_call(lambda: auction_bid_op(B, prices, active, 0.01),
+    t_pal = bench_call(lambda: auction_bid_op(B, ask, ask2, active, 0.01),
                        warmup=1, iters=3)
-    got = auction_bid_op(B, prices, active, 0.01)
-    want = auction_bid_ref(B, prices, active, 0.01)
+    got = auction_bid_op(B, ask, ask2, active, 0.01)
+    want = auction_bid_ref(B, ask, ask2, active, 0.01)
     exact = all(bool(jnp.array_equal(g, w)) for g, w in zip(got, want))
     emit("kernels/auction_bid_256x384", t_pal,
          f"jnp_oracle_us={t_ref:.0f} interpret_us={t_pal:.0f} "

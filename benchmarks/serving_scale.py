@@ -51,7 +51,8 @@ CROSSOVER = 0.10
 
 
 def run_cell(family: str, n_agents: int, n_dialogues: int, *,
-             solver: str | None = None, seed: int = 0) -> dict:
+             solver: str | None = None, seed: int = 0,
+             incremental: bool = False) -> dict:
     """One sweep cell at the `SCALE_128` preset knobs (fleet size varies)."""
     cfg = SCALE_128
     cluster = SimCluster(n_agents=n_agents, seed=seed,
@@ -65,6 +66,7 @@ def run_cell(family: str, n_agents: int, n_dialogues: int, *,
                              rate=cfg.arrival_rate(n_agents), seed=seed + 2),
                          batch_cap=cfg.batch_cap,
                          batch_window=cfg.batch_window,
+                         incremental=incremental,
                          max_inflight=cfg.max_inflight,
                          max_new_tokens=cfg.max_new_tokens,
                          profiler=RoutingProfiler(), lean=True,
@@ -72,6 +74,7 @@ def run_cell(family: str, n_agents: int, n_dialogues: int, *,
     t0 = time.perf_counter()
     out = sim.run()
     out["bench_wall_s"] = time.perf_counter() - t0
+    out["accounts"] = dict(router.accounts)
     return out
 
 
@@ -115,6 +118,49 @@ def _row(family: str, n_agents: int, n_dialogues: int, out: dict) -> float:
     return overhead
 
 
+def _incremental_study(family: str, n_agents: int, n_dialogues: int,
+                       gate: bool) -> None:
+    """ISSUE-6 tentpole measurement: incremental vs batch-window routing.
+
+    Runs the same cell twice — batch-only and ``incremental=True`` (newly
+    ready work bids into the standing duals and dispatches immediately;
+    the next batch auction re-equilibrates) — and emits the arrival-latency
+    comparison.  Gates (``gate``): provisional routing actually fired, the
+    mean queue wait drops BELOW the batch-window latency floor, and the
+    realized per-request welfare holds within 10% — greedy posted-price
+    dispatch trades a few percent of welfare (measured ~5% at the smoke
+    cell) for the latency win; the next batch auction re-equilibrates the
+    duals so the loss does not compound.
+    """
+    cfg = SCALE_128
+    base = run_cell(family, n_agents, n_dialogues)
+    inc = run_cell(family, n_agents, n_dialogues, incremental=True)
+    wait_b = base.get("queue_wait_mean_s", 0.0)
+    wait_i = inc.get("queue_wait_mean_s", 0.0)
+    wf_b = base["accounts"]["welfare_realized"] / max(base.get("n", 1), 1)
+    wf_i = inc["accounts"]["welfare_realized"] / max(inc.get("n", 1), 1)
+    frac = inc["incremental_dispatched"] / max(inc["dispatched_requests"], 1)
+    confirmed = inc["accounts"]["incremental_confirmed"]
+    rerouted = inc["accounts"]["incremental_rerouted"]
+    emit(f"servingscale/{family}_a{n_agents}_incremental",
+         inc["bench_wall_s"] * 1e6,
+         f"wait_batch_ms={1e3 * wait_b:.2f} wait_inc_ms={1e3 * wait_i:.2f} "
+         f"window_ms={1e3 * cfg.batch_window:.0f} "
+         f"inc_frac={frac:.2f} confirmed={confirmed} rerouted={rerouted} "
+         f"welfare_per_req_batch={wf_b:.4f} welfare_per_req_inc={wf_i:.4f}")
+    if gate:
+        assert inc["incremental_dispatched"] > 0, "no provisional dispatches"
+        assert not inc["truncated"]
+        assert inc["dialogues_completed"] == n_dialogues
+        assert wait_i < wait_b, \
+            f"incremental wait {wait_i:.4f}s >= batch wait {wait_b:.4f}s"
+        assert wait_i < cfg.batch_window, \
+            f"incremental wait {wait_i:.4f}s above the " \
+            f"{cfg.batch_window}s batch-window floor"
+        assert wf_i >= 0.90 * wf_b, \
+            f"incremental welfare/req {wf_i:.4f} < 90% of batch {wf_b:.4f}"
+
+
 def run(smoke: bool = False, oracle: bool = False):
     """Sweep the (family x fleet-size) grid and report 10% crossovers."""
     quick = smoke or QUICK
@@ -134,7 +180,16 @@ def run(smoke: bool = False, oracle: bool = False):
                     f"{out['dialogues_completed']}/{n_dialogues} completed"
                 assert not out["truncated"], "smoke run truncated"
                 assert rep["engine_compute_s"] > 0
-                assert 0 < rep["overhead_frac"] < 10
+                # regression bound on the routing-overhead fraction: the
+                # measured smoke cell sits well under 10% (docs/benchmarks
+                # table: 4-7% up to 128 agents); 0.5 gives noisy-CI headroom
+                # while still catching an order-of-magnitude regression
+                assert 0 < rep["overhead_frac"] < 0.5, \
+                    f"routing overhead {rep['overhead_frac']:.3f} out of " \
+                    f"the (0, 0.5) regression bound"
+                # the event loop never invokes the router without work
+                assert rep["empty_route_calls"] == 0
+                assert rep["route_requests"] >= out["dispatched_requests"]
                 for need in ("route_batch", "phase1_predict",
                              "phase2_solve[dense]", "phase4_feedback"):
                     assert need in rep["phases"], f"missing phase {need}"
@@ -142,6 +197,12 @@ def run(smoke: bool = False, oracle: bool = False):
             else:
                 assert not out["truncated"], \
                     f"{family} a{n_agents} d{n_dialogues} truncated"
+        # incremental-vs-batch arrival latency at the smallest cell (gated
+        # in smoke; the full sweep repeats it at the second size too)
+        n_a, n_d = sizes[0]
+        _incremental_study(family, n_a, n_d, gate=True)
+        if not quick and len(sizes) > 1:
+            _incremental_study(family, sizes[1][0], sizes[1][1], gate=False)
         if oracle and not smoke:
             # exact-solver comparison row: the Python oracle at micro-batch
             # markets (its blowup is market-size-driven — mcmf_scaling.py)

@@ -55,10 +55,10 @@ def run_auction(values: np.ndarray, costs: np.ndarray, caps,
     Welfare weights w_ij = v_ij - c_ij; non-positive pairs pruned (Alg. 1).
     ``solver`` names a registered backend (``available_solvers()``); the
     dense family computes payments in one batched pass regardless of
-    ``payment_mode`` and accepts a warm-start slot-price seed via
+    ``payment_mode`` and accepts a warm-start unit-price seed via
     ``start_prices`` (silently dropped for backends without persistent
     duals, e.g. the mcmf oracle); the final duals come back in
-    ``solver_stats["slot_prices"]`` for the caller's price book.
+    ``solver_stats["agent_prices"]`` for the caller's price book.
     """
     backend = get_solver(solver)
     if not backend.supports_warm_start:
@@ -154,24 +154,23 @@ def _spill_seed(results, blocks, a_idx, residual, n_spill
     """Warm-start seed for the spill market from the donor hubs' duals.
 
     The spill market sells each agent's ``min(residual, n_spill)`` leftover
-    unit slots.  A first-round dense solve left per-slot prices behind
-    (``solver_stats["slot_prices"]`` / ``["slot_agent"]``); sorted
-    ascending, an agent's cheapest slots are the unsold ones — the very
-    goods on sale here — so they are a near-equilibrium seed for the
-    residual market.  Agents with no first-round dual state (e.g. members
-    of a hub that received no requests this batch) seed at 0, the free-slot
-    boundary price.  Returns None when no donor duals exist at all (exact
-    backends without persistent duals).
+    capacity units.  A first-round dense solve left per-agent ascending
+    unit-price vectors behind (``solver_stats["agent_prices"]``); an
+    agent's cheapest units are the unsold ones — the very goods on sale
+    here — so they are a near-equilibrium seed for the residual market.
+    Agents with no first-round dual state (e.g. members of a hub that
+    received no requests this batch) seed at 0, the free-unit boundary
+    price.  Returns None when no donor duals exist at all (exact backends
+    without persistent duals).
     """
     per_agent: dict[int, np.ndarray] = {}
     for h, (_br, ba) in blocks.items():
         stats = results[h].solver_stats
-        if "slot_prices" not in stats:
+        if "agent_prices" not in stats:
             continue
-        sp = np.asarray(stats["slot_prices"], dtype=np.float64)
-        sa = np.asarray(stats["slot_agent"])
         for li, gi in enumerate(ba):
-            per_agent[gi] = np.sort(sp[sa == li])
+            per_agent[gi] = np.asarray(stats["agent_prices"][li],
+                                       dtype=np.float64)
     if not per_agent:
         return None
     segs = []

@@ -118,67 +118,96 @@ def route_to_hub(request_domain: str, hubs: list[Hub],
 
 
 class SlotPriceBook:
-    """Cross-round warm-start state: each hub's final slot-price vector.
+    """Cross-round warm-start state: each hub's final unit-price duals.
 
-    The dense ε-scaling auction's duals (one price per unit slot) from round
-    t are a near-equilibrium seed for round t+1 — the serving loop
-    re-auctions statistically overlapping request sets.  Prices are stored
-    *per agent* (an agent's slots are interchangeable), so the book can
-    re-assemble a seed for the next round's slot layout even when per-agent
-    free capacity or the batch size changed; slots that did not exist last
-    round seed at price 0, which is exactly the free-slot (λ = 0) boundary
-    condition the solver maintains anyway.
+    The dense ε-scaling auction's duals (one price per capacity unit,
+    ascending per agent) from round t are a near-equilibrium seed for round
+    t+1 — the serving loop re-auctions statistically overlapping request
+    sets.  Prices are stored *per agent* (an agent's units are
+    interchangeable), so the book can re-assemble a seed for the next
+    round's column layout even when per-agent free capacity or the batch
+    size changed; units that did not exist last round seed at price 0,
+    which is exactly the free-unit (λ = 0) boundary condition the solver
+    maintains anyway.  Because each stored vector is ascending, truncating
+    to a smaller unit count keeps exactly the CHEAPEST units — the ones a
+    shrunken market still sells.
 
-    Safety contract: a stored entry is only replayed when BOTH the elastic
+    Safety contract: a stored entry is only replayed when the elastic
     agent-set version (bumped by the router on every membership or hub
-    rebuild — `repro.distributed.elastic.AgentSetVersion`) AND the hub's
-    exact live-agent tuple match.  Any mismatch — an agent joined, left,
-    was quarantined, or hubs were recut — is a cold start; warm-starting
-    across a changed slot layout would seed prices onto the wrong goods.
+    rebuild — `repro.distributed.elastic.AgentSetVersion`), the hub's exact
+    live-agent tuple, AND the agents' published capacities all match.  Any
+    mismatch — an agent joined, left, was quarantined, hubs were recut, or
+    an agent's capacity b_i changed — is a cold start; warm-starting across
+    a changed unit layout would seed prices onto the wrong goods (and a
+    capacity change moves the equilibrium price of every unit the agent
+    sells, so the old splits are stale even at matching membership).
     """
 
     def __init__(self) -> None:
-        # hub_id -> (agent-set version, live agent ids, per-agent prices)
-        self._book: dict[int, tuple[int, tuple[str, ...],
+        # hub_id -> (agent-set version, live agent ids, published
+        #            capacities, per-agent ascending unit prices)
+        self._book: dict[int, tuple[int, tuple[str, ...], tuple[int, ...],
                                     dict[str, np.ndarray]]] = {}
         self.warm_hits = 0
         self.cold_starts = 0
         self.stores = 0
 
     def lookup(self, hub_id: int, version: int, agent_ids: tuple[str, ...],
-               slot_counts: list[int]) -> np.ndarray | None:
-        """Seed prices for this round's slot layout, or None (cold start).
+               caps: list[int], unit_counts: list[int]) -> np.ndarray | None:
+        """Seed prices for this round's column layout, or None (cold start).
 
-        ``slot_counts[i]`` is the number of unit slots agent ``agent_ids[i]``
-        exposes this round (``min(free capacity, batch size)`` — the
-        `repro.core.solvers.dense_common.expand_slots` layout, agents
+        ``caps[i]`` is agent ``agent_ids[i]``'s published capacity (the
+        layout key — a capacity change invalidates the entry) and
+        ``unit_counts[i]`` the number of units it exposes this round
+        (``min(free capacity, batch size)`` — the
+        `repro.core.solvers.dense_common.column_counts` layout, agents
         contiguous in ``agent_ids`` order).
         """
         entry = self._book.get(hub_id)
-        if entry is None or entry[0] != version or entry[1] != tuple(agent_ids):
+        if entry is None or entry[0] != version \
+                or entry[1] != tuple(agent_ids) \
+                or entry[2] != tuple(int(c) for c in caps):
             self.cold_starts += 1
             return None
-        per_agent = entry[2]
+        per_agent = entry[3]
         segs = []
-        for aid, count in zip(agent_ids, slot_counts):
+        for aid, count in zip(agent_ids, unit_counts):
             seg = np.zeros(int(count))
             prev = per_agent.get(aid)
             if prev is not None and count:
                 take = min(int(count), len(prev))
-                seg[:take] = prev[:take]
+                seg[:take] = prev[:take]    # ascending: cheapest units first
             segs.append(seg)
         self.warm_hits += 1
         return np.concatenate(segs) if segs else np.zeros(0)
 
     def store(self, hub_id: int, version: int, agent_ids: tuple[str, ...],
-              slot_prices: np.ndarray, slot_agent: np.ndarray) -> None:
-        """Record a solve's final duals, split per agent for re-layout."""
-        slot_prices = np.asarray(slot_prices, dtype=np.float64)
-        slot_agent = np.asarray(slot_agent)
-        per_agent = {aid: slot_prices[slot_agent == i]
-                     for i, aid in enumerate(agent_ids)}
-        self._book[hub_id] = (version, tuple(agent_ids), per_agent)
+              caps: list[int], agent_prices) -> None:
+        """Record a solve's final duals (``agent_prices[i]`` is agent i's
+        ascending unit-price vector), keyed by the published capacities."""
+        per_agent = {aid: np.sort(np.asarray(p, dtype=np.float64))
+                     for aid, p in zip(agent_ids, agent_prices)}
+        self._book[hub_id] = (version, tuple(agent_ids),
+                              tuple(int(c) for c in caps), per_agent)
         self.stores += 1
+
+    def posted_asks(self, hub_id: int, version: int,
+                    agent_ids: tuple[str, ...], caps: list[int]
+                    ) -> dict[str, np.ndarray] | None:
+        """Standing per-agent ascending unit duals for incremental bidding.
+
+        A mid-window arrival bids against these posted prices directly (its
+        k-th provisional unit at agent i costs ``asks[aid][k]``).  Returns
+        None when no fresh entry exists — same staleness contract as
+        `lookup`, without consuming a warm-hit/cold-start counter (posted
+        asks are read many times per window).
+        """
+        entry = self._book.get(hub_id)
+        if entry is None or entry[0] != version \
+                or entry[1] != tuple(agent_ids) \
+                or entry[2] != tuple(int(c) for c in caps):
+            return None
+        return entry[3]
 
     def invalidate(self, hub_id: int | None = None) -> None:
         """Drop one hub's entry, or the whole book (hub_id=None)."""

@@ -142,7 +142,14 @@ class IEMASRouter:
         self._pending: dict[str, tuple] = {}  # request_id -> (x, agent, req)
         self.accounts = {"payments": 0.0, "agent_costs": 0.0,
                          "welfare_realized": 0.0, "surplus": 0.0,
-                         "matched": 0, "unmatched": 0, "spill_rescued": 0}
+                         "matched": 0, "unmatched": 0, "spill_rescued": 0,
+                         "incremental_routed": 0, "incremental_confirmed": 0,
+                         "incremental_rerouted": 0}
+        # provisional routes issued since the last batch auction: the next
+        # route_batch re-equilibrates them (request_id -> decision, plus the
+        # per-agent count of provisionally consumed units)
+        self._provisional: dict[str, RouteDecision] = {}
+        self._prov_units: dict[str, int] = {}
         self.n_hubs = n_hubs
         self.hub_scheme = hub_scheme
         self.agent_set_version = AgentSetVersion()
@@ -279,16 +286,46 @@ class IEMASRouter:
     def route_batch(self, requests: list[Request], telemetry: dict,
                     free_slots: dict | None = None) -> list[RouteDecision]:
         """telemetry: router_inflight, router_rps, per-agent inflight/rps.
-        free_slots (optional) caps per-agent concurrency below capacity."""
-        if not requests:
+        free_slots (optional) caps per-agent concurrency below capacity.
+
+        Also the window's re-equilibration oracle for provisional routes
+        issued by :meth:`route_incremental` since the last batch: the
+        provisionals re-enter the market as SHADOW participants (with the
+        units they consumed returned to the pool) and the batch solution
+        confirms each one (same agent ->
+        ``accounts["incremental_confirmed"]``) or disavows it
+        (``accounts["incremental_rerouted"]``); the dispatched execution is
+        never moved — the counters quantify how often the posted-price
+        greedy agreed with the equilibrium.  Every *batch* request is
+        tallied exactly once per window — matched or unmatched, with spill
+        rescues counted inside matched (plus ``spill_rescued``), never as
+        an unmatched-then-rescued double entry.
+        """
+        if self.profiler is not None and \
+                hasattr(self.profiler, "note_route_batch"):
+            self.profiler.note_route_batch(len(requests))
+        prov = list(self._provisional.values())
+        prov_units = self._prov_units
+        self._provisional = {}
+        self._prov_units = {}
+        shadow = len(prov)
+        all_reqs = [d.request for d in prov] + list(requests)
+        if not all_reqs:
             return []
+        if prov_units and free_slots is not None:
+            # shadow participants re-bid for the units they already consumed
+            free_slots = dict(free_slots)
+            for aid, k in prov_units.items():
+                free_slots[aid] = free_slots.get(aid, 0) + k
         live = [a for a in self.agents if a.agent_id not in self.quarantined]
         if not live:
-            return [RouteDecision(r, None, 0.0, None, 0.0, -1) for r in requests]
-        n, m = len(requests), len(live)
+            decisions = [RouteDecision(r, None, 0.0, None, 0.0, -1)
+                         for r in all_reqs]
+            return self._finish_window(prov, decisions, shadow)
+        n, m = len(all_reqs), len(live)
 
         with self._phase("phase1_predict"):
-            lat, cst, qual, values, X, xs = self._phase1(requests, live,
+            lat, cst, qual, values, X, xs = self._phase1(all_reqs, live,
                                                          telemetry)
 
         # Phase 1c/2/3 per hub
@@ -307,7 +344,7 @@ class IEMASRouter:
 
         req_hub = [route_to_hub(r.domain, self.hubs,
                                 [a.domains for a in self.agents])
-                   for r in requests]
+                   for r in all_reqs]
         blocks: dict[int, tuple[list[int], list[int]]] = {}
         for h in range(len(self.hubs)):
             r_idx = [j for j in range(n) if req_hub[j] == h]
@@ -321,7 +358,8 @@ class IEMASRouter:
             blocks[h] = (r_idx, a_idx)
 
         # warm-start seeds: last round's duals, replayed only when the hub's
-        # exact live-agent set (and the elastic version) still matches
+        # exact live-agent set, the elastic version AND the agents'
+        # published capacities still match
         start_prices: dict[int, np.ndarray] = {}
         if self.warm_start:
             with self._phase("price_book"):
@@ -331,7 +369,9 @@ class IEMASRouter:
                     version, ids = self.agent_set_version.fingerprint(
                         live[i].agent_id for i in a_idx)
                     counts = [min(caps[i], len(r_idx)) for i in a_idx]
-                    seed = self.price_book.lookup(h, version, ids, counts)
+                    seed = self.price_book.lookup(
+                        h, version, ids, [live[i].capacity for i in a_idx],
+                        counts)
                     if seed is not None:
                         start_prices[h] = seed
 
@@ -344,7 +384,8 @@ class IEMASRouter:
                                       profiler=self.profiler)
 
         def _record_match(j, i, pay, weight, pred_cost, h):
-            """Decision + pending-feedback entry for one matched pair."""
+            """Decision (+ a pending-feedback entry for real batch members —
+            shadow provisionals are already pending from their dispatch)."""
             agent = live[i]
             if xs is None:  # batched: materialize matched pairs only
                 x = PredictorInput(*(float(v) for v in X[j, i]))
@@ -352,11 +393,12 @@ class IEMASRouter:
                                   float(qual[j, i]))
             else:
                 x, est = xs[j][i]
-            decisions[j] = RouteDecision(requests[j], agent.agent_id, pay,
+            decisions[j] = RouteDecision(all_reqs[j], agent.agent_id, pay,
                                          est, weight, h)
-            self._pending[requests[j].request_id] = (x, agent, requests[j],
-                                                     pay, pred_cost)
-            self.accounts["matched"] += 1
+            if j >= shadow:
+                self._pending[all_reqs[j].request_id] = (x, agent,
+                                                         all_reqs[j], pay,
+                                                         pred_cost)
 
         for h, result in results.items():
             if h == SPILL_HUB:
@@ -364,20 +406,19 @@ class IEMASRouter:
             r_idx, a_idx = blocks[h]
             cc = result.costs
             if self.warm_start and a_idx and \
-                    "slot_prices" in result.solver_stats:
+                    "agent_prices" in result.solver_stats:
                 with self._phase("price_book"):
                     version, ids = self.agent_set_version.fingerprint(
                         live[i].agent_id for i in a_idx)
                     self.price_book.store(
                         h, version, ids,
-                        result.solver_stats["slot_prices"],
-                        result.solver_stats["slot_agent"])
+                        [live[i].capacity for i in a_idx],
+                        result.solver_stats["agent_prices"])
             for local_j, j in enumerate(r_idx):
                 li = result.assignment[local_j]
                 if li < 0:
-                    decisions[j] = RouteDecision(requests[j], None, 0.0, None,
+                    decisions[j] = RouteDecision(all_reqs[j], None, 0.0, None,
                                                  0.0, h)
-                    self.accounts["unmatched"] += 1
                     continue
                 _record_match(j, a_idx[li], result.payments[local_j],
                               result.weights[local_j, li], cc[local_j, li], h)
@@ -396,8 +437,126 @@ class IEMASRouter:
                               spill_result.weights[local_j, li],
                               spill_result.costs[local_j, li],
                               hub_of_agent.get(i, -1))
-                self.accounts["unmatched"] -= 1
-                self.accounts["spill_rescued"] += 1
+                if j >= shadow:
+                    self.accounts["spill_rescued"] += 1
+        return self._finish_window(prov, decisions, shadow)
+
+    def _finish_window(self, prov, decisions, shadow) -> list[RouteDecision]:
+        """Provisional confirmation + the exactly-once-per-window tally.
+
+        The first ``shadow`` decisions are the re-equilibrated provisionals:
+        each is compared against its dispatched agent (confirm/disavow
+        counters only — they were tallied as matched when provisionally
+        routed, and their execution is not moved).  The remaining decisions
+        are this batch's requests, each counted exactly once as matched or
+        unmatched — spill rescues land directly in matched, so a rescued
+        request never transits the unmatched tally.
+        """
+        for d0, d1 in zip(prov, decisions[:shadow]):
+            if d1 is not None and d1.agent_id == d0.agent_id:
+                self.accounts["incremental_confirmed"] += 1
+            else:
+                self.accounts["incremental_rerouted"] += 1
+        out = decisions[shadow:]
+        matched = sum(1 for d in out if d is not None
+                      and d.agent_id is not None)
+        self.accounts["matched"] += matched
+        self.accounts["unmatched"] += len(out) - matched
+        return out
+
+    def route_incremental(self, requests: list[Request], telemetry: dict,
+                          free_slots: dict | None = None
+                          ) -> list[RouteDecision]:
+        """Mid-window arrivals bid directly into the standing duals.
+
+        Each request is routed greedily at posted prices: against every
+        live agent of its hub, agent i's next provisional unit is offered
+        at the standing dual ``asks[i][k]`` (k = units already provisionally
+        taken from i this window, so repeated arrivals walk up the agent's
+        ascending price vector exactly like auction bids would); the
+        request takes the agent maximizing ``w_ij − ask`` when that profit
+        is positive, paying predicted cost + the posted ask.  The route is
+        PROVISIONAL: the next :meth:`route_batch` re-equilibrates the
+        window's market with the provisionals as shadow participants and
+        confirms or disavows each one.
+
+        Requests that cannot be routed provisionally — warm starts
+        disabled, no fresh duals for their hub, no free unit left at a
+        posted price, or no positive profit — come back with ``agent_id
+        None`` and are NOT tallied as unmatched: they are deferred to the
+        next batch auction, which owns their accounting.
+        """
+        if not requests:
+            return []
+        misses = [RouteDecision(r, None, 0.0, None, 0.0, -1)
+                  for r in requests]
+        live = [a for a in self.agents if a.agent_id not in self.quarantined]
+        if not live or not self.warm_start:
+            return misses
+        with self._phase("phase1_predict"):
+            lat, cst, qual, values, X, xs = self._phase1(requests, live,
+                                                         telemetry)
+        w = np.asarray(values, dtype=np.float64) - np.asarray(
+            cst, dtype=np.float64)
+        w = np.where(w > 0, w, 0.0)
+        live_pos = {a.agent_id: i for i, a in enumerate(live)}
+        hub_agents: dict[int, list[int]] = {}
+        for h, hub in enumerate(self.hubs):
+            for gi in hub.agent_indices:
+                aid = self.agents[gi].agent_id
+                if aid in live_pos:
+                    hub_agents.setdefault(h, []).append(live_pos[aid])
+        asks_of: dict[int, dict | None] = {}
+        decisions: list[RouteDecision] = []
+        for j, r in enumerate(requests):
+            h = route_to_hub(r.domain, self.hubs,
+                             [a.domains for a in self.agents])
+            a_idx = sorted(hub_agents.get(h, []))
+            if h not in asks_of:
+                asks_of[h] = None
+                if a_idx:
+                    with self._phase("price_book"):
+                        version, ids = self.agent_set_version.fingerprint(
+                            live[i].agent_id for i in a_idx)
+                        asks_of[h] = self.price_book.posted_asks(
+                            h, version, ids,
+                            [live[i].capacity for i in a_idx])
+            asks = asks_of[h]
+            if asks is None:
+                decisions.append(misses[j])
+                continue
+            best = None          # (profit, live index, posted ask)
+            for i in a_idx:      # ascending i: ties keep the lowest index
+                aid = live[i].agent_id
+                k = self._prov_units.get(aid, 0)
+                free = (free_slots or {}).get(aid, live[i].capacity) - k
+                prev = asks.get(aid)
+                if free <= 0 or prev is None or k >= len(prev):
+                    continue
+                profit = float(w[j, i]) - float(prev[k])
+                if profit > 0.0 and (best is None or profit > best[0]):
+                    best = (profit, i, float(prev[k]))
+            if best is None:
+                decisions.append(misses[j])
+                continue
+            _, i, ask = best
+            agent = live[i]
+            if xs is None:
+                x = PredictorInput(*(float(v) for v in X[j, i]))
+                est = QoSEstimate(float(lat[j, i]), float(cst[j, i]),
+                                  float(qual[j, i]))
+            else:
+                x, est = xs[j][i]
+            pay = float(cst[j, i]) + ask
+            d = RouteDecision(r, agent.agent_id, pay, est, float(w[j, i]), h)
+            decisions.append(d)
+            self._pending[r.request_id] = (x, agent, r, pay,
+                                           float(cst[j, i]))
+            self._provisional[r.request_id] = d
+            self._prov_units[agent.agent_id] = \
+                self._prov_units.get(agent.agent_id, 0) + 1
+            self.accounts["matched"] += 1
+            self.accounts["incremental_routed"] += 1
         return decisions
 
     # ---------------- Phase 4: feedback ----------------
@@ -405,6 +564,15 @@ class IEMASRouter:
         """Phase 4: predictor/ledger updates + market accounting (or the
         fault path: quarantine, no payment) for one completed request."""
         entry = self._pending.pop(request_id, None)
+        # a provisional that completed before the next batch auction needs no
+        # re-equilibration: retire it and release its provisional unit
+        prov = self._provisional.pop(request_id, None)
+        if prov is not None and prov.agent_id is not None:
+            k = self._prov_units.get(prov.agent_id, 0) - 1
+            if k > 0:
+                self._prov_units[prov.agent_id] = k
+            else:
+                self._prov_units.pop(prov.agent_id, None)
         if entry is None:
             return
         x, agent, req, payment, pred_cost = entry

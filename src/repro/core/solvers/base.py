@@ -53,7 +53,7 @@ class SolverBackend(Protocol):
 
     Implementations are stateless singletons: all per-solve state lives in
     the returned :class:`AuctionResult` (warm-start duals round-trip through
-    ``solver_stats["slot_prices"]`` and the caller's price book).
+    ``solver_stats["agent_prices"]`` and the caller's price book).
     """
 
     name: str

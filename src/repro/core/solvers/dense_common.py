@@ -1,12 +1,27 @@
 """Shared machinery of the dense ε-scaling auction backends.
 
-The NumPy, jax and Pallas backends all solve the same slot-level market
-(agents expanded into unit slots, requests bidding under ε-complementary
-slackness) and return the same dual state; this module holds the pieces
-they share — the slot expansion, the ε schedules and warm-start round
-budgets, the :class:`DenseAuctionResult` dual-state record, the batched
-Clarke-pivot payment solver, and the helpers that package a dense solve
-into the registry-level :class:`~repro.core.solvers.base.AuctionResult`.
+The NumPy, jax and Pallas backends all solve the same capacitated column
+market (one column per agent holding a counter of ``min(b_i, n)`` unit
+prices, requests bidding under ε-complementary slackness) and return the
+same dual state; this module holds the pieces they share — the per-agent
+column layout, the ε schedules and warm-start round budgets, the
+:class:`DenseAuctionResult` dual-state record, the batched Clarke-pivot
+payment solver, and the helpers that package a dense solve into the
+registry-level :class:`~repro.core.solvers.base.AuctionResult`.
+
+Column market vs slot expansion
+-------------------------------
+Earlier revisions expanded every agent into ``min(b_i, n)`` explicit unit
+slots, paying O(n·K) per bidding round with ``K = Σ min(b_i, n)``.  The
+column market keeps one column per agent: a request's ask against agent i
+is the agent's CHEAPEST unassigned-or-displaceable unit (the segment-min of
+its unit-price vector), and a winning bid fills exactly one unit of the
+counter.  Because all of an agent's slots carry identical weights, every
+request in a slot-level round targets the same (cheapest) slot of its
+favourite agent — so the column round is decision-identical to the
+slot-expanded round while scanning O(n·m + K) instead of O(n·K).  The
+retained slot-expanded solver (``dense_np.solve_dense_auction_slots``) is
+the parity oracle for this equivalence.
 """
 from __future__ import annotations
 
@@ -26,34 +41,70 @@ WARM_ROUNDS_FLOOR = 2_000
 
 
 class DenseAuctionResult:
-    """Allocation + dual state of one dense-auction solve."""
+    """Allocation + dual state of one dense-auction solve.
 
-    __slots__ = ("assignment", "welfare", "slot_prices", "slot_agent",
+    ``agent_prices[i]`` is agent i's ascending unit-price vector (length
+    ``unit_counts[i] = min(b_i, n)``): the duals of its capacity units,
+    cheapest first.  The flat agent-major concatenation (``flat_prices``)
+    is the warm-start wire format — units of one agent are interchangeable,
+    so the ascending order is canonical and safe to reseed from.
+    """
+
+    __slots__ = ("assignment", "welfare", "agent_prices", "unit_counts",
                  "profits", "eps", "phases", "rounds", "gap_bound",
                  "warm_started", "fallback")
 
-    def __init__(self, assignment, welfare, slot_prices, slot_agent, profits,
-                 eps, phases, rounds, gap_bound, warm_started=False,
+    def __init__(self, assignment, welfare, agent_prices, unit_counts,
+                 profits, eps, phases, rounds, gap_bound, warm_started=False,
                  fallback=False):
         self.assignment = assignment        # request j -> agent index or -1
         self.welfare = welfare              # sum of matched w_ij
-        self.slot_prices = slot_prices      # dual price per unit slot
-        self.slot_agent = slot_agent        # slot -> agent index
+        self.agent_prices = agent_prices    # per-agent ascending unit duals
+        self.unit_counts = unit_counts      # agent i -> min(b_i, n) units
         self.profits = profits              # per-request profit pi_j
         self.eps = eps                      # final epsilon
         self.phases = phases
         self.rounds = rounds                # total Jacobi bidding rounds
         self.gap_bound = gap_bound          # certified welfare gap (2*n*eps)
-        self.warm_started = warm_started    # seeded from prior slot prices
+        self.warm_started = warm_started    # seeded from prior unit prices
         self.fallback = fallback            # warm attempt tripped -> re-ran cold
 
+    @property
+    def flat_prices(self) -> np.ndarray:
+        """Agent-major flat concatenation of the per-agent price vectors."""
+        if not len(self.agent_prices):
+            return np.zeros(0)
+        return np.concatenate([np.asarray(p, dtype=np.float64).ravel()
+                               for p in self.agent_prices])
 
-def expand_slots(caps, n: int) -> np.ndarray:
-    """Agent capacities -> the slot -> agent map (min(b_i, n) unit slots)."""
+
+def column_counts(caps, n: int) -> np.ndarray:
+    """Agent capacities -> per-agent unit counts (min(b_i, n) each)."""
     caps = np.asarray([int(c) for c in caps], dtype=np.int64)
     if (caps < 0).any():
         raise ValueError("negative capacity")
-    return np.repeat(np.arange(len(caps)), np.minimum(caps, n))
+    return np.minimum(caps, n)
+
+
+def expand_slots(caps, n: int) -> np.ndarray:
+    """Agent capacities -> the slot -> agent map (min(b_i, n) unit slots).
+
+    Only the retained slot-expanded parity oracle uses this; the production
+    backends operate on :func:`column_counts` directly.
+    """
+    return np.repeat(np.arange(len(column_counts(caps, n))),
+                     column_counts(caps, n))
+
+
+def split_agent_prices(flat, counts) -> list:
+    """Flat agent-major price vector -> per-agent ascending price arrays."""
+    flat = np.asarray(flat, dtype=np.float64)
+    out, pos = [], 0
+    for c in counts:
+        c = int(c)
+        out.append(np.sort(flat[pos:pos + c]))
+        pos += c
+    return out
 
 
 def warm_round_budget(n: int, K: int, max_rounds: int) -> int:
@@ -67,7 +118,7 @@ def warm_eps0(p0, wmax: float, eps_final: float,
 
     The fine schedule (ε₀ = wmax/θ³, skipping the coarse scaling phases)
     only pays off when the seeded prices actually carry equilibrium signal
-    worth protecting.  A seed that is ~zero everywhere (e.g. duals of slots
+    worth protecting.  A seed that is ~zero everywhere (e.g. duals of units
     that never sold, or a spill market drawn mostly from idle donors) is
     indistinguishable from cold prices — running the fine schedule over it
     replaces a few coarse phases with long bidding wars and *costs* rounds.
@@ -82,13 +133,25 @@ def warm_eps0(p0, wmax: float, eps_final: float,
 
 def check_start_prices(start_prices, K: int, *, block: int | None = None
                        ) -> np.ndarray:
-    """Validate + clip a warm-start seed against this market's slot layout."""
-    p0 = np.clip(np.asarray(start_prices, dtype=np.float64), 0.0, None)
-    if p0.shape != (K,):
-        where = f"start_prices for block {block}: " if block is not None \
-            else "start_prices "
+    """Validate a warm-start seed against this market's column layout.
+
+    A seed of the wrong length means the caller is replaying duals from a
+    DIFFERENT market (an agent's capacity changed, or the agent set moved
+    under it) — silently clipping or padding such a seed re-anchors prices
+    to the wrong units and costs correctness-adjacent rounds, so layout
+    mismatches raise instead.  Negative entries are equally a layout bug
+    (duals are non-negative by construction) and also raise.
+    """
+    p0 = np.asarray(start_prices, dtype=np.float64)
+    where = f"start_prices for block {block}: " if block is not None \
+        else "start_prices "
+    if p0.shape != (int(K),):
         raise ValueError(f"{where}shape {p0.shape} does not match the "
-                         f"slot layout ({K},) for this (caps, n)")
+                         f"column layout ({K},) for this (caps, n)")
+    if (p0 < 0.0).any():
+        raise ValueError(f"{where}contains negative prices; unit duals are "
+                         "non-negative, a negative seed means the layout "
+                         "is stale")
     return p0
 
 
@@ -100,23 +163,38 @@ def jax_eps_final(wmax: float, dtype) -> float:
     return max(1e-5 * max(wmax, 1.0), 64.0 * ulp)
 
 
-def materialize_staged(w_np, slot_agent, prices, slot_of, rounds, eps_final,
-                       *, warm_started=False, fallback=False
-                       ) -> DenseAuctionResult:
-    """Host-side DenseAuctionResult from one staged solve's final state."""
-    n = w_np.shape[0]
-    slot_of = np.asarray(slot_of)
-    prices_np = np.asarray(prices, dtype=np.float64)
-    rows = np.arange(n)
-    assignment = np.where(slot_of >= 0, slot_agent[np.maximum(slot_of, 0)], -1)
-    welfare = float(np.where(slot_of >= 0,
-                             w_np[rows, np.maximum(assignment, 0)], 0.0).sum())
-    profits = np.where(
-        slot_of >= 0,
-        np.maximum(w_np, 0.0)[rows, np.maximum(assignment, 0)]
-        - prices_np[np.maximum(slot_of, 0)], 0.0)
+def empty_result(n: int, counts) -> DenseAuctionResult:
+    """The trivial result for a degenerate market (no requests/units/edges)."""
+    counts = np.asarray(counts, dtype=np.int64)
     return DenseAuctionResult(
-        [int(a) for a in assignment], welfare, prices_np, slot_agent, profits,
+        [-1] * n, 0.0, [np.zeros(int(c)) for c in counts], counts,
+        np.zeros(n), 0.0, 0, 0, 0.0)
+
+
+def materialize_staged(w_np, counts, unit_price, agent_of, unit_of, rounds,
+                       eps_final, *, warm_started=False, fallback=False
+                       ) -> DenseAuctionResult:
+    """Host-side DenseAuctionResult from one staged column solve's state.
+
+    ``unit_price`` is the (m, cmax) unit-price grid (garbage beyond each
+    agent's count), ``agent_of``/``unit_of`` the per-request assignment.
+    """
+    n = w_np.shape[0]
+    counts = np.asarray(counts, dtype=np.int64)
+    agent_of = np.asarray(agent_of)
+    unit_of = np.asarray(unit_of)
+    grid = np.asarray(unit_price, dtype=np.float64)
+    rows = np.arange(n)
+    assigned = agent_of >= 0
+    ai = np.maximum(agent_of, 0)
+    welfare = float(np.where(assigned, w_np[rows, ai], 0.0).sum())
+    profits = np.where(
+        assigned,
+        np.maximum(w_np, 0.0)[rows, ai] - grid[ai, np.maximum(unit_of, 0)],
+        0.0)
+    agent_prices = [np.sort(grid[i, :int(c)]) for i, c in enumerate(counts)]
+    return DenseAuctionResult(
+        [int(a) for a in agent_of], welfare, agent_prices, counts, profits,
         float(eps_final), -1, int(rounds), 2.0 * n * float(eps_final),
         warm_started=warm_started, fallback=fallback)
 
@@ -126,7 +204,7 @@ def dense_stats(solver: str, res: DenseAuctionResult) -> dict:
     return {"solver": solver, "payment_mode": "dual-batched",
             "phases": res.phases, "rounds": res.rounds,
             "eps": res.eps, "gap_bound": res.gap_bound,
-            "slot_prices": res.slot_prices, "slot_agent": res.slot_agent,
+            "agent_prices": res.agent_prices, "unit_counts": res.unit_counts,
             "warm_started": res.warm_started, "warm_fallback": res.fallback}
 
 

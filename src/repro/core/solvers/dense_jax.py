@@ -1,6 +1,11 @@
-"""jax.jit-staged dense auction: identical algorithm to the NumPy reference,
-bidding rounds inside `lax.while_loop` so the whole solve is one XLA program.
+"""jax.jit-staged dense column auction: identical algorithm to the NumPy
+reference, bidding rounds inside `lax.while_loop` so the whole solve is one
+XLA program.
 
+The market state lives on an (m × cmax) unit-price grid — one capacitated
+column per agent, ``counts[i] = min(b_i, n)`` live units each — instead of
+the old K = Σ counts flat slot vector, so a bidding round scans O(n·m)
+agent-level profits plus an O(m·cmax) segment-min for the per-agent asks.
 The forward bidding round is pluggable (``bid_round=``): the default is the
 pure-jnp `repro.kernels.ref.auction_bid_ref` (the Pallas kernel's oracle,
 so there is exactly one jnp transcription of the round), and the ``pallas``
@@ -11,13 +16,13 @@ budgets, the vmapped shape-bucket batch path) is shared through this module.
 Hub sharding
 ------------
 `solve_dense_auction_jax_batch` solves many independent hub blocks of
-uneven (n_h, K_h) shape as ONE traced program per shape bucket: blocks are
-padded to power-of-two (n, K) buckets with zero-weight rows/columns and the
-bucket is solved by `jax.vmap` of the staged solver.  Zero padding is
-behavior-neutral — a padded request's best profit is ≤ 0 so it parks on its
-first bid, and a padded slot carries price 0 and weight 0 so it neither
-attracts bids (bids require strictly positive profit) nor goes stale in
-reverse rounds (stale needs price > 0).
+uneven (n_h, m_h, cmax_h) shape as ONE traced program per shape bucket:
+blocks are padded to power-of-two buckets with zero-weight rows and
+zero-count agent columns and the bucket is solved by `jax.vmap` of the
+staged solver.  Padding is behavior-neutral — a padded request's best
+profit is ≤ 0 so it parks on its first bid, and a padded agent carries
+count 0, so its ask is +big (it neither attracts bids nor has valid units
+that could go stale in reverse rounds).
 """
 from __future__ import annotations
 
@@ -25,11 +30,12 @@ import numpy as np
 
 from repro.core.solvers.base import AuctionResult
 from repro.core.solvers.dense_common import (DenseAuctionResult, THETA,
-                                             check_start_prices, expand_slots,
+                                             check_start_prices,
+                                             column_counts, empty_result,
                                              jax_eps_final,
                                              materialize_staged, package_dense,
                                              warm_eps0, warm_round_budget)
-from repro.core.solvers.dense_np import solve_dense_auction
+from repro.core.solvers.dense_np import _price_grid, solve_dense_auction
 from repro.core.buckets import pow2_bucket
 
 __all__ = ["solve_dense_auction_jax", "solve_dense_auction_jax_batch",
@@ -39,7 +45,7 @@ _JAX_CACHE: dict = {}
 
 
 def _build_jax_solver(max_rounds: int, bid_round=None):
-    import jax  # noqa: F401  (kept for parity with the jit/vmap wrappers)
+    import jax
     import jax.numpy as jnp
     from jax import lax
 
@@ -49,151 +55,191 @@ def _build_jax_solver(max_rounds: int, bid_round=None):
         # bit-parity tests can never drift apart
         from repro.kernels.ref import auction_bid_ref as bid_round
 
-    def solve(B, p0, eps0, eps_final, theta):
-        n, K = B.shape
+    def solve(W, counts, p0, eps0, eps_final, theta):
+        n, m = W.shape
+        cmax = p0.shape[1]
         rows = jnp.arange(n)
+        arange_m = jnp.arange(m, dtype=jnp.int32)
         tol = eps_final / 8.0
+        big = jnp.asarray(jnp.finfo(W.dtype).max / 4, W.dtype)
+        uiota = lax.broadcasted_iota(jnp.int32, (m, cmax), 1)
+        valid = uiota < counts[:, None]
 
-        def cs_state(prices, owner, slot_of, parked, eps):
-            """(unpark-violators, evict-violators, any-stale) predicates."""
-            v1 = (B - prices[None, :]).max(axis=1)
-            assigned = slot_of >= 0
-            prof = jnp.where(assigned,
-                             B[rows, jnp.maximum(slot_of, 0)]
-                             - prices[jnp.maximum(slot_of, 0)], 0.0)
+        def asks(unit_price):
+            """Cheapest / second-cheapest unit price per agent (+big where
+            the agent has fewer than one/two units), and the cheapest
+            unit's index — the unit a winning bid fills."""
+            priced = jnp.where(valid, unit_price, big)
+            ask = priced.min(axis=1)
+            ku = priced.argmin(axis=1).astype(jnp.int32)
+            ask2 = jnp.where(uiota == ku[:, None], big, priced).min(axis=1)
+            return ask, ask2, ku
+
+        def cs_state(unit_price, unit_owner, agent_of, unit_of, parked, eps):
+            """(unpark-violators, evict-violators, stale-unit grid)."""
+            ask, _, _ = asks(unit_price)
+            v1 = (W - ask[None, :]).max(axis=1)
+            assigned = agent_of >= 0
+            ai = jnp.maximum(agent_of, 0)
+            ui = jnp.maximum(unit_of, 0)
+            prof = jnp.where(assigned, W[rows, ai] - unit_price[ai, ui], 0.0)
             unpark = parked & (v1 > eps + tol)
             viol = assigned & (prof < jnp.maximum(v1, 0.0) - eps - tol)
-            stale = (owner < 0) & (prices > 0.0)
+            stale = (unit_owner < 0) & (unit_price > 0.0) & valid
             return unpark, viol, stale
 
-        def evict(prices, owner, slot_of, parked, eps):
+        def evict(unit_price, unit_owner, agent_of, unit_of, parked, eps):
             # prices are KEPT: with unchanged prices the eviction pass is
             # idempotent, so a single sweep suffices (no cascade loop)
-            unpark, viol, _ = cs_state(prices, owner, slot_of, parked, eps)
+            unpark, viol, _ = cs_state(
+                unit_price, unit_owner, agent_of, unit_of, parked, eps)
             parked = parked & ~unpark
-            owner = owner.at[jnp.where(viol, slot_of, K)].set(
-                -1, mode="drop")
-            slot_of = jnp.where(viol, -1, slot_of)
-            return owner, slot_of, parked
+            unit_owner = unit_owner.at[
+                jnp.where(viol, agent_of, m),
+                jnp.maximum(unit_of, 0)].set(-1, mode="drop")
+            agent_of = jnp.where(viol, -1, agent_of)
+            unit_of = jnp.where(viol, -1, unit_of)
+            return unit_owner, agent_of, unit_of, parked
 
-        def bid_until_settled(prices, owner, slot_of, parked, eps, rounds):
+        def bid_until_settled(unit_price, unit_owner, agent_of, unit_of,
+                              parked, eps, rounds):
             def bid_cond(st):
-                _prices, _owner, slot_of, parked, r = st
-                return ((slot_of < 0) & ~parked).any() & (r < max_rounds)
+                _up, _uo, agent_of, _un, parked, r = st
+                return ((agent_of < 0) & ~parked).any() & (r < max_rounds)
 
             def bid_body(st):
-                prices, owner, slot_of, parked, r = st
-                active = (slot_of < 0) & ~parked
-                best, winner, wants = bid_round(B, prices, active, eps)
+                unit_price, unit_owner, agent_of, unit_of, parked, r = st
+                active = (agent_of < 0) & ~parked
+                ask, ask2, ku = asks(unit_price)
+                best, winner, wants = bid_round(W, ask, ask2, active, eps)
                 parked = parked | (active & ~wants)
                 won = winner < n
-                new_owner = jnp.where(won, winner, owner)
-                # displaced: my slot is now owned by someone else
-                displaced = (slot_of >= 0) & (
-                    new_owner[jnp.maximum(slot_of, 0)] != rows)
-                slot_of = jnp.where(displaced, -1, slot_of)
-                slot_won = jnp.full((n,), -1, jnp.int32).at[
-                    jnp.where(won, winner, n)].set(
-                        jnp.arange(K, dtype=jnp.int32), mode="drop")
-                slot_of = jnp.where(slot_won >= 0, slot_won, slot_of)
-                prices = jnp.where(won, best, prices)
-                return prices, new_owner, slot_of, parked, r + 1
+                # displaced: the won unit's old owner loses it (owners never
+                # bid, so a displaced request is never also a winner)
+                old = unit_owner[arange_m, ku]
+                disp = jnp.where(won & (old >= 0), old, n)
+                agent_of = agent_of.at[disp].set(-1, mode="drop")
+                unit_of = unit_of.at[disp].set(-1, mode="drop")
+                wix = jnp.where(won, winner, n)
+                agent_of = agent_of.at[wix].set(arange_m, mode="drop")
+                unit_of = unit_of.at[wix].set(ku, mode="drop")
+                unit_owner = unit_owner.at[
+                    jnp.where(won, arange_m, m), ku].set(winner, mode="drop")
+                unit_price = unit_price.at[
+                    jnp.where(won, arange_m, m), ku].set(best, mode="drop")
+                return unit_price, unit_owner, agent_of, unit_of, parked, r + 1
 
             return lax.while_loop(
-                bid_cond, bid_body, (prices, owner, slot_of, parked, rounds))
+                bid_cond, bid_body,
+                (unit_price, unit_owner, agent_of, unit_of, parked, rounds))
 
-        def reverse_until_clean(prices, owner, slot_of, parked, eps, rounds):
-            big = jnp.asarray(jnp.finfo(B.dtype).max / 4, B.dtype)
+        def reverse_until_clean(unit_price, unit_owner, agent_of, unit_of,
+                                parked, eps, rounds):
+            niota = lax.broadcasted_iota(jnp.int32, (m, n), 1)
 
             def rev_cond(st):
-                prices, owner, _slot_of, _parked, r = st
-                return ((owner < 0) & (prices > 0.0)).any() & (r < max_rounds)
+                unit_price, unit_owner, *_rest, r = st
+                stale = (unit_owner < 0) & (unit_price > 0.0) & valid
+                return stale.any() & (r < max_rounds)
 
             def rev_body(st):
-                prices, owner, slot_of, parked, r = st
-                stale = (owner < 0) & (prices > 0.0)
-                assigned = slot_of >= 0
+                unit_price, unit_owner, agent_of, unit_of, parked, r = st
+                stale = (unit_owner < 0) & (unit_price > 0.0) & valid
+                has_stale = stale.any(axis=1)
+                assigned = agent_of >= 0
+                ai = jnp.maximum(agent_of, 0)
+                ui = jnp.maximum(unit_of, 0)
                 pi = jnp.where(assigned,
-                               B[rows, jnp.maximum(slot_of, 0)]
-                               - prices[jnp.maximum(slot_of, 0)], 0.0)
-                V = jnp.where(stale[None, :], B - pi[:, None], -big)
-                b1 = V.max(axis=0)
-                j1 = V.argmax(axis=0).astype(jnp.int32)
-                V2 = V.at[j1, jnp.arange(K)].set(-big)
-                b2 = V2.max(axis=0)
-                weak = stale & (b1 <= eps)
-                prices = jnp.where(weak, 0.0, prices)
-                strong = stale & ~weak
+                               W[rows, ai] - unit_price[ai, ui], 0.0)
+                # per-agent best/second-best support over requests (only
+                # agents with a stale unit participate this round)
+                V = jnp.where(has_stale[:, None], W.T - pi[None, :], -big)
+                b1 = V.max(axis=1)
+                j1 = V.argmax(axis=1).astype(jnp.int32)
+                b2 = jnp.where(niota == j1[:, None], -big, V).max(axis=1)
+                weak = has_stale & (b1 <= eps)
+                # a weak agent's stale units all re-anchor to 0 this round
+                unit_price = jnp.where(weak[:, None] & stale, 0.0, unit_price)
+                strong = has_stale & ~weak
                 newp = jnp.maximum(b2 - eps, 0.0)
-                off = jnp.where(strong, B[j1, jnp.arange(K)] - newp, -big)
-                # request-side conflicts: best offer wins, ties to lowest slot
-                bestoff = jnp.full((n,), -big, B.dtype).at[
+                # the agent's LOWEST-index stale unit takes the grab
+                us = jnp.argmax(stale, axis=1).astype(jnp.int32)
+                off = jnp.where(strong, W[j1, arange_m] - newp, -big)
+                # request-side conflicts: best offer wins, ties to lowest
+                # agent index
+                bestoff = jnp.full((n,), -big, W.dtype).at[
                     jnp.where(strong, j1, n)].max(off, mode="drop")
                 at_best = strong & (off == bestoff[jnp.minimum(j1, n - 1)])
-                take = jnp.full((n,), K, jnp.int32).at[
-                    jnp.where(at_best, j1, n)].min(
-                        jnp.arange(K, dtype=jnp.int32), mode="drop")
-                sel = strong & (take[jnp.minimum(j1, n - 1)]
-                                == jnp.arange(K))
-                grab = jnp.full((n,), -1, jnp.int32).at[
-                    jnp.where(sel, j1, n)].set(
-                        jnp.arange(K, dtype=jnp.int32), mode="drop")
-                grabbed = grab >= 0
-                old = jnp.where(grabbed & (slot_of >= 0), slot_of, K)
-                owner = owner.at[old].set(-1, mode="drop")
-                owner = owner.at[jnp.where(sel, jnp.arange(K), K)].set(
-                    jnp.where(sel, j1, -1), mode="drop")
-                prices = jnp.where(sel, newp, prices)
-                slot_of = jnp.where(grabbed, grab, slot_of)
-                parked = parked & ~grabbed
-                return prices, owner, slot_of, parked, r + 1
+                take = jnp.full((n,), m, jnp.int32).at[
+                    jnp.where(at_best, j1, n)].min(arange_m, mode="drop")
+                sel = strong & (take[jnp.minimum(j1, n - 1)] == arange_m)
+                # free the grabbed request's old unit (its price is kept —
+                # the freed unit goes stale and re-anchors next round)
+                old_a = agent_of[j1]
+                old_u = jnp.maximum(unit_of[j1], 0)
+                free = sel & (old_a >= 0)
+                unit_owner = unit_owner.at[
+                    jnp.where(free, old_a, m), old_u].set(-1, mode="drop")
+                srow = jnp.where(sel, arange_m, m)
+                unit_price = unit_price.at[srow, us].set(newp, mode="drop")
+                unit_owner = unit_owner.at[srow, us].set(j1, mode="drop")
+                grab = jnp.where(sel, j1, n)
+                agent_of = agent_of.at[grab].set(arange_m, mode="drop")
+                unit_of = unit_of.at[grab].set(us, mode="drop")
+                parked = parked.at[grab].set(False, mode="drop")
+                return unit_price, unit_owner, agent_of, unit_of, parked, r + 1
 
             return lax.while_loop(
-                rev_cond, rev_body, (prices, owner, slot_of, parked, rounds))
+                rev_cond, rev_body,
+                (unit_price, unit_owner, agent_of, unit_of, parked, rounds))
 
-        def settle(prices, owner, slot_of, parked, eps, rounds):
+        def settle(unit_price, unit_owner, agent_of, unit_of, parked, eps,
+                   rounds):
             """Alternate forward bidding and reverse rounds at this ε."""
             def alt_cond(st):
-                prices, owner, slot_of, parked, r = st
+                unit_price, unit_owner, agent_of, unit_of, parked, r = st
                 unpark, viol, stale = cs_state(
-                    prices, owner, slot_of, parked, eps)
-                active = (slot_of < 0) & ~parked
+                    unit_price, unit_owner, agent_of, unit_of, parked, eps)
+                active = (agent_of < 0) & ~parked
                 return (unpark.any() | viol.any() | stale.any()
                         | active.any()) & (r < max_rounds)
 
             def alt_body(st):
-                prices, owner, slot_of, parked, r = st
-                owner, slot_of, parked = evict(
-                    prices, owner, slot_of, parked, eps)
-                prices, owner, slot_of, parked, r = bid_until_settled(
-                    prices, owner, slot_of, parked, eps, r)
+                unit_price, unit_owner, agent_of, unit_of, parked, r = st
+                unit_owner, agent_of, unit_of, parked = evict(
+                    unit_price, unit_owner, agent_of, unit_of, parked, eps)
+                (unit_price, unit_owner, agent_of, unit_of, parked,
+                 r) = bid_until_settled(
+                    unit_price, unit_owner, agent_of, unit_of, parked, eps, r)
                 return reverse_until_clean(
-                    prices, owner, slot_of, parked, eps, r)
+                    unit_price, unit_owner, agent_of, unit_of, parked, eps, r)
 
             return lax.while_loop(
-                alt_cond, alt_body, (prices, owner, slot_of, parked, rounds))
+                alt_cond, alt_body,
+                (unit_price, unit_owner, agent_of, unit_of, parked, rounds))
 
         def phase(carry):
-            prices, owner, slot_of, parked, eps, rounds = carry
-            prices, owner, slot_of, parked, rounds = settle(
-                prices, owner, slot_of, parked, eps, rounds)
+            unit_price, unit_owner, agent_of, unit_of, parked, eps, r = carry
+            unit_price, unit_owner, agent_of, unit_of, parked, r = settle(
+                unit_price, unit_owner, agent_of, unit_of, parked, eps, r)
             eps = jnp.maximum(eps / theta, eps_final)
-            return prices, owner, slot_of, parked, eps, rounds
+            return unit_price, unit_owner, agent_of, unit_of, parked, eps, r
 
         def phase_cond(carry):
-            _p, _o, _s, _pk, eps, rounds = carry
+            *_state, eps, rounds = carry
             return (eps > eps_final * 1.0000000001) & (rounds < max_rounds)
 
-        init = (jnp.asarray(p0, B.dtype),
-                jnp.full((K,), -1, jnp.int32),
+        init = (jnp.asarray(p0, W.dtype),
+                jnp.full((m, cmax), -1, jnp.int32),
+                jnp.full((n,), -1, jnp.int32),
                 jnp.full((n,), -1, jnp.int32),
                 jnp.zeros((n,), bool),
-                jnp.asarray(eps0, B.dtype), jnp.asarray(0, jnp.int32))
+                jnp.asarray(eps0, W.dtype), jnp.asarray(0, jnp.int32))
         # one final settle at eps_final after the loop drives eps down
         carry = lax.while_loop(phase_cond, phase, init)
-        prices, owner, slot_of, parked, rounds = settle(
-            *carry[:4], jnp.asarray(eps_final, B.dtype), carry[5])
-        return prices, owner, slot_of, rounds
+        unit_price, unit_owner, agent_of, unit_of, parked, rounds = settle(
+            *carry[:5], jnp.asarray(eps_final, W.dtype), carry[6])
+        return unit_price, agent_of, unit_of, rounds
 
     return solve
 
@@ -201,12 +247,13 @@ def _build_jax_solver(max_rounds: int, bid_round=None):
 def _get_jax_solver(max_rounds: int, batched: bool, bid_round=None):
     """jit (and, for hub batches, vmap) wrappers around the staged solve.
 
-    The vmapped variant maps over every argument — (H, n, K) weight blocks
-    with per-hub (p0, ε₀, ε_final, θ) vectors — so hubs padded to one shape
-    bucket share a single traced program; `lax.while_loop`'s batching rule
-    freezes already-converged hubs while the stragglers keep bidding.
-    ``bid_round`` swaps the forward-bidding implementation (keyed into the
-    trace cache), which is how the Pallas backend rides this exact solver.
+    The vmapped variant maps over every argument — (H, n, m) weight blocks
+    with per-hub (counts, p0-grid, ε₀, ε_final, θ) vectors — so hubs padded
+    to one shape bucket share a single traced program; `lax.while_loop`'s
+    batching rule freezes already-converged hubs while the stragglers keep
+    bidding.  ``bid_round`` swaps the forward-bidding implementation (keyed
+    into the trace cache), which is how the Pallas backend rides this exact
+    solver.
     """
     import jax
 
@@ -229,55 +276,63 @@ def solve_dense_auction_jax(w, caps, *, eps_final: float | None = None,
     Runs in the input dtype (float32 under default JAX config), so the
     certified gap is wider than the NumPy/float64 path; the NumPy solver is
     the reference, this one is the accelerator-resident building block.
-    ``start_prices`` seeds the duals exactly like the NumPy solver's warm
-    path (skipped coarse phase, cold re-solve on round-budget exhaustion).
-    ``bid_round`` swaps the staged forward-bidding round (Pallas backend);
-    ``pad_shape=(n_pad, K_pad)`` zero-pads the slot market into a shape
-    bucket before staging (behavior-neutral, see the module docstring) so
-    wobbling market sizes reuse a handful of traced programs.
+    ``start_prices`` (flat agent-major, length K = Σ min(b_i, n)) seeds the
+    unit-price grid exactly like the NumPy solver's warm path (skipped
+    coarse phase, cold re-solve on round-budget exhaustion).  ``bid_round``
+    swaps the staged forward-bidding round (Pallas backend);
+    ``pad_shape=(n_pad, m_pad, cmax_pad)`` zero-pads the column market into
+    a shape bucket before staging (behavior-neutral, see the module
+    docstring) so wobbling market sizes reuse a handful of traced programs.
     """
     import jax.numpy as jnp
 
     w_np = np.asarray(w, dtype=np.float64)
     n, m = w_np.shape
-    slot_agent = expand_slots(caps, n)
-    K = len(slot_agent)
-    if n == 0 or K == 0 or float(w_np.max(initial=0.0)) <= 0.0:
-        return DenseAuctionResult([-1] * n, 0.0, np.zeros(K), slot_agent,
-                                  np.zeros(n), 0.0, 0, 0, 0.0)
-    B_np = np.maximum(w_np, 0.0)[:, slot_agent]
-    wmax = float(w_np.max())
+    counts = column_counts(caps, n)
+    K = int(counts.sum())
+    if n == 0 or K == 0:
+        return empty_result(n, counts)
+    W_np = np.maximum(w_np, 0.0)
+    # ε anchors on the largest weight an agent WITH units can sell at (see
+    # the NumPy solver: zero-capacity columns never trade)
+    wmax = float(W_np[:, counts > 0].max(initial=0.0))
+    if wmax <= 0.0:
+        return empty_result(n, counts)
+    cmax = int(counts.max())
     warm = start_prices is not None
     if warm:
         p0_np = check_start_prices(start_prices, K)
-    n_pad, K_pad = pad_shape or (n, K)
-    if (n_pad, K_pad) != (n, K):
-        B_np = np.pad(B_np, ((0, n_pad - n), (0, K_pad - K)))
-    B = jnp.asarray(B_np.astype(np.float32) if B_np.dtype != np.float32
-                    else B_np)
+    n_pad, m_pad, c_pad = pad_shape or (n, m, cmax)
+    if (n_pad, m_pad) != (n, m):
+        W_np = np.pad(W_np, ((0, n_pad - n), (0, m_pad - m)))
+    counts_pad = np.zeros(m_pad, np.int32)
+    counts_pad[:m] = counts
+    W = jnp.asarray(W_np.astype(np.float32) if W_np.dtype != np.float32
+                    else W_np)
     if eps_final is None:
-        eps_final = jax_eps_final(wmax, B.dtype)
+        eps_final = jax_eps_final(wmax, W.dtype)
     cold_eps0 = max(wmax / theta, eps_final)
     solver = _get_jax_solver(max_rounds, batched=False, bid_round=bid_round)
 
     if warm:
-        p0 = np.zeros(K_pad, np.float64)
-        p0[:K] = p0_np
+        grid0 = np.zeros((m_pad, c_pad), np.float64)
+        grid0[:m, :cmax] = _price_grid(p0_np, counts, cmax)
         eps0 = min(warm_eps0(p0_np, wmax, eps_final, theta), cold_eps0)
-        budget = warm_round_budget(n_pad, K_pad, max_rounds)
+        budget = warm_round_budget(n_pad, m_pad * c_pad, max_rounds)
         warm_solver = _get_jax_solver(budget, batched=False,
                                       bid_round=bid_round)
-        prices, owner, slot_of, rounds = warm_solver(
-            B, jnp.asarray(p0.astype(B.dtype)), float(eps0),
-            float(eps_final), float(theta))
+        unit_price, agent_of, unit_of, rounds = warm_solver(
+            W, jnp.asarray(counts_pad), jnp.asarray(grid0.astype(W.dtype)),
+            float(eps0), float(eps_final), float(theta))
         if int(rounds) < budget:
             return materialize_staged(
-                w_np, slot_agent, np.asarray(prices)[:K],
-                np.asarray(slot_of)[:n], rounds, eps_final, warm_started=True)
+                w_np, counts, np.asarray(unit_price)[:m, :cmax],
+                np.asarray(agent_of)[:n], np.asarray(unit_of)[:n],
+                rounds, eps_final, warm_started=True)
         # warm attempt tripped its budget -> cold re-solve below
-    prices, owner, slot_of, rounds = solver(
-        B, jnp.zeros((K_pad,), B.dtype), float(cold_eps0), float(eps_final),
-        float(theta))
+    unit_price, agent_of, unit_of, rounds = solver(
+        W, jnp.asarray(counts_pad), jnp.zeros((m_pad, c_pad), W.dtype),
+        float(cold_eps0), float(eps_final), float(theta))
     if int(rounds) >= max_rounds:
         # the staged while_loops stop silently at the cap; surface it the
         # same way the NumPy solver does instead of returning a bad matching
@@ -285,8 +340,9 @@ def solve_dense_auction_jax(w, caps, *, eps_final: float | None = None,
             f"dense auction ({solver_name}) failed to converge in "
             f"{max_rounds} rounds (n={n}, m={m}, eps_final={eps_final:g})")
     return materialize_staged(
-        w_np, slot_agent, np.asarray(prices)[:K], np.asarray(slot_of)[:n],
-        rounds, eps_final, warm_started=warm, fallback=warm)
+        w_np, counts, np.asarray(unit_price)[:m, :cmax],
+        np.asarray(agent_of)[:n], np.asarray(unit_of)[:n], rounds, eps_final,
+        warm_started=warm, fallback=warm)
 
 
 def solve_dense_auction_jax_batch(ws, caps_list, *,
@@ -300,10 +356,10 @@ def solve_dense_auction_jax_batch(ws, caps_list, *,
 
     ``ws[h]`` is hub h's dense (n_h, m_h) weight block and ``caps_list[h]``
     its per-agent capacities.  Blocks are zero-padded to power-of-two
-    (n, K) shape buckets (padding is behavior-neutral — see the module
-    docstring) and every bucket is solved by ONE `jax.vmap`-of-`jit` call,
-    so K hubs of uneven size cost one trace + one device dispatch per
-    distinct bucket instead of K dispatches.  ``start_prices_list[h]``
+    (n, m, cmax) shape buckets (padding is behavior-neutral — see the
+    module docstring) and every bucket is solved by ONE `jax.vmap`-of-`jit`
+    call, so H hubs of uneven size cost one trace + one device dispatch per
+    distinct bucket instead of H dispatches.  ``start_prices_list[h]``
     optionally warm-starts hub h (None entries cold-start); any block whose
     staged solve hits the round cap is transparently re-solved by the
     float64 NumPy reference solver (``result.fallback``).  ``bid_round``
@@ -314,68 +370,75 @@ def solve_dense_auction_jax_batch(ws, caps_list, *,
     H = len(ws)
     sp_list = start_prices_list or [None] * H
     results: list[DenseAuctionResult | None] = [None] * H
-    prep = []                      # (h, w_np, slot_agent, B, p0, eps0, eps_f)
+    prep = []          # (h, w_np, counts, W, grid0, eps0, eps_f, warm)
     for h, (w, caps) in enumerate(zip(ws, caps_list)):
         w_np = np.asarray(w, dtype=np.float64)
         n = w_np.shape[0]
-        slot_agent = expand_slots(caps, n)
-        K = len(slot_agent)
-        if n == 0 or K == 0 or float(w_np.max(initial=0.0)) <= 0.0:
-            results[h] = DenseAuctionResult(
-                [-1] * n, 0.0, np.zeros(K), slot_agent, np.zeros(n),
-                0.0, 0, 0, 0.0)
+        counts = column_counts(caps, n)
+        K = int(counts.sum())
+        W = np.maximum(w_np, 0.0).astype(np.float32)
+        wmax = 0.0 if (n == 0 or K == 0) \
+            else float(W[:, counts > 0].max(initial=0.0))
+        if n == 0 or K == 0 or wmax <= 0.0:
+            results[h] = empty_result(n, counts)
             continue
-        B = np.maximum(w_np, 0.0)[:, slot_agent].astype(np.float32)
-        wmax = float(B.max())
+        cmax = int(counts.max())
         eps_f = eps_final if eps_final is not None \
-            else jax_eps_final(wmax, B.dtype)
+            else jax_eps_final(wmax, W.dtype)
         sp = sp_list[h]
         if sp is not None:
-            p0 = check_start_prices(sp, K, block=h).astype(np.float32)
+            p0 = check_start_prices(sp, K, block=h)
+            grid0 = _price_grid(p0, counts, cmax).astype(np.float32)
             eps0 = min(warm_eps0(p0, wmax, eps_f, theta),
                        max(wmax / theta, eps_f))
             warm = True
         else:
-            p0 = np.zeros(K, np.float32)
+            grid0 = np.zeros((len(counts), cmax), np.float32)
             eps0 = max(wmax / theta, eps_f)
             warm = False
-        prep.append((h, w_np, slot_agent, B, p0, eps0, eps_f, warm))
+        prep.append((h, w_np, counts, W, grid0, eps0, eps_f, warm))
 
     # group by (shape bucket, warm?) so uneven hubs share one traced solve;
     # warm and cold hubs never share a group — warm groups run under the
     # warm round budget (a bad seed must not drag the group to the global
     # cap) and that budget must not apply to cold solves
-    groups: dict[tuple[int, int, bool], list] = {}
+    groups: dict[tuple[int, int, int, bool], list] = {}
     for item in prep:
-        _, w_np, slot_agent, B, *_, warm = item
-        bucket = (pow2_bucket(B.shape[0]), pow2_bucket(B.shape[1]), warm)
+        _, _w, counts, W, grid0, *_rest, warm = item
+        bucket = (pow2_bucket(W.shape[0]), pow2_bucket(W.shape[1]),
+                  pow2_bucket(grid0.shape[1]), warm)
         groups.setdefault(bucket, []).append(item)
 
-    for (bn, bK, warm_group), members in groups.items():
+    for (bn, bm, bc, warm_group), members in groups.items():
         G = len(members)
         cap = max_rounds
         if warm_group:
-            cap = warm_round_budget(bn, bK, max_rounds)
+            cap = warm_round_budget(bn, bm * bc, max_rounds)
         vsolver = _get_jax_solver(cap, batched=True, bid_round=bid_round)
-        Bs = np.zeros((G, bn, bK), np.float32)
-        p0s = np.zeros((G, bK), np.float32)
+        Ws = np.zeros((G, bn, bm), np.float32)
+        cnts = np.zeros((G, bm), np.int32)
+        grids = np.zeros((G, bm, bc), np.float32)
         eps0s = np.zeros(G, np.float32)
         eps_fs = np.zeros(G, np.float32)
-        for g, (_h, _w, _sa, B, p0, eps0, eps_f, _warm) in enumerate(members):
-            Bs[g, :B.shape[0], :B.shape[1]] = B
-            p0s[g, :len(p0)] = p0
+        for g, (_h, _w, counts, W, grid0, eps0, eps_f, _warm) in \
+                enumerate(members):
+            Ws[g, :W.shape[0], :W.shape[1]] = W
+            cnts[g, :len(counts)] = counts
+            grids[g, :grid0.shape[0], :grid0.shape[1]] = grid0
             eps0s[g] = eps0
             eps_fs[g] = eps_f
         thetas = np.full(G, theta, np.float32)
-        prices, owner, slot_of, rounds = vsolver(
-            jnp.asarray(Bs), jnp.asarray(p0s), jnp.asarray(eps0s),
-            jnp.asarray(eps_fs), jnp.asarray(thetas))
-        prices = np.asarray(prices)
-        slot_of = np.asarray(slot_of)
+        unit_price, agent_of, unit_of, rounds = vsolver(
+            jnp.asarray(Ws), jnp.asarray(cnts), jnp.asarray(grids),
+            jnp.asarray(eps0s), jnp.asarray(eps_fs), jnp.asarray(thetas))
+        unit_price = np.asarray(unit_price)
+        agent_of = np.asarray(agent_of)
+        unit_of = np.asarray(unit_of)
         rounds = np.asarray(rounds)
-        for g, (h, w_np, slot_agent, B, p0, eps0, eps_f, warm) in \
+        for g, (h, w_np, counts, W, grid0, eps0, eps_f, warm) in \
                 enumerate(members):
-            n, K = B.shape
+            n, m = W.shape
+            cmax = grid0.shape[1]
             if int(rounds[g]) >= cap:
                 # capped mid-solve: the float64 reference re-solves this hub
                 results[h] = solve_dense_auction(w_np, caps_list[h])
@@ -383,8 +446,8 @@ def solve_dense_auction_jax_batch(ws, caps_list, *,
                 results[h].fallback = True
                 continue
             results[h] = materialize_staged(
-                w_np, slot_agent, prices[g, :K], slot_of[g, :n], rounds[g],
-                eps_f, warm_started=warm)
+                w_np, counts, unit_price[g, :m, :cmax], agent_of[g, :n],
+                unit_of[g, :n], rounds[g], eps_f, warm_started=warm)
     return results
 
 

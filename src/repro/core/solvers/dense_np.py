@@ -6,22 +6,40 @@ dense (n_requests x n_agents) weight matrix is solved by Bertsekas' auction
 algorithm with ε-scaling, fully vectorized in NumPy (one Jacobi bidding
 round = a handful of array ops).
 
-Formulation
------------
-Each agent i with capacity b_i is expanded into min(b_i, n) identical unit
-slots; requests bid for slots.  A request may also stay unmatched (outside
-option with profit 0).  Within a phase the algorithm maintains ε-CS: every
-assigned request's profit is within ε of its best available option
-(including the outside option), and parked (voluntarily unmatched) requests
-have no option with profit > ε.
+Formulation: the capacitated column market
+------------------------------------------
+Each agent i is ONE column holding a counter of ``min(b_i, n)`` unit
+prices; a request's ask against agent i is the agent's cheapest unit (the
+segment-min of its price vector) and a winning bid fills exactly one unit.
+A request may also stay unmatched (outside option with profit 0).  Within a
+phase the algorithm maintains ε-CS: every assigned request's profit is
+within ε of its best available option (including the outside option), and
+parked (voluntarily unmatched) requests have no option with profit > ε.
+
+This is decision-equivalent to the classical per-unit slot expansion (every
+agent split into ``min(b_i, n)`` identical slots): all slots of one agent
+carry the same weight column, so every bidder in a slot-level round targets
+its favourite agent's cheapest slot, and the runner-up value v2 only ever
+sees other agents' cheapest slots plus the favourite agent's SECOND-cheapest
+unit.  The column round therefore scans O(n·m + K) per round instead of the
+slot market's O(n·K), with ``K = Σ min(b_i, n)`` — a ~K/m cut in the slack
+regime (caps ≫ batch).  ``solve_dense_auction_slots`` retains the
+slot-expanded solver as the parity oracle; the two agree on assignments and
+welfare (always within the certified 2·n·ε bound; bit-equal on every
+instance that is not degenerate).  Exact trajectory parity is impossible
+only when two unit prices of one agent differ below the ULP of a bidder's
+weight: the slot market compares prices THROUGH the rounded profit
+``w − p`` (a tie, broken per bidder toward the lower slot index) while the
+column market's segment-min compares prices directly — a sub-ULP
+perturbation of the dual trajectory that the ε-CS certificate absorbs.
 
 Between scaling phases, assignments AND prices are kept; only requests whose
 ε-CS is violated at the tighter ε are evicted and re-bid.  Forward bidding
 never lowers a price — lowering a contested price replays the bidding war in
 ε-sized steps, which is exactly the pathology scaling exists to avoid.
-Instead, the asymmetric-assignment condition (free slots must carry price 0,
+Instead, the asymmetric-assignment condition (free units must carry price 0,
 the outside option playing Bertsekas–Castañón's λ = 0) is maintained by
-REVERSE auction rounds after each forward settle: a free slot whose price is
+REVERSE auction rounds after each forward settle: a free unit whose price is
 still positive lowers it to the second-best support level β₂ − ε and grabs
 the best-supporting request (exactly preserving ε-CS for everyone else), or
 drops to 0 when no request supports even that.  Forward and reverse rounds
@@ -32,22 +50,25 @@ below any payment/valuation tolerance used in the system.
 Warm starts (cross-round price reuse)
 -------------------------------------
 The serving loop re-auctions statistically similar request sets every few
-hundred milliseconds, so the previous round's final slot prices are already
-near the new round's equilibrium.  ``start_prices=`` seeds the solve from
-them.  Soundness: Bertsekas' auction terminates with ε-CS satisfied from
-*any* non-negative initial price vector — the certificate (2·n·ε_final)
-depends only on the final ε, never on where prices started.  What warm
-prices buy is fewer bidding rounds: the ε-scaling schedule can skip its
-coarse phases (warm solves start at ε₀ = wmax/θ³ instead of wmax/θ) and
-most requests' first bid sticks.  What they can cost is extra rounds when
-the guess is bad — overpriced free slots re-anchor to their support level
-in one reverse step, but underpriced contested slots replay the bidding war
-in ε-sized increments; the solve therefore runs the warm attempt under a
-bounded round budget and transparently falls back to a cold solve when it
-trips (``result.fallback``).  Warm starts are *unsound*
-to reuse across a changed slot layout — caller contract is: same agent set,
-same per-agent slot ordering (``SlotPriceBook`` in `repro.core.hub` keys
-stored prices by hub id + elastic agent-set version to enforce this).
+hundred milliseconds, so the previous round's final unit prices are already
+near the new round's equilibrium.  ``start_prices=`` (the flat agent-major
+concatenation of per-agent ascending price vectors — ``res.flat_prices``)
+seeds the solve from them.  Soundness: Bertsekas' auction terminates with
+ε-CS satisfied from *any* non-negative initial price vector — the
+certificate (2·n·ε_final) depends only on the final ε, never on where
+prices started.  What warm prices buy is fewer bidding rounds: the
+ε-scaling schedule can skip its coarse phases (warm solves start at
+ε₀ = wmax/θ³ instead of wmax/θ) and most requests' first bid sticks.  What
+they can cost is extra rounds when the guess is bad — overpriced free units
+re-anchor to their support level in one reverse step, but underpriced
+contested units replay the bidding war in ε-sized increments; the solve
+therefore runs the warm attempt under a bounded round budget and
+transparently falls back to a cold solve when it trips
+(``result.fallback``).  Warm starts are *unsound* to reuse across a changed
+column layout — caller contract is: same agent set, same per-agent unit
+counts (``SlotPriceBook`` in `repro.core.hub` keys stored prices by hub id
++ elastic agent-set version + per-agent capacities to enforce this;
+``check_start_prices`` raises on any layout mismatch).
 
 Worked example
 --------------
@@ -70,7 +91,7 @@ True
 Re-solving the same market seeded from the final prices converges without
 re-running the coarse ε phases and certifies the same welfare:
 
->>> warm = solve_dense_auction(w, [1, 1], start_prices=res.slot_prices)
+>>> warm = solve_dense_auction(w, [1, 1], start_prices=res.flat_prices)
 >>> (warm.assignment, warm.welfare) == (res.assignment, res.welfare)
 True
 >>> warm.warm_started and not warm.fallback
@@ -83,11 +104,26 @@ import numpy as np
 from repro.core.solvers.base import (AuctionResult, sequential_solve_batch)
 from repro.core.solvers.dense_common import (DenseAuctionResult,
                                              EPS_FINAL_REL, THETA,
-                                             check_start_prices, expand_slots,
+                                             check_start_prices, column_counts,
+                                             empty_result, expand_slots,
                                              package_dense, warm_eps0,
                                              warm_round_budget)
 
-__all__ = ["solve_dense_auction", "DenseNumpyBackend"]
+__all__ = ["solve_dense_auction", "solve_dense_auction_slots",
+           "DenseNumpyBackend"]
+
+
+def _price_grid(flat, counts, cmax: int) -> np.ndarray:
+    """Flat agent-major seed -> (m, cmax) unit-price grid (agent i's seed
+    segment fills its units 0..count_i-1 in the given order)."""
+    m = len(counts)
+    grid = np.zeros((m, cmax), dtype=np.float64)
+    pos = 0
+    for i, c in enumerate(counts):
+        c = int(c)
+        grid[i, :c] = flat[pos:pos + c]
+        pos += c
+    return grid
 
 
 def solve_dense_auction(w: np.ndarray, caps, *, eps_final: float | None = None,
@@ -95,60 +131,313 @@ def solve_dense_auction(w: np.ndarray, caps, *, eps_final: float | None = None,
                         max_rounds: int = 500_000,
                         start_prices: np.ndarray | None = None,
                         start_eps: float | None = None) -> DenseAuctionResult:
-    """ε-scaling auction over dense weights. w[j, i] <= 0 means "no edge".
+    """ε-scaling column auction over dense weights. w[j, i] <= 0 = "no edge".
 
-    ``start_prices`` (length = total unit slots, i.e. ``sum(min(b_i, n))``)
+    ``start_prices`` (flat agent-major, length ``K = sum(min(b_i, n))``)
     seeds the duals from a previous solve of a similar market; the warm
-    attempt starts its ε schedule at ``start_eps`` (default wmax/θ²) and is
-    round-budgeted — on budget exhaustion the solve silently restarts cold
-    (``result.fallback`` reports it).  The optimality certificate is
-    identical either way: 2·n·ε_final regardless of starting prices.
+    attempt starts its ε schedule at ``start_eps`` (default wmax/θ³ when
+    the seed is informative) and is round-budgeted — on budget exhaustion
+    the solve silently restarts cold (``result.fallback`` reports it).  The
+    optimality certificate is identical either way: 2·n·ε_final regardless
+    of starting prices.
     """
     w = np.asarray(w, dtype=np.float64)
     n, m = w.shape
-    slot_agent = expand_slots(caps, n)
-    K = len(slot_agent)
-    empty = DenseAuctionResult([-1] * n, 0.0, np.zeros(K), slot_agent,
-                               np.zeros(n), 0.0, 0, 0, 0.0)
+    counts = column_counts(caps, n)
+    K = int(counts.sum())
     if n == 0 or K == 0:
-        return empty
-    B = np.maximum(w, 0.0)[:, slot_agent]          # (n, K) slot-level weights
-    wmax = float(B.max(initial=0.0))
+        return empty_result(n, counts)
+    W = np.maximum(w, 0.0)
+    # the ε schedule anchors on the largest weight an agent WITH units can
+    # sell at — zero-capacity agents' columns never trade (their ask is +inf)
+    # and must not widen ε₀ (the slot market never even materializes them)
+    wmax = float(W[:, counts > 0].max(initial=0.0))
     if wmax <= 0.0:
-        return empty
+        return empty_result(n, counts)
+    cmax = int(counts.max())
     if eps_final is None:
         eps_final = EPS_FINAL_REL * max(wmax, 1.0)
     cold_eps0 = max(wmax / theta, eps_final)
     if start_prices is None:
-        return _solve_dense_numpy(w, B, slot_agent, np.zeros(K), cold_eps0,
-                                  eps_final, theta, max_rounds)
+        return _solve_dense_columns(w, W, counts, np.zeros((m, cmax)),
+                                    cold_eps0, eps_final, theta, max_rounds)
     p0 = check_start_prices(start_prices, K)
     eps0 = start_eps if start_eps is not None \
         else warm_eps0(p0, wmax, eps_final, theta)
     eps0 = min(max(eps0, eps_final), cold_eps0)
     budget = warm_round_budget(n, K, max_rounds)
     try:
-        res = _solve_dense_numpy(w, B, slot_agent, p0, eps0, eps_final,
-                                 theta, budget)
+        res = _solve_dense_columns(w, W, counts, _price_grid(p0, counts, cmax),
+                                   eps0, eps_final, theta, budget)
         res.warm_started = True
         return res
     except RuntimeError:
-        res = _solve_dense_numpy(w, B, slot_agent, np.zeros(K), cold_eps0,
-                                 eps_final, theta, max_rounds)
+        res = _solve_dense_columns(w, W, counts, np.zeros((m, cmax)),
+                                   cold_eps0, eps_final, theta, max_rounds)
         res.warm_started = True
         res.fallback = True
         return res
 
 
-def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
-                       max_rounds) -> DenseAuctionResult:
-    """The forward/reverse ε-scaling loop from a given (prices, ε₀) state."""
-    n, K = B.shape
-    m = w.shape[1]
+def _solve_dense_columns(w, W, counts, grid0, eps0, eps_final, theta,
+                         max_rounds) -> DenseAuctionResult:
+    """The forward/reverse ε-scaling loop over the capacitated column
+    market, from a given (unit-price grid, ε₀) state."""
+    n, m = W.shape
+    cmax = grid0.shape[1]
+    K = int(counts.sum())
+    valid = np.arange(cmax)[None, :] < counts[:, None]      # (m, cmax)
     eps = eps0
     # absolute slack for ε-CS tests: comparisons happen at price magnitude
     # ~wmax, where a relative-only slack can fall below one ulp and turn an
     # exactly-ε equilibrium gap into a perpetual evict/re-bid cycle.
+    tol = eps_final / 8.0
+
+    unit_price = grid0.copy()
+    unit_owner = np.full((m, cmax), -1, dtype=np.int64)
+    agent_of = np.full(n, -1, dtype=np.int64)       # request -> agent
+    unit_of = np.full(n, -1, dtype=np.int64)        # request -> unit index
+    parked = np.zeros(n, dtype=bool)
+    rows = np.arange(n)
+    phases = 0
+    rounds = [0]
+
+    def _asks():
+        """Per-agent cheapest unit (price, index) and second-cheapest price.
+
+        The ask is the segment-min over the agent's unit counter — the only
+        price a bidder can ever face; ask2 (duplicates included, +inf for
+        single-unit agents) is what v2 needs when the favourite agent's
+        runner-up option is its own second unit."""
+        priced = np.where(valid, unit_price, np.inf)
+        ask = priced.min(axis=1)
+        ku = priced.argmin(axis=1)
+        ask2 = np.partition(priced, 1, axis=1)[:, 1] if cmax >= 2 \
+            else np.full(m, np.inf)
+        return ask, ask2, ku
+
+    def _evict(eps) -> bool:
+        """Unpark/evict requests whose ε-CS fails at current prices; returns
+        whether anything is left to bid.
+
+        Prices are kept (forward bidding never lowers them): freed units
+        retain their duals so re-bidding starts near the previous phase's
+        equilibrium; reverse rounds handle price decreases."""
+        ask, _, _ = _asks()
+        v1 = (W - ask[None, :]).max(axis=1)
+        assigned = agent_of >= 0
+        ai = np.maximum(agent_of, 0)
+        prof = np.where(assigned,
+                        W[rows, ai] - unit_price[ai, np.maximum(unit_of, 0)],
+                        0.0)
+        np.logical_and(parked, v1 <= eps + tol, out=parked)
+        # best available option includes the outside option (profit 0): a
+        # request left at profit < -ε by an earlier coarser phase must leave
+        viol = assigned & (prof < np.maximum(v1, 0.0) - eps - tol)
+        if viol.any():
+            unit_owner[agent_of[viol], unit_of[viol]] = -1
+            agent_of[viol] = -1
+            unit_of[viol] = -1
+        return bool(((agent_of < 0) & ~parked).any())
+
+    def _bid_until_settled(eps):
+        """Jacobi bidding rounds until every request is assigned or parked."""
+        while True:
+            active = np.nonzero((agent_of < 0) & ~parked)[0]
+            if len(active) == 0:
+                return
+            rounds[0] += 1
+            if rounds[0] > max_rounds:
+                raise RuntimeError(
+                    f"dense auction failed to converge in {max_rounds} rounds"
+                    f" (n={n}, m={m}, eps={eps:g})")
+            ask, ask2, ku = _asks()
+            P = W[active] - ask[None, :]                 # (A, m) profits
+            v1 = P.max(axis=1)
+            k1 = P.argmax(axis=1)
+            # runner-up option: other agents' cheapest units, plus the
+            # favourite agent's own second-cheapest unit (ask2) — exactly
+            # the slot market's v2 with the single chosen slot masked out
+            P[np.arange(len(active)), k1] = W[active, k1] - ask2[k1]
+            v2 = np.maximum(P.max(axis=1), 0.0)          # incl. outside option
+            wants = v1 > 0.0
+            parked[active[~wants]] = True                # outside option wins
+            bidders = active[wants]
+            if len(bidders) == 0:
+                continue
+            kb = k1[wants]
+            bid = ask[kb] + (v1[wants] - v2[wants]) + eps
+            # per-agent winner: highest bid, ties to the lowest request index
+            # (every bidder targets the agent's cheapest unit, so per-agent
+            # aggregation IS the slot market's per-slot aggregation)
+            best = np.full(m, -np.inf)
+            np.maximum.at(best, kb, bid)
+            winner = np.full(m, n, dtype=np.int64)
+            at_best = bid == best[kb]                    # exact float match
+            np.minimum.at(winner, kb[at_best], bidders[at_best])
+            won = np.nonzero(winner < n)[0]              # agents that sold
+            uw = ku[won]
+            # displace previous owners first (a displaced request may itself
+            # be winning a different agent this very round)
+            prev = unit_owner[won, uw]
+            live = prev[prev >= 0]
+            agent_of[live] = -1
+            unit_of[live] = -1
+            wj = winner[won]
+            unit_owner[won, uw] = wj
+            agent_of[wj] = won
+            unit_of[wj] = uw
+            unit_price[won, uw] = best[won]
+
+    def _reverse_until_clean(eps) -> None:
+        """Reverse auction rounds: every free unit with a positive (stale)
+        price lowers it to β₂ − ε — the second-best support over requests —
+        and grabs its best supporter, or drops to 0 when unsupported.
+
+        Support depends only on the agent (all its units share one weight
+        column), so all stale units of a weak agent drop to 0 together and
+        at most one stale unit per agent (the lowest-index one, matching
+        the slot market's global-index tie-break) re-prices per round.
+        Price decreases of ≥ ε (or request-profit gains of ≥ ε) bound the
+        number of rounds; ε-CS is preserved exactly (Bertsekas–Castañón)."""
+        while True:
+            stale = (unit_owner < 0) & (unit_price > 0.0) & valid
+            si = np.nonzero(stale.any(axis=1))[0]
+            if len(si) == 0:
+                return
+            rounds[0] += 1
+            if rounds[0] > max_rounds:
+                raise RuntimeError("dense auction reverse rounds exceeded "
+                                   f"{max_rounds} (n={n}, m={m})")
+            assigned = agent_of >= 0
+            ai = np.maximum(agent_of, 0)
+            pi = np.where(assigned,
+                          W[rows, ai]
+                          - unit_price[ai, np.maximum(unit_of, 0)], 0.0)
+            V = W[:, si] - pi[:, None]            # support for each agent
+            b1 = V.max(axis=0)
+            j1 = V.argmax(axis=0)
+            V[j1, np.arange(len(si))] = -np.inf
+            b2 = V.max(axis=0) if n > 1 else np.full(len(si), -np.inf)
+            weak = b1 <= eps                      # nobody worth grabbing
+            weak_agents = np.zeros(m, dtype=bool)
+            weak_agents[si[weak]] = True
+            unit_price[stale & weak_agents[:, None]] = 0.0
+            ks = si[~weak]
+            if len(ks) == 0:
+                continue
+            js = j1[~weak]
+            newp = np.maximum(b2[~weak] - eps, 0.0)
+            # request-side conflicts: accept the best offer, ties to the
+            # lowest agent index
+            off = W[js, ks] - newp
+            bestoff = np.full(n, -np.inf)
+            np.maximum.at(bestoff, js, off)
+            at_best = off == bestoff[js]
+            take = np.full(n, m, dtype=np.int64)
+            np.minimum.at(take, js[at_best], ks[at_best])
+            sel = take[js] == ks
+            ks, js, newp = ks[sel], js[sel], newp[sel]
+            us = stale[ks].argmax(axis=1)         # lowest-index stale unit
+            old_a, old_u = agent_of[js], unit_of[js]
+            live = old_a >= 0
+            # freed, keeps price (maybe stale)
+            unit_owner[old_a[live], old_u[live]] = -1
+            unit_price[ks, us] = newp
+            unit_owner[ks, us] = js
+            agent_of[js] = ks
+            unit_of[js] = us
+            parked[js] = False
+
+    while True:
+        phases += 1
+        # forward/reverse alternation at this ε until neither has work
+        for _ in range(8 * (n + K) + 8):
+            if _evict(eps):
+                _bid_until_settled(eps)
+                _reverse_until_clean(eps)
+                continue
+            if ((unit_owner < 0) & (unit_price > 0.0) & valid).any():
+                _reverse_until_clean(eps)
+                continue
+            break
+        else:
+            raise RuntimeError("dense auction forward/reverse alternation "
+                               f"failed to settle (n={n}, m={m}, eps={eps:g})")
+        if eps <= eps_final * (1.0 + 1e-12):
+            break
+        eps = max(eps / theta, eps_final)
+
+    assigned = agent_of >= 0
+    ai = np.maximum(agent_of, 0)
+    welfare = float(np.where(assigned, w[rows, ai], 0.0).sum())
+    profits = np.where(assigned,
+                       W[rows, ai] - unit_price[ai, np.maximum(unit_of, 0)],
+                       0.0)
+    agent_prices = [np.sort(unit_price[i, :int(c)])
+                    for i, c in enumerate(counts)]
+    return DenseAuctionResult(
+        [int(a) for a in agent_of], welfare, agent_prices, counts, profits,
+        eps, phases, rounds[0], 2.0 * n * eps)
+
+
+# --------------------------------------------------------------------------
+# Retained slot-expanded solver: the column market's parity oracle.
+# --------------------------------------------------------------------------
+def solve_dense_auction_slots(w: np.ndarray, caps, *,
+                              eps_final: float | None = None,
+                              theta: float = THETA,
+                              max_rounds: int = 500_000,
+                              start_prices: np.ndarray | None = None,
+                              start_eps: float | None = None
+                              ) -> DenseAuctionResult:
+    """The classical per-unit slot expansion (agents split into min(b_i, n)
+    identical slots), kept as the decision-parity oracle and the baseline
+    the benchmarks measure the column market's ~K/m round cost cut against.
+    Same result contract as :func:`solve_dense_auction` (per-agent ascending
+    price vectors); O(n·K) per round instead of O(n·m + K).
+    """
+    w = np.asarray(w, dtype=np.float64)
+    n, m = w.shape
+    counts = column_counts(caps, n)
+    slot_agent = expand_slots(caps, n)
+    K = len(slot_agent)
+    if n == 0 or K == 0:
+        return empty_result(n, counts)
+    B = np.maximum(w, 0.0)[:, slot_agent]          # (n, K) slot-level weights
+    wmax = float(B.max(initial=0.0))
+    if wmax <= 0.0:
+        return empty_result(n, counts)
+    if eps_final is None:
+        eps_final = EPS_FINAL_REL * max(wmax, 1.0)
+    cold_eps0 = max(wmax / theta, eps_final)
+    if start_prices is None:
+        return _solve_dense_slots(w, B, slot_agent, counts, np.zeros(K),
+                                  cold_eps0, eps_final, theta, max_rounds)
+    p0 = check_start_prices(start_prices, K)
+    eps0 = start_eps if start_eps is not None \
+        else warm_eps0(p0, wmax, eps_final, theta)
+    eps0 = min(max(eps0, eps_final), cold_eps0)
+    budget = warm_round_budget(n, K, max_rounds)
+    try:
+        res = _solve_dense_slots(w, B, slot_agent, counts, p0, eps0,
+                                 eps_final, theta, budget)
+        res.warm_started = True
+        return res
+    except RuntimeError:
+        res = _solve_dense_slots(w, B, slot_agent, counts, np.zeros(K),
+                                 cold_eps0, eps_final, theta, max_rounds)
+        res.warm_started = True
+        res.fallback = True
+        return res
+
+
+def _solve_dense_slots(w, B, slot_agent, counts, prices0, eps0, eps_final,
+                       theta, max_rounds) -> DenseAuctionResult:
+    """The forward/reverse ε-scaling loop over explicit unit slots."""
+    n, K = B.shape
+    m = w.shape[1]
+    eps = eps0
     tol = eps_final / 8.0
 
     prices = prices0.copy()
@@ -160,19 +449,11 @@ def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
     rounds = [0]
 
     def _evict(eps) -> bool:
-        """Unpark/evict requests whose ε-CS fails at current prices; returns
-        whether anything is left to bid.
-
-        Prices are kept (forward bidding never lowers them): freed slots
-        retain their duals so re-bidding starts near the previous phase's
-        equilibrium; reverse rounds handle price decreases."""
         v1 = (B - prices).max(axis=1)
         assigned = slot_of >= 0
         prof = np.where(assigned, B[rows, np.maximum(slot_of, 0)]
                         - prices[np.maximum(slot_of, 0)], 0.0)
         np.logical_and(parked, v1 <= eps + tol, out=parked)
-        # best available option includes the outside option (profit 0): a
-        # request left at profit < -ε by an earlier coarser phase must leave
         viol = assigned & (prof < np.maximum(v1, 0.0) - eps - tol)
         if viol.any():
             owner[slot_of[viol]] = -1
@@ -180,7 +461,6 @@ def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
         return bool(((slot_of < 0) & ~parked).any())
 
     def _bid_until_settled(eps):
-        """Jacobi bidding rounds until every request is assigned or parked."""
         while True:
             active = np.nonzero((slot_of < 0) & ~parked)[0]
             if len(active) == 0:
@@ -196,21 +476,18 @@ def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
             P[np.arange(len(active)), k1] = -np.inf
             v2 = np.maximum(P.max(axis=1), 0.0)          # incl. outside option
             wants = v1 > 0.0
-            parked[active[~wants]] = True                # outside option wins
+            parked[active[~wants]] = True
             bidders = active[wants]
             if len(bidders) == 0:
                 continue
             kb = k1[wants]
             bid = prices[kb] + (v1[wants] - v2[wants]) + eps
-            # per-slot winner: highest bid, ties to the lowest request index
             best = np.full(K, -np.inf)
             np.maximum.at(best, kb, bid)
             winner = np.full(K, n, dtype=np.int64)
-            at_best = bid == best[kb]                    # exact float match
+            at_best = bid == best[kb]
             np.minimum.at(winner, kb[at_best], bidders[at_best])
             slots_won = np.nonzero(winner < n)[0]
-            # displace previous owners first (a displaced request may itself
-            # be winning a different slot this very round)
             prev = owner[slots_won]
             slot_of[prev[prev >= 0]] = -1
             owner[slots_won] = winner[slots_won]
@@ -218,11 +495,6 @@ def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
             prices[slots_won] = best[slots_won]
 
     def _reverse_until_clean(eps) -> None:
-        """Reverse auction rounds: every free slot with a positive (stale)
-        price lowers it to β₂ − ε — the second-best support over requests —
-        and grabs its best supporter, or drops to 0 when unsupported.
-        Price decreases of ≥ ε (or request-profit gains of ≥ ε) bound the
-        number of rounds; ε-CS is preserved exactly (Bertsekas–Castañón)."""
         while True:
             stale = np.nonzero((owner < 0) & (prices > 0.0))[0]
             if len(stale) == 0:
@@ -234,20 +506,18 @@ def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
             assigned = slot_of >= 0
             pi = np.where(assigned, B[rows, np.maximum(slot_of, 0)]
                           - prices[np.maximum(slot_of, 0)], 0.0)
-            V = B[:, stale] - pi[:, None]            # support for each slot
+            V = B[:, stale] - pi[:, None]
             b1 = V.max(axis=0)
             j1 = V.argmax(axis=0)
             V[j1, np.arange(len(stale))] = -np.inf
             b2 = V.max(axis=0) if n > 1 else np.full(len(stale), -np.inf)
-            weak = b1 <= eps                         # nobody worth grabbing
+            weak = b1 <= eps
             prices[stale[weak]] = 0.0
             ks = stale[~weak]
             if len(ks) == 0:
                 continue
             js = j1[~weak]
             newp = np.maximum(b2[~weak] - eps, 0.0)
-            # request-side conflicts: accept the best offer, ties to the
-            # lowest slot index
             off = B[js, ks] - newp
             bestoff = np.full(n, -np.inf)
             np.maximum.at(bestoff, js, off)
@@ -265,7 +535,6 @@ def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
 
     while True:
         phases += 1
-        # forward/reverse alternation at this ε until neither has work
         for _ in range(8 * (n + K) + 8):
             if _evict(eps):
                 _bid_until_settled(eps)
@@ -288,8 +557,10 @@ def _solve_dense_numpy(w, B, slot_agent, prices0, eps0, eps_final, theta,
     profits = np.where(slot_of >= 0,
                        B[rows, np.maximum(slot_of, 0)]
                        - prices[np.maximum(slot_of, 0)], 0.0)
+    agent_prices = [np.sort(prices[slot_agent == i])
+                    for i in range(len(counts))]
     return DenseAuctionResult(
-        [int(a) for a in assignment], welfare, prices, slot_agent, profits,
+        [int(a) for a in assignment], welfare, agent_prices, counts, profits,
         eps, phases, rounds[0], 2.0 * n * eps)
 
 

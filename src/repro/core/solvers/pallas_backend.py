@@ -2,27 +2,29 @@
 
 Same algorithm, schedules and certificates as ``dense-jax`` — the ONLY
 difference is the forward bidding round, which runs as the
-`repro.kernels.auction_bid` Pallas kernel (per-request top-2 slot profits +
-segment-max scatter of bids into prices, tiled over the (n × K) weight
-matrix) instead of the pure-jnp transcription.  Off-TPU the kernel runs in
-interpret mode (the `repro.kernels.ops` dispatch), so the backend works —
-and is tested bit-for-bit against the jnp oracle — everywhere, while on TPU
-the bidding round compiles to a real VMEM-tiled kernel.
+`repro.kernels.auction_bid` Pallas kernel (per-request top-2 agent profits
+against the per-agent ask/ask2 quotes + segment-max scatter of bids into
+agent columns, tiled over the (n × m) weight matrix) instead of the
+pure-jnp transcription.  Off-TPU the kernel runs in interpret mode (the
+`repro.kernels.ops` dispatch), so the backend works — and is tested
+bit-for-bit against the jnp oracle — everywhere, while on TPU the bidding
+round compiles to a real VMEM-tiled kernel.
 
-Tile plan (backend-aware padding): the slot market is zero-padded before
+Tile plan (backend-aware padding): the column market is zero-padded before
 staging — the PR-3 padding argument applies unchanged (a zero-weight row
-parks on its first bid; a zero-weight price-0 column can neither attract
-bids nor go stale).  On TPU the pad target is the power-of-two (n, K)
-bucket with 128-row tiles, so the shape-specialized Pallas grid is traced
-once per bucket (trace reuse across market-size wobble) and every weight
-tile stays ≤ 128·K·4 B in VMEM.  In interpret mode (CPU) per-program
-overhead dominates and XLA:CPU column reductions fall off a cache-aliasing
-cliff when the row stride is a large power of two, so the plan instead
-pads minimally — n to one tall tile of ≤ 1024 rows per grid step, K to a
-multiple of 8 nudged off 512-multiples — which keeps the kernelized solve
-within noise of the raw ``dense-jax`` program (`benchmarks/mcmf_scaling`).
-The batch path reuses `solve_dense_auction_jax_batch`'s vmapped pow-2
-buckets verbatim with the kernel swapped in.
+parks on its first bid; a zero-count agent quotes ask = +big, so it can
+neither attract bids nor hold stale units).  On TPU the pad target is the
+power-of-two (n, m, cmax) bucket with 128-row tiles, so the
+shape-specialized Pallas grid is traced once per bucket (trace reuse
+across market-size wobble) and every weight tile stays ≤ 128·m·4 B in
+VMEM.  In interpret mode (CPU) per-program overhead dominates and XLA:CPU
+column reductions fall off a cache-aliasing cliff when the row stride is a
+large power of two, so the plan instead pads minimally — n to one tall
+tile of ≤ 1024 rows per grid step, m to a multiple of 8 nudged off
+512-multiples — which keeps the kernelized solve within noise of the raw
+``dense-jax`` program (`benchmarks/mcmf_scaling`).  The batch path reuses
+`solve_dense_auction_jax_batch`'s vmapped pow-2 buckets verbatim with the
+kernel swapped in.
 """
 from __future__ import annotations
 
@@ -52,7 +54,7 @@ def _tile_split(n: int) -> tuple[int, int]:
     return grid, max(8, -(-rows // 8) * 8)   # ... rounded up to a mult of 8
 
 
-def _bid_round_pallas(B, prices, active, eps):
+def _bid_round_pallas(W, ask, ask2, active, eps):
     """The kernelized forward-bidding round (interpret-mode off TPU).
 
     The tile height adapts to the (static) padded market: tall tiles
@@ -61,20 +63,21 @@ def _bid_round_pallas(B, prices, active, eps):
     """
     from repro.kernels.ops import _interpret, auction_bid_op
 
-    n = B.shape[0]
+    n = W.shape[0]
     bn = _tile_split(n)[1] if _interpret() else min(n, _TILE_ROWS_TPU)
-    return auction_bid_op(B, prices, active, eps, bn=bn)
+    return auction_bid_op(W, ask, ask2, active, eps, bn=bn)
 
 
-def _pad_plan(n: int, K: int, interpret: bool) -> tuple[int, int]:
-    """Padded (n, K) for one staged solve (see the module docstring)."""
+def _pad_plan(n: int, m: int, cmax: int, interpret: bool
+              ) -> tuple[int, int, int]:
+    """Padded (n, m, cmax) for one staged solve (see the module docstring)."""
     if not interpret:
-        return pow2_bucket(n), pow2_bucket(K)
+        return pow2_bucket(n), pow2_bucket(m), pow2_bucket(cmax)
     grid, bn = _tile_split(n)
-    K_pad = -(-K // 8) * 8
-    if K_pad % 512 == 0:
-        K_pad += 8          # dodge the pow-2 row-stride aliasing cliff
-    return bn * grid, K_pad
+    m_pad = -(-m // 8) * 8
+    if m_pad % 512 == 0:
+        m_pad += 8          # dodge the pow-2 row-stride aliasing cliff
+    return bn * grid, m_pad, cmax
 
 
 def solve_dense_auction_pallas(w, caps, *, max_rounds: int = 200_000,
@@ -88,16 +91,16 @@ def solve_dense_auction_pallas(w, caps, *, max_rounds: int = 200_000,
     """
     import numpy as np
 
-    from repro.core.solvers.dense_common import expand_slots
+    from repro.core.solvers.dense_common import column_counts
 
     w = np.asarray(w, dtype=np.float64)
-    n = w.shape[0]
-    caps = [int(c) for c in caps]
-    K = len(expand_slots(caps, n))
+    n, m = w.shape
+    counts = column_counts([int(c) for c in caps], n)
+    K = int(counts.sum())
     if n and K:
         from repro.kernels.ops import _interpret
 
-        pad = _pad_plan(n, K, _interpret())
+        pad = _pad_plan(n, m, int(counts.max()), _interpret())
     else:
         pad = None
     return solve_dense_auction_jax(

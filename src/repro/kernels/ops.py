@@ -20,10 +20,12 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def auction_bid_op(B, prices, active, eps, *, bn=8):
-    """One forward-bidding round: B [n, K], prices [K], active [n], eps
-    scalar -> (best [K], winner [K], wants [n]); see kernels/auction_bid."""
-    return auction_bid(B, prices, active, eps, bn=bn, interpret=_interpret())
+def auction_bid_op(W, ask, ask2, active, eps, *, bn=8):
+    """One forward-bidding round of the column market: W [n, m], ask/ask2
+    [m] (cheapest/second-cheapest unit price per agent), active [n], eps
+    scalar -> (best [m], winner [m], wants [n]); see kernels/auction_bid."""
+    return auction_bid(W, ask, ask2, active, eps, bn=bn,
+                       interpret=_interpret())
 
 
 def lcp_affinity_op(prompts, ledgers):

@@ -30,32 +30,42 @@ def lcp_ref(prompts: np.ndarray, ledgers: np.ndarray) -> np.ndarray:
 
 # ---------------- auction bidding round ----------------
 
-def auction_bid_ref(B, prices, active, eps):
-    """One Jacobi forward-bidding round, pure jnp (the kernel's oracle).
+def auction_bid_ref(W, ask, ask2, active, eps):
+    """One Jacobi forward-bidding round of the capacitated column market,
+    pure jnp (the kernel's oracle).
 
-    B: [n, K] slot-level weights; prices: [K]; active: [n] bool; eps scalar.
-    Returns (best [K], winner [K] int32, wants [n] bool) — the segment-max
-    bid per slot, the winning request per slot (ties to the lowest index,
-    n where no bid), and which active requests bid at all (top profit > 0).
+    W: [n, m] agent-level weights; ask/ask2: [m] cheapest and
+    second-cheapest unit price per agent (segment-min/-min2 over the
+    agent's capacity counter, +big where the agent has fewer units);
+    active: [n] bool; eps scalar.  Returns (best [m], winner [m] int32,
+    wants [n] bool) — the segment-max bid per agent, the winning request
+    per agent (ties to the lowest index, n where no bid), and which active
+    requests bid at all (top profit > 0).
+
+    The runner-up value v2 substitutes the favourite agent's own
+    second-cheapest unit (ask2) at the k1 column — the column market's
+    equivalent of masking out the single chosen slot in a slot-expanded
+    round.
     """
-    B = jnp.asarray(B)
-    prices = jnp.asarray(prices, B.dtype)
+    W = jnp.asarray(W)
+    ask = jnp.asarray(ask, W.dtype)
+    ask2 = jnp.asarray(ask2, W.dtype)
     active = jnp.asarray(active, bool)
-    n, K = B.shape
-    big = jnp.asarray(jnp.finfo(B.dtype).max / 4, B.dtype)
-    P = jnp.where(active[:, None], B - prices[None, :], -big)
+    n, m = W.shape
+    big = jnp.asarray(jnp.finfo(W.dtype).max / 4, W.dtype)
+    P = jnp.where(active[:, None], W - ask[None, :], -big)
     v1 = P.max(axis=1)
     k1 = P.argmax(axis=1)
-    v2 = jnp.maximum(
-        jnp.where(jnp.arange(K)[None, :] == k1[:, None], -big, P).max(axis=1),
-        0.0)
+    onehot = jnp.arange(m)[None, :] == k1[:, None]
+    alt = jnp.where(onehot & active[:, None], W - ask2[None, :], P)
+    v2 = jnp.maximum(alt.max(axis=1), 0.0)
     wants = active & (v1 > 0.0)
-    bid = prices[k1] + (v1 - v2) + eps
-    best = jnp.full((K,), -big, B.dtype).at[
-        jnp.where(wants, k1, K)].max(bid, mode="drop")
-    at_best = wants & (bid == best[jnp.minimum(k1, K - 1)])
-    winner = jnp.full((K,), n, jnp.int32).at[
-        jnp.where(at_best, k1, K)].min(
+    bid = ask[k1] + (v1 - v2) + eps
+    best = jnp.full((m,), -big, W.dtype).at[
+        jnp.where(wants, k1, m)].max(bid, mode="drop")
+    at_best = wants & (bid == best[jnp.minimum(k1, m - 1)])
+    winner = jnp.full((m,), n, jnp.int32).at[
+        jnp.where(at_best, k1, m)].min(
             jnp.arange(n, dtype=jnp.int32), mode="drop")
     return best, winner, wants
 

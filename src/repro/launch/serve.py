@@ -66,6 +66,11 @@ def main():
                     help="event mode: micro-batch size per router call")
     ap.add_argument("--batch-window", type=float, default=0.02,
                     help="event mode: batching delay in virtual seconds")
+    ap.add_argument("--incremental", action="store_true",
+                    help="event mode: newly ready work bids into the "
+                         "standing per-agent duals and dispatches "
+                         "provisionally instead of waiting out the "
+                         "batch window (needs --warm-start)")
     ap.add_argument("--engine-mode", default=None,
                     choices=["real", "analytic"],
                     help="engine backend (default: real in closed mode, "
@@ -97,6 +102,17 @@ def main():
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
+    if args.incremental:
+        from repro.core.solvers import get_solver
+        if args.sim_mode != "event":
+            ap.error("--incremental requires --sim-mode event")
+        if not (args.warm_start
+                and get_solver(args.solver).supports_warm_start):
+            ap.error("--incremental bids into the standing per-agent duals "
+                     "and would silently route nothing without them; pass "
+                     "--warm-start with a warm-capable solver "
+                     "(e.g. --solver dense)")
+
     engine_mode = args.engine_mode or (
         "analytic" if args.sim_mode == "event" else "real")
     cluster = SimCluster(n_agents=args.agents, seed=args.seed,
@@ -120,6 +136,7 @@ def main():
         sim = EventSimulator(cluster, router, iter_dialogues(spec),
                              arrivals=arrivals, batch_cap=args.batch_cap,
                              batch_window=args.batch_window,
+                             incremental=args.incremental,
                              max_inflight=args.max_inflight,
                              profiler=RoutingProfiler(), lean=True)
         metrics = sim.run()

@@ -78,6 +78,8 @@ class RoutingProfiler:
         self.phases: dict[str, float] = {}
         self.calls: dict[str, int] = {}
         self.engine_compute = 0.0   # virtual engine busy seconds
+        self.route_requests = 0     # requests seen across route_batch calls
+        self.empty_route_calls = 0  # route_batch invocations with 0 requests
 
     @contextmanager
     def phase(self, name: str):
@@ -93,6 +95,18 @@ class RoutingProfiler:
     def add_engine_compute(self, seconds: float) -> None:
         """Accumulate one dispatch's simulated engine seconds."""
         self.engine_compute += float(seconds)
+
+    def note_route_batch(self, n_requests: int) -> None:
+        """Record one router invocation's batch size (called by the router).
+
+        ``n_requests == 0`` flags a wasted invocation — the event loop is
+        expected to never fire the router without work (EventSimulator's
+        empty-round guard), so ``empty_route_calls`` staying at 0 is a
+        regression-tested invariant.
+        """
+        self.route_requests += int(n_requests)
+        if n_requests == 0:
+            self.empty_route_calls += 1
 
     def attach(self, cluster, router) -> "RoutingProfiler":
         """Hook this profiler into a cluster + router pair; returns self."""
@@ -117,6 +131,8 @@ class RoutingProfiler:
             "engine_compute_s": ec,
             "routing_wall_s": routing,
             "overhead_frac": (routing / ec) if ec > 0 else None,
+            "route_requests": self.route_requests,
+            "empty_route_calls": self.empty_route_calls,
             "phases": {
                 name: {
                     "wall_s": wall,
@@ -159,6 +175,15 @@ class EventSimulator:
     quantize : when set, ROUTE events tick on exact multiples of this
         round length and completions are delivered only at those
         boundaries — the bit-comparable ``run_workload`` lockstep regime.
+    incremental : when True, a dialogue that becomes ready (arrival or
+        next turn) is first offered to ``router.route_incremental`` — a
+        greedy posted-price bid against the standing warm-start duals —
+        and dispatched IMMEDIATELY on success instead of waiting out the
+        batch window; the next batch auction re-equilibrates the
+        provisional routes (see `repro.core.mechanism.IEMASRouter`).
+        Dialogues the posted-price pass declines fall back to the normal
+        batch path unchanged.  Requires a router exposing
+        ``route_incremental`` (and warm starts for any effect).
     max_inflight : admission-window bound on concurrently-active dialogues
         (None = unbounded, required for closed-loop parity).
     max_new_tokens : generation budget per request.
@@ -177,6 +202,7 @@ class EventSimulator:
                  arrivals: ArrivalProcess | None = None,
                  batch_cap: int = 16, batch_window: float = 0.02,
                  quantize: float | None = None,
+                 incremental: bool = False,
                  max_inflight: int | None = None,
                  max_new_tokens: int = 6,
                  profiler: RoutingProfiler | None = None,
@@ -191,6 +217,9 @@ class EventSimulator:
         self.batch_cap = int(batch_cap)
         self.batch_window = float(batch_window)
         self.quantize = quantize
+        self.incremental = bool(incremental) and \
+            hasattr(router, "route_incremental")
+        self.n_incremental = 0
         self.max_inflight = max_inflight
         self.max_new_tokens = max_new_tokens
         self.profiler = profiler
@@ -281,6 +310,7 @@ class EventSimulator:
             script, arrived_at=now, pending=script.turns[0], ready_since=now)
         self.peak_inflight = max(self.peak_inflight, len(self.states))
         self.ready.append(script.dialogue_id)
+        self._try_incremental()
 
     def _on_arrival(self, script: DialogueScript) -> None:
         self.n_arrived += 1
@@ -300,6 +330,7 @@ class EventSimulator:
             if rec.failed:
                 st.ready_since = now
                 self.ready.append(did)      # re-issue the same turn
+                self._try_incremental()
                 continue
             st.history = np.concatenate(
                 [st.history, st.pending, rec.output_tokens]).astype(np.int32)
@@ -311,6 +342,7 @@ class EventSimulator:
                 st.pending = st.script.turns[st.turn]
                 st.ready_since = now
                 self.ready.append(did)
+                self._try_incremental()
             else:
                 # dialogue finished: release its state, admit from backlog
                 self.n_completed_dialogues += 1
@@ -320,6 +352,48 @@ class EventSimulator:
                     self._admit(self.backlog.popleft())
 
     # ---------------- routing ----------------
+    def _try_incremental(self) -> None:
+        """Offer the just-readied dialogue a provisional posted-price route.
+
+        Called right after a dialogue is appended to ``ready``; on success
+        the request dispatches immediately (its batch-window wait collapses
+        to zero) and the dialogue is removed from the queue — the next
+        batch auction re-equilibrates it as a shadow participant.  On any
+        miss (stale/absent duals, no profitable unit, dead dispatch target)
+        the dialogue simply stays queued for the batch path.
+        """
+        if not self.incremental or not self.ready:
+            return
+        cluster, router = self.cluster, self.router
+        did = self.ready[-1]
+        st = self.states[did]
+        prompt = np.concatenate([st.history, st.pending])
+        req = Request(
+            request_id=f"r{self._rid}", dialogue_id=did,
+            tokens=prompt.astype(np.int32), turn=st.turn,
+            domain=st.script.domain, max_new_tokens=self.max_new_tokens,
+            meta={"difficulty": st.script.difficulty})
+        telem = cluster.telemetry.snapshot(cluster.now)
+        free = cluster.free_slots()
+        with phase_scope(self.profiler, "route_incremental"):
+            dec = router.route_incremental([req], telem, free_slots=free)[0]
+        if dec.agent_id is None:
+            return                      # deferred to the next batch auction
+        self._rid += 1
+        if cluster.execute(dec, router) is None:
+            # dead dispatch target: fault-path feedback (quarantine +
+            # pending/provisional cleanup); the dialogue stays queued
+            router.on_complete(dec.request.request_id, CompletionObs(
+                0.0, len(dec.request.tokens), 0, 0, 0.0, failed=True))
+            return
+        self.ready.pop()
+        st.busy = True
+        self.dispatch_count[did] += 1
+        self.n_dispatched += 1
+        self.n_incremental += 1
+        self._wait_sum += cluster.now - st.ready_since
+        self._wait_n += 1
+
     def _route_step(self) -> None:
         cluster, router = self.cluster, self.router
         batch = []
@@ -396,7 +470,13 @@ class EventSimulator:
                 else:
                     self._route_at = None
                     run_route = True
-            if run_route:
+            if run_route and self.ready:
+                # ready-gated: a ROUTE tick with every dialogue busy (the
+                # quantize regime fires one per round boundary regardless)
+                # must not invoke the router on an empty batch, burn a
+                # max_rounds unit, or fire on_round — empty rounds would
+                # skew the rounds/overhead accounting and the profiler's
+                # empty_route_calls invariant
                 self._rounds += 1
                 self._route_step()
                 if self.on_round is not None:
@@ -426,6 +506,7 @@ class EventSimulator:
             "unfinished_dialogues": len(self.states) + len(self.backlog),
             "truncated": self._truncated_reason is not None,
             "dispatched_requests": self.n_dispatched,
+            "incremental_dispatched": self.n_incremental,
         })
         # turns completed = completed request records (retries excluded)
         out["completed_turns"] = out.get("n", 0)

@@ -28,42 +28,52 @@ def _instance(rng, n_max=24, m_max=12):
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 10**6))
 def test_bid_kernel_bit_parity_with_oracle(seed):
-    """Interpret-mode kernel == pure-jnp oracle, bit for bit."""
+    """Interpret-mode kernel == pure-jnp oracle, bit for bit.
+
+    The column-market round quotes each AGENT's cheapest (ask) and
+    second-cheapest (ask2) unit price; some agents quote ask2 = +big
+    (single-unit agents) — the kernel must reproduce the oracle across
+    that whole quote range.
+    """
     from repro.kernels.ops import auction_bid_op
     from repro.kernels.ref import auction_bid_ref
 
     rng = np.random.default_rng(seed)
     n = int(rng.integers(1, 48))
-    K = int(rng.integers(1, 72))
-    B = np.maximum(rng.uniform(-1, 4, (n, K)), 0.0).astype(np.float32)
-    prices = rng.uniform(0, 3, K).astype(np.float32)
+    m = int(rng.integers(1, 72))
+    W = np.maximum(rng.uniform(-1, 4, (n, m)), 0.0).astype(np.float32)
+    ask = rng.uniform(0, 3, m).astype(np.float32)
+    ask2 = (ask + rng.uniform(0, 2, m)).astype(np.float32)
+    big = np.float32(np.finfo(np.float32).max / 4)
+    ask2 = np.where(rng.random(m) < 0.2, big, ask2)  # single-unit agents
     active = rng.random(n) > rng.uniform(0, 1)
     eps = np.float32(rng.uniform(1e-4, 0.5))
-    got = auction_bid_op(B, prices, active, eps)
-    want = auction_bid_ref(B, prices, active, eps)
+    got = auction_bid_op(W, ask, ask2, active, eps)
+    want = auction_bid_ref(W, ask, ask2, active, eps)
     for g, w, name in zip(got, want, ("best", "winner", "wants")):
         assert np.array_equal(np.asarray(g), np.asarray(w)), \
-            f"{name} mismatch (n={n}, K={K})"
+            f"{name} mismatch (n={n}, m={m})"
 
 
 def test_bid_kernel_parity_degenerate_inputs():
-    """Single request / single slot / nobody active / all-zero weights."""
+    """Single request / single agent / nobody active / all-zero weights."""
     from repro.kernels.ops import auction_bid_op
     from repro.kernels.ref import auction_bid_ref
 
+    big = np.float32(np.finfo(np.float32).max / 4)
     cases = [
         (np.ones((1, 1), np.float32), np.zeros(1, np.float32),
-         np.ones(1, bool)),
+         np.full(1, big, np.float32), np.ones(1, bool)),
         (np.zeros((4, 3), np.float32), np.zeros(3, np.float32),
-         np.ones(4, bool)),
+         np.zeros(3, np.float32), np.ones(4, bool)),
         (np.ones((5, 2), np.float32), np.ones(2, np.float32),
-         np.zeros(5, bool)),
+         np.ones(2, np.float32), np.zeros(5, bool)),
         (np.full((3, 7), 2.5, np.float32), np.zeros(7, np.float32),
-         np.ones(3, bool)),   # total ties
+         np.zeros(7, np.float32), np.ones(3, bool)),   # total ties
     ]
-    for B, prices, active in cases:
-        got = auction_bid_op(B, prices, active, np.float32(0.1))
-        want = auction_bid_ref(B, prices, active, np.float32(0.1))
+    for W, ask, ask2, active in cases:
+        got = auction_bid_op(W, ask, ask2, active, np.float32(0.1))
+        want = auction_bid_ref(W, ask, ask2, active, np.float32(0.1))
         for g, w in zip(got, want):
             assert np.array_equal(np.asarray(g), np.asarray(w))
 
@@ -114,11 +124,11 @@ def test_pallas_warm_start_roundtrip():
     values, costs, caps = _instance(rng, 16, 6)
     w = np.maximum(values - costs, 0.0)
     cold = solve_dense_auction_pallas(w, caps)
-    warm = solve_dense_auction_pallas(w, caps, start_prices=cold.slot_prices)
+    warm = solve_dense_auction_pallas(w, caps, start_prices=cold.flat_prices)
     assert warm.warm_started and not warm.fallback
     assert warm.welfare == pytest.approx(cold.welfare, abs=1e-4)
-    bad = np.ones(len(cold.slot_prices) + 3)
-    with pytest.raises(ValueError, match="slot layout"):
+    bad = np.ones(len(cold.flat_prices) + 3)
+    with pytest.raises(ValueError, match="column layout"):
         solve_dense_auction_pallas(w, caps, start_prices=bad)
 
 

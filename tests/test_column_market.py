@@ -1,0 +1,223 @@
+"""ISSUE-6 tentpole: the capacitated-column market.
+
+Parity contract (see ``dense_np``'s module docstring): the column solver is
+welfare-equal to the retained slot-expanded oracle within the summed
+certificates and payment-equal on the matched set — across every registered
+backend, including degenerate capacities (b_i = 0, b_i >= n) and warm
+rounds.  Plus the incremental-auction lifecycle: provisional routes issued
+against standing duals are confirmed or re-routed consistently by the next
+batch auction, with the matched/unmatched ledger closing exactly once per
+request.
+"""
+import numpy as np
+import pytest
+
+from repro.core import AgentInfo, CompletionObs, IEMASRouter, Request, TokenPrices
+from repro.core.auction import run_auction
+from repro.core.solvers import get_solver, solve_dense_auction
+from repro.core.solvers.dense_common import package_dense
+from repro.core.solvers.dense_np import solve_dense_auction_slots
+
+ATOL = 1e-6
+WARM_BACKENDS = ("dense", "dense-jax", "pallas")
+ALL_BACKENDS = ("mcmf",) + WARM_BACKENDS
+
+
+def _market(rng, n_max=20, m_max=10, degenerate=False):
+    n = int(rng.integers(1, n_max + 1))
+    m = int(rng.integers(1, m_max + 1))
+    values = rng.uniform(0, 6, (n, m)) * (rng.random((n, m)) > 0.3)
+    costs = rng.uniform(0, 3, (n, m))
+    if degenerate:
+        # exercise b_i = 0 (agent sells nothing), b_i >= n (slack regime)
+        caps = [int(c) for c in rng.choice([0, 1, 2, n, n + 5], m)]
+    else:
+        caps = rng.integers(1, 4, m).tolist()
+    return values, costs, caps
+
+
+# ----------------------------------------- column vs slot (solver level) --
+def test_column_matches_slot_oracle_welfare_and_payments():
+    """150 random markets: the column solver and the retained slot-expanded
+    oracle certify the same welfare and produce identical Clarke payments.
+
+    (Trajectory parity can only break when two unit prices of one agent
+    differ below the ULP of a bidder's weight — the ε-CS certificate
+    absorbs that; none of these instances trip it.)
+    """
+    rng = np.random.default_rng(0)
+    for trial in range(150):
+        values, costs, caps = _market(rng, degenerate=(trial % 3 == 0))
+        costs_m = np.asarray(costs, dtype=np.float64)
+        w = np.maximum(np.asarray(values) - costs_m, 0.0)
+        col = solve_dense_auction(w, caps)
+        slot = solve_dense_auction_slots(w, caps)
+        tol = ATOL + col.gap_bound + slot.gap_bound
+        assert abs(col.welfare - slot.welfare) <= tol, trial
+        assert col.gap_bound == pytest.approx(slot.gap_bound), trial
+        assert col.assignment == slot.assignment, trial
+        r_col = package_dense("dense", w, costs_m, caps, col)
+        r_slot = package_dense("dense", w, costs_m, caps, slot)
+        np.testing.assert_allclose(r_col.payments, r_slot.payments,
+                                   atol=ATOL, err_msg=f"trial {trial}")
+
+
+def test_column_result_exposes_per_agent_ascending_duals():
+    """The new result format: one ascending price vector per agent, with
+    the flat agent-major concatenation as the warm-seed wire format."""
+    rng = np.random.default_rng(1)
+    w = np.maximum(rng.uniform(-1, 4, (12, 5)), 0.0)
+    caps = [3, 1, 0, 20, 2]
+    res = solve_dense_auction(w, caps)
+    assert len(res.agent_prices) == 5
+    for i, (p, c) in enumerate(zip(res.agent_prices, res.unit_counts)):
+        assert len(p) == c == min(caps[i], 12)
+        assert (np.diff(p) >= 0).all(), i          # ascending
+        assert (p >= 0).all(), i
+    assert len(res.flat_prices) == int(np.sum(res.unit_counts))
+    np.testing.assert_array_equal(res.flat_prices,
+                                  np.concatenate(res.agent_prices))
+
+
+# ------------------------------------------- all backends vs exact oracle --
+@pytest.mark.parametrize("solver", ALL_BACKENDS)
+def test_backend_welfare_certified_vs_exact(solver):
+    """Every backend's column solve lands within its own certificate of the
+    MCMF exact optimum, degenerate capacities included."""
+    rng = np.random.default_rng(7)
+    for trial in range(8):
+        values, costs, caps = _market(rng, 16, 8, degenerate=True)
+        exact = run_auction(values, costs, caps, solver="mcmf")
+        r = run_auction(values, costs, caps, solver=solver)
+        cert = get_solver(solver).certificate(r)
+        assert r.welfare <= exact.welfare + cert + 1e-4, (solver, trial)
+        assert r.welfare >= exact.welfare - cert - 1e-4, (solver, trial)
+        # a zero-capacity agent must never win a request
+        for j, i in enumerate(r.assignment):
+            if i >= 0:
+                assert caps[i] > 0, (solver, trial)
+
+
+@pytest.mark.parametrize("solver", WARM_BACKENDS)
+def test_backend_warm_round_parity(solver):
+    """Re-solving from the previous round's per-agent duals (the price-book
+    wire format) is pure reoptimization: same certified welfare."""
+    rng = np.random.default_rng(11)
+    for trial in range(4):
+        values, costs, caps = _market(rng, 16, 8)
+        first = run_auction(values, costs, caps, solver=solver)
+        seed = np.concatenate([np.asarray(p) for p in
+                               first.solver_stats["agent_prices"]])
+        warm = run_auction(values, costs, caps, solver=solver,
+                           start_prices=seed)
+        assert warm.solver_stats["warm_started"], (solver, trial)
+        tol = 1e-4 + first.solver_stats["gap_bound"] \
+            + warm.solver_stats["gap_bound"]
+        assert abs(warm.welfare - first.welfare) <= tol, (solver, trial)
+
+
+@pytest.mark.parametrize("solver", WARM_BACKENDS)
+def test_backend_degenerate_caps_explicit(solver):
+    """b_i = 0 everywhere -> nobody matches; one slack agent -> everybody
+    matches there (the K/m-cut regime the column market exists for)."""
+    w = np.full((4, 3), 2.0)
+    costs = np.full((4, 3), 0.5)
+    r = run_auction(w, costs, [0, 0, 0], solver=solver)
+    assert r.assignment == [-1] * 4 and r.welfare == 0.0
+    r = run_auction(w, costs, [0, 50, 0], solver=solver)
+    assert r.assignment == [1] * 4
+    assert r.welfare == pytest.approx(4 * 1.5, abs=1e-3)
+
+
+# ------------------------------------------------- incremental lifecycle --
+def _agents(m=6, cap=3):
+    return [AgentInfo(f"a{i}", TokenPrices(0.001 * (1 + 0.1 * i), 0.0005,
+                                           0.002), cap,
+                      ("code",) if i % 2 == 0 else ("math",), scale=4.0 + i)
+            for i in range(m)]
+
+
+def _reqs(tag, n, dom="code"):
+    rng = np.random.default_rng(tag)
+    return [Request(f"r{tag}-{j}", f"d{tag}-{j}",
+                    rng.integers(1, 50, 20).astype(np.int32), turn=0,
+                    domain=dom) for j in range(n)]
+
+
+def test_incremental_provisionals_reconciled_by_next_batch():
+    """Provisional routes issued by route_incremental are each confirmed or
+    re-routed by the next batch auction — exactly once — and the window
+    ledger (matched + unmatched) counts every request exactly once."""
+    router = IEMASRouter(_agents(), solver="dense", n_hubs=2,
+                         warm_start=True, predictor_kw={"warm_n": 99})
+    router.route_batch(_reqs(0, 8), {})          # round 1: standing duals
+    inc = router.route_incremental(_reqs(1, 3), {})
+    routed = [d for d in inc if d.agent_id is not None]
+    assert len(routed) == 3                      # slack market: all route
+    assert router.accounts["incremental_routed"] == 3
+    assert len(router._provisional) == 3
+    # provisionals pay predicted cost + the posted ask (never below cost)
+    for d in routed:
+        assert d.payment >= d.estimate.cost - ATOL
+    out = router.route_batch(_reqs(2, 4, dom="math"), {})
+    assert len(out) == 4                         # shadows are not returned
+    acc = router.accounts
+    assert acc["incremental_confirmed"] + acc["incremental_rerouted"] == 3
+    assert not router._provisional and not router._prov_units
+    assert acc["matched"] + acc["unmatched"] == 8 + 3 + 4
+
+
+def test_incremental_misses_are_deferred_not_unmatched():
+    """Arrivals the posted-price pass cannot route (no standing duals yet /
+    warm starts off) come back agent-less and enter NO ledger column — the
+    next batch auction owns their accounting."""
+    cold = IEMASRouter(_agents(), solver="dense", n_hubs=2,
+                       warm_start=False, predictor_kw={"warm_n": 99})
+    dec = cold.route_incremental(_reqs(0, 4), {})
+    assert all(d.agent_id is None for d in dec)
+    assert cold.accounts["matched"] == cold.accounts["unmatched"] == 0
+    warm = IEMASRouter(_agents(), solver="dense", n_hubs=2,
+                       warm_start=True, predictor_kw={"warm_n": 99})
+    dec = warm.route_incremental(_reqs(0, 4), {})  # no duals stored yet
+    assert all(d.agent_id is None for d in dec)
+    assert warm.accounts["incremental_routed"] == 0
+
+
+def test_incremental_walks_up_the_ascending_price_vector():
+    """Repeated arrivals drain an agent's provisional units at ask[k] for
+    k = 0, 1, ... — never re-selling the same unit price twice — and stop
+    at the free-slot bound."""
+    agents = _agents(m=2, cap=2)
+    router = IEMASRouter(agents, solver="dense", n_hubs=1, warm_start=True,
+                         predictor_kw={"warm_n": 99})
+    router.route_batch(_reqs(0, 4), {})
+    for d in router._provisional.values():
+        raise AssertionError("batch must not leave provisionals")
+    taken = []
+    for t in range(6):                      # 6 arrivals vs 4 total units
+        d = router.route_incremental(_reqs(10 + t, 1), {})[0]
+        if d.agent_id is not None:
+            taken.append(d.agent_id)
+    assert 0 < len(taken) <= 4              # capacity-bounded
+    counts = {a: taken.count(a) for a in set(taken)}
+    assert all(c <= 2 for c in counts.values())
+    assert router._prov_units == counts
+
+
+def test_incremental_provisional_completion_releases_unit():
+    """A provisional that completes before the next batch is retired in
+    on_complete: its unit frees up and the batch sees no shadow for it."""
+    router = IEMASRouter(_agents(), solver="dense", n_hubs=2,
+                         warm_start=True, predictor_kw={"warm_n": 99})
+    router.route_batch(_reqs(0, 8), {})
+    d = router.route_incremental(_reqs(1, 1), {})[0]
+    assert d.agent_id is not None
+    router.on_complete(d.request.request_id,
+                       CompletionObs(0.1, 20, 0, 8, 0.9))
+    assert not router._provisional and not router._prov_units
+    acc_before = dict(router.accounts)
+    router.route_batch(_reqs(2, 2), {})
+    acc = router.accounts
+    # no shadow existed: confirm/reroute counters untouched by this window
+    assert acc["incremental_confirmed"] == acc_before["incremental_confirmed"]
+    assert acc["incremental_rerouted"] == acc_before["incremental_rerouted"]

@@ -94,7 +94,7 @@ def test_warm_equals_cold_on_static_market(seed):
     w = np.maximum(rng.uniform(-1, 4, (n, m)), 0.0)  # continuous -> no ties
     caps = rng.integers(1, 4, m).tolist()
     cold = solve_dense_auction(w, caps)
-    warm = solve_dense_auction(w, caps, start_prices=cold.slot_prices)
+    warm = solve_dense_auction(w, caps, start_prices=cold.flat_prices)
     assert warm.warm_started
     assert warm.assignment == cold.assignment
     assert warm.welfare == pytest.approx(cold.welfare, abs=ATOL)
@@ -113,7 +113,7 @@ def test_warm_welfare_optimal_on_perturbed_market(seed):
     caps = rng.integers(1, 4, m).tolist()
     prev = solve_dense_auction(w1, caps)
     cold = solve_dense_auction(w2, caps)
-    warm = solve_dense_auction(w2, caps, start_prices=prev.slot_prices)
+    warm = solve_dense_auction(w2, caps, start_prices=prev.flat_prices)
     assert warm.welfare == pytest.approx(cold.welfare, abs=ATOL)
 
 
@@ -126,7 +126,7 @@ def test_warm_budget_trips_to_cold_fallback():
     caps = [2] * 10
     cold = solve_dense_auction(w, caps)
     tripped = solve_dense_auction(w, caps,
-                                  start_prices=np.zeros_like(cold.slot_prices),
+                                  start_prices=np.zeros_like(cold.flat_prices),
                                   start_eps=cold.eps)
     assert tripped.warm_started and tripped.fallback
     assert tripped.welfare == pytest.approx(cold.welfare, abs=ATOL)
@@ -143,26 +143,47 @@ def test_warm_start_shape_mismatch_rejected():
 def test_price_book_remaps_layout_and_guards_membership():
     book = SlotPriceBook()
     ids = ("a", "b")
-    # agent a had 2 slots priced (1.0, 2.0); agent b one slot priced 3.0
-    book.store(0, version=1, agent_ids=ids,
-               slot_prices=np.array([1.0, 2.0, 3.0]),
-               slot_agent=np.array([0, 0, 1]))
-    # same layout -> replayed verbatim
-    np.testing.assert_array_equal(book.lookup(0, 1, ids, [2, 1]),
-                                  [1.0, 2.0, 3.0])
-    # capacity shrank for a, grew for b -> truncate / zero-pad per agent
-    np.testing.assert_array_equal(book.lookup(0, 1, ids, [1, 3]),
-                                  [1.0, 3.0, 0.0, 0.0])
+    # agent a sold 2 units at (1.0, 2.0); agent b one unit at 3.0
+    book.store(0, version=1, agent_ids=ids, caps=[2, 1],
+               agent_prices=[np.array([1.0, 2.0]), np.array([3.0])])
+    # same layout -> replayed verbatim (flat agent-major)
+    np.testing.assert_array_equal(
+        book.lookup(0, 1, ids, [2, 1], unit_counts=[2, 1]), [1.0, 2.0, 3.0])
+    # fewer/more units exposed this round (batch-size wobble at unchanged
+    # capacities): ascending truncation keeps the cheapest unit; growth
+    # zero-pads at the free-unit boundary price
+    np.testing.assert_array_equal(
+        book.lookup(0, 1, ids, [2, 1], unit_counts=[1, 3]),
+        [1.0, 3.0, 0.0, 0.0])
     # elastic version bumped -> cold start
-    assert book.lookup(0, 2, ids, [2, 1]) is None
+    assert book.lookup(0, 2, ids, [2, 1], unit_counts=[2, 1]) is None
     # live agent set changed (e.g. quarantine) -> cold start
-    assert book.lookup(0, 1, ("a",), [2]) is None
+    assert book.lookup(0, 1, ("a",), [2], unit_counts=[2]) is None
     # unknown hub -> cold start
-    assert book.lookup(5, 1, ids, [2, 1]) is None
+    assert book.lookup(5, 1, ids, [2, 1], unit_counts=[2, 1]) is None
     stats = book.stats()
     assert stats["warm_hits"] == 2 and stats["cold_starts"] == 3
     book.invalidate()
-    assert book.lookup(0, 1, ids, [2, 1]) is None
+    assert book.lookup(0, 1, ids, [2, 1], unit_counts=[2, 1]) is None
+
+
+def test_price_book_cold_starts_on_capacity_change():
+    """ISSUE-6 satellite 1 regression: a capacity change WITHOUT a
+    membership change must invalidate the stored splits — pre-fix the book
+    keyed on the agent-id tuple only and silently replayed the stale
+    per-agent price splits onto the re-laid-out unit columns."""
+    book = SlotPriceBook()
+    ids = ("a", "b")
+    book.store(0, version=1, agent_ids=ids, caps=[2, 1],
+               agent_prices=[np.array([1.0, 2.0]), np.array([3.0])])
+    # same members, same version; agent a's published capacity 2 -> 3
+    assert book.lookup(0, 1, ids, [3, 1], unit_counts=[2, 1]) is None
+    assert book.posted_asks(0, 1, ids, [3, 1]) is None
+    # matching capacities still replay
+    assert book.lookup(0, 1, ids, [2, 1], unit_counts=[2, 1]) is not None
+    asks = book.posted_asks(0, 1, ids, [2, 1])
+    np.testing.assert_array_equal(asks["a"], [1.0, 2.0])
+    np.testing.assert_array_equal(asks["b"], [3.0])
 
 
 # ------------------------------------------------------- warm spill --
@@ -300,6 +321,24 @@ def test_router_cold_starts_on_membership_change():
     assert router.price_book.stats()["warm_hits"] > after["warm_hits"]
 
 
+def test_router_cold_starts_on_capacity_change():
+    """ISSUE-6 satellite 1, router level: a published-capacity change with
+    the membership (and elastic version) unchanged must cold-start the
+    changed agent's hub instead of replaying its stale price splits."""
+    router = IEMASRouter(_agents(), solver="dense", n_hubs=2, warm_start=True,
+                         predictor_kw={"warm_n": 99})
+    for t in range(2):
+        router.route_batch(_requests(8, t), {})
+    before = dict(router.price_book.stats())
+    router.agents[0].capacity += 1     # b_i changed, same agents, same hubs
+    router.route_batch(_requests(8, 5), {})
+    after = router.price_book.stats()
+    assert after["cold_starts"] > before["cold_starts"]
+    # and the refreshed entry (keyed on the new capacity) warms again
+    router.route_batch(_requests(8, 6), {})
+    assert router.price_book.stats()["warm_hits"] > after["warm_hits"]
+
+
 def test_router_cold_starts_on_quarantine():
     """Quarantine shrinks a hub's live set without a version bump: the exact
     agent-id tuple in the price-book key must force the cold start."""
@@ -315,6 +354,52 @@ def test_router_cold_starts_on_quarantine():
     after = router.price_book.stats()
     assert after["warm_hits"] == before["warm_hits"]
     assert after["cold_starts"] > before["cold_starts"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10**6))
+def test_spill_accounting_exactly_once_per_window(seed):
+    """ISSUE-6 satellite 2 property: across randomized spill-heavy windows
+    (tight capacities force cross-hub rescues) every request lands in the
+    ledger exactly once — matched XOR unmatched, with spill rescues counted
+    inside matched, never as an unmatched-then-rescued double entry."""
+    rng = np.random.default_rng(seed)
+    m = int(rng.integers(2, 7))
+    router = IEMASRouter(_agents(m, cap=1), solver="dense", n_hubs=2,
+                         spill=True, warm_start=bool(rng.integers(0, 2)),
+                         predictor_kw={"warm_n": 99})
+    total = routed_total = 0
+    for t in range(3):
+        n = int(rng.integers(1, 12))
+        decisions = router.route_batch(_requests(n, tag=seed % 997 + t), {})
+        assert len(decisions) == n
+        total += n
+        routed_total += sum(1 for d in decisions if d.agent_id is not None)
+        a = router.accounts
+        assert a["matched"] + a["unmatched"] == total, (t, dict(a))
+        assert a["matched"] == routed_total, (t, dict(a))
+        assert 0 <= a["spill_rescued"] <= a["matched"]
+
+
+def test_accounting_counts_unmatched_when_no_live_agents():
+    """ISSUE-6 satellite 2 regression (fails pre-fix): with every agent
+    quarantined, route_batch returned all-None decisions WITHOUT tallying
+    them — the whole window vanished from matched + unmatched."""
+    router = IEMASRouter(_agents(4), solver="dense", n_hubs=2, spill=True,
+                         predictor_kw={"warm_n": 99})
+    for a in list(router.agents):
+        router.quarantine(a.agent_id)
+    decisions = router.route_batch(_requests(5, 0), {})
+    assert len(decisions) == 5
+    assert all(d.agent_id is None for d in decisions)
+    assert router.accounts["matched"] == 0
+    assert router.accounts["unmatched"] == 5
+    # reinstating closes the next window's ledger on the same counters
+    for a in list(router.agents):
+        router.reinstate(a.agent_id)
+    router.route_batch(_requests(3, 1), {})
+    acc = router.accounts
+    assert acc["matched"] + acc["unmatched"] == 8
 
 
 def test_router_warm_start_noop_for_mcmf():
@@ -363,7 +448,9 @@ def test_sharded_dense_jax_warm_start_roundtrip():
     values, costs, caps = _market(rng, 20, 10)
     blocks = _partition(rng, *values.shape, 3)
     first = run_sharded_auction(values, costs, caps, blocks, solver="dense-jax")
-    seeds = {h: first[h].solver_stats["slot_prices"] for h in first}
+    seeds = {h: np.concatenate([np.asarray(p) for p in
+                                first[h].solver_stats["agent_prices"]])
+             for h in first}
     warm = run_sharded_auction(values, costs, caps, blocks,
                                solver="dense-jax", start_prices=seeds)
     for h in blocks:

@@ -192,6 +192,95 @@ def test_profiler_noop_when_absent():
     assert out["dialogues_completed"] == 2
 
 
+# ---------------------------------------------- empty-round guard --
+def test_no_empty_route_rounds_in_quantize_mode():
+    """ISSUE-6 satellite 3 regression (fails pre-fix): the quantize regime
+    fires a ROUTE tick on every round boundary even while all dialogues are
+    busy; ticks with no ready work must not invoke the router, count a
+    round, burn max_rounds budget, or fire on_round."""
+    cluster, router = _fresh(seed=2)
+    prof = RoutingProfiler()
+    dlg = generate(WorkloadSpec("coqa_like", n_dialogues=5, seed=3))
+    on_round_calls = []
+    out = EventSimulator(cluster, router, dlg, arrivals=SyncArrivals(),
+                         batch_cap=4, quantize=0.05, profiler=prof,
+                         max_new_tokens=3,
+                         on_round=lambda r, c: on_round_calls.append(r)).run()
+    assert out["dialogues_completed"] == 5 and not out["truncated"]
+    # every counted round was one real router invocation with work in it
+    assert out["rounds"] == prof.calls["route_batch"]
+    assert prof.empty_route_calls == 0
+    assert prof.route_requests >= out["dispatched_requests"]
+    assert on_round_calls == list(range(1, out["rounds"] + 1))
+
+
+def test_empty_round_guard_preserves_decisions():
+    """The guard is pure accounting: the routed records are bit-identical
+    to the run_workload oracle (the lockstep parity contract still holds
+    with rounds now counting only real router invocations)."""
+    dlg = generate(WorkloadSpec("quac_like", n_dialogues=5, seed=8))
+    c1, r1 = _fresh(seed=6)
+    run_workload(c1, r1, dlg, max_rounds=2000, max_new_tokens=3,
+                 batch_per_round=3)
+    c2, r2 = _fresh(seed=6)
+    out = EventSimulator(c2, r2, dlg, arrivals=SyncArrivals(), batch_cap=3,
+                         quantize=0.05, max_rounds=2000,
+                         max_new_tokens=3,
+                         profiler=RoutingProfiler()).run()
+    assert _sig(c1) == _sig(c2)
+    assert out["routing"]["empty_route_calls"] == 0
+
+
+# ------------------------------------------------- incremental mode --
+def test_incremental_mode_dispatches_and_reconciles():
+    """incremental=True: once standing duals exist, newly-ready dialogues
+    are provisionally dispatched at posted prices (no batch-window wait);
+    the next batch auction or the completion path retires every
+    provisional, and the run drains cleanly."""
+    cluster, router = _fresh(seed=4)
+    spec = WorkloadSpec("coqa_like", n_dialogues=10, seed=6)
+    out = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=PoissonArrivals(rate=4.0, seed=7),
+                         batch_cap=8, batch_window=0.05, incremental=True,
+                         max_new_tokens=3).run()
+    assert out["dialogues_completed"] == 10 and not out["truncated"]
+    acc = router.accounts
+    assert out["incremental_dispatched"] == acc["incremental_routed"]
+    assert acc["incremental_routed"] > 0
+    assert acc["incremental_confirmed"] + acc["incremental_rerouted"] <= \
+        acc["incremental_routed"]
+    # nothing left provisional after the run drains
+    assert not router._provisional and not router._prov_units
+
+
+def test_incremental_mode_deterministic():
+    """Two identical incremental runs replay the same records + metrics."""
+    def once():
+        cluster, router = _fresh(seed=9)
+        spec = WorkloadSpec("coqa_like", n_dialogues=8, seed=5)
+        out = EventSimulator(cluster, router, iter_dialogues(spec),
+                             arrivals=PoissonArrivals(rate=5.0, seed=13),
+                             batch_cap=6, batch_window=0.03,
+                             incremental=True, max_new_tokens=3).run()
+        return _sig(cluster), out
+    sig_a, out_a = once()
+    sig_b, out_b = once()
+    assert sig_a == sig_b
+    drop = ("wall_time_s",)
+    assert {k: v for k, v in out_a.items() if k not in drop} == \
+        {k: v for k, v in out_b.items() if k not in drop}
+
+
+def test_incremental_off_is_default_noop():
+    """The flag defaults off; without it nothing is provisionally routed."""
+    cluster, router = _fresh(seed=1)
+    dlg = generate(WorkloadSpec("coqa_like", n_dialogues=4, seed=2))
+    out = EventSimulator(cluster, router, dlg, arrivals=SyncArrivals(),
+                         batch_cap=8, quantize=0.05, max_new_tokens=3).run()
+    assert out["incremental_dispatched"] == 0
+    assert router.accounts["incremental_routed"] == 0
+
+
 # ------------------------------------------------------- 10k smoke --
 @pytest.mark.slow
 def test_10k_dialogue_scale_smoke():
