@@ -22,6 +22,10 @@ reduced sizes used in CI-style runs).
                       1k->10k dialogues: per-phase routing overhead as a
                       fraction of simulated engine compute + the >=10%
                       crossover report
+  dagrouting   —    — workflow-DAG families (orchestrator fan-out/fan-in,
+                      handoff chains): precedence-aware IEMAS vs an
+                      affinity-blind graph scheduler on welfare/request,
+                      graph makespan and KV hit rate
 """
 from __future__ import annotations
 
@@ -63,6 +67,9 @@ def main() -> None:
     if want("servingscale"):
         from benchmarks import serving_scale
         serving_scale.run(smoke=QUICK)
+    if want("dagrouting"):
+        from benchmarks import dag_routing
+        dag_routing.run(smoke=QUICK)
     if want("fig3"):
         from benchmarks import fig3_predictor
         fig3_predictor.run()

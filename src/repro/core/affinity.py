@@ -99,6 +99,44 @@ class PrefixLedger:
                 o[:, i] = np.where(keep, o[:, i], 0.0)
         return o
 
+    def parent_credit(self, o: np.ndarray, prompts: list,
+                      parent_sessions: list, agent_ids: list,
+                      extension_only_mask=None,
+                      cache_slots=None) -> np.ndarray:
+        """Precedence-aware affinity (workflow-DAG handoffs): raise, in
+        place, ``o[j, i]`` to the best affinity over request j's *parent
+        step* sessions still resident on agent i.
+
+        A DAG step's prompt begins with its parents' contexts, so an agent
+        that served a parent step holds a usable KV prefix even though the
+        child runs under a fresh session key — without this credit the
+        auction sees a cold cache at every handoff and co-placement never
+        pays.  ``parent_sessions[j]`` lists request j's parent session ids
+        (empty for linear dialogues — their rows are untouched).  Parent
+        entries are LRU-masked exactly like own-session affinity: with
+        ``cache_slots[i] > 0`` only agent i's ``cache_slots[i]``
+        most-recent sessions can contribute (§4.4 published cache
+        summaries).
+        """
+        rows = [j for j, ps in enumerate(parent_sessions) if ps]
+        if not rows:
+            return o
+        for i, aid in enumerate(agent_ids):
+            ext = bool(extension_only_mask[i]) \
+                if extension_only_mask is not None else False
+            slots = int(cache_slots[i]) if cache_slots is not None else 0
+            recent = self.recent_sessions(aid, slots) if slots > 0 else None
+            for j in rows:
+                best = o[j, i]
+                for s in parent_sessions[j]:
+                    if recent is not None and s not in recent:
+                        continue
+                    a = self.affinity(aid, s, prompts[j], extension_only=ext)
+                    if a > best:
+                        best = a
+                o[j, i] = best
+        return o
+
     def get(self, agent_id: str, dialogue_id: str):
         """The last recorded prompt for this (agent, dialogue), or None."""
         return self._store.get((agent_id, dialogue_id))

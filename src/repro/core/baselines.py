@@ -198,7 +198,35 @@ class EwmaScoreRouter(_BaseRouter):
         self.score[key] = (1 - self.alpha) * self.score[key] + self.alpha * reward
 
 
+class GraphSchedulerRouter(_BaseRouter):
+    """Affinity-blind workflow-graph scheduler — the dag_routing baseline.
+
+    What a classic DAG scheduler (HEFT-style list scheduling) does when
+    dropped into an agent marketplace: it sees the precedence structure
+    (the simulator only hands it ready steps) and places each one by
+    skill match, then load, then hardware scale — but it is blind to KV
+    prefix state, so a handoff step lands wherever the queue is shortest
+    and the producer's cached context is re-prefilled from scratch.  The
+    gap to IEMAS's precedence-aware affinity auction is exactly what
+    `benchmarks/dag_routing.py` measures.
+    """
+
+    name = "graphsched"
+
+    def route_batch(self, requests, telemetry, free_slots=None):
+        """Assign each ready step by (domain match, load, -scale)."""
+        inflight = telemetry.get("agent_inflight", {})
+
+        def pick(r, cands):
+            return min(cands, key=lambda a: (
+                0 if r.domain in a.domains else 1,
+                inflight.get(a.agent_id, 0) / max(1, a.capacity),
+                -a.scale, a.agent_id))
+        return self._decide(requests, pick, free_slots)
+
+
 BASELINES = {
     c.name: c for c in (RandomRouter, RoundRobinRouter, LeastLoadedRouter,
-                        GreedyAffinityRouter, BanditRouter, EwmaScoreRouter)
+                        GreedyAffinityRouter, BanditRouter, EwmaScoreRouter,
+                        GraphSchedulerRouter)
 }

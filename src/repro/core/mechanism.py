@@ -214,19 +214,33 @@ class IEMASRouter:
     def _phase1(self, requests, live, telemetry):
         """Phase 1a/1b: affinity + QoS matrices + Eq.-1 values (see
         route_batch); returns (lat, cst, qual, values, X, xs)."""
-        # Phase 1a: affinity matrix over LIVE agents
+        # Phase 1a: affinity matrix over LIVE agents.  DAG steps carry their
+        # own session key (``meta["session"]``) distinct from the dialogue id
+        # so sibling steps do not clobber each other's ledger entries; linear
+        # requests fall back to the dialogue id — bit-identical to before.
         prompts = [r.tokens for r in requests]
-        dlg = [r.dialogue_id for r in requests]
+        sess = [r.meta.get("session", r.dialogue_id) for r in requests]
+        ext_mask = [a.recurrent for a in live]
         o = self.ledger.affinity_matrix(
-            prompts, dlg, [a.agent_id for a in live],
-            extension_only_mask=[a.recurrent for a in live],
+            prompts, sess, [a.agent_id for a in live],
+            extension_only_mask=ext_mask,
             use_kernel=self.use_kernel_affinity)
         # LRU cache model (§4.4 published cache summaries): zero the affinity
         # of sessions the backend has presumably evicted, so the auction does
         # not pay for dead caches (and Eq.6 predictions stay calibrated under
         # the paper's constrained-memory / frequent-eviction regime).
-        o = self.ledger.apply_lru(o, dlg, [a.agent_id for a in live],
+        o = self.ledger.apply_lru(o, sess, [a.agent_id for a in live],
                                   [a.cache_slots for a in live])
+        # Precedence-aware credit (workflow DAGs): a handoff step's prompt
+        # starts with its parents' contexts, so an agent holding a PARENT
+        # step's KV prefix is as warm as one holding the step's own — fold
+        # that into o before it enters the Eq.-5 feature tensor.
+        parents = [r.meta.get("parent_sessions", ()) for r in requests]
+        if any(parents):
+            o = self.ledger.parent_credit(
+                o, prompts, parents, [a.agent_id for a in live],
+                extension_only_mask=ext_mask,
+                cache_slots=[a.cache_slots for a in live])
 
         # Phase 1b: QoS prediction per candidate pair — the whole (n, m, F)
         # Eq.-5 tensor in one vectorized pass (default), or the scalar
@@ -587,10 +601,15 @@ class IEMASRouter:
         pred.ewma_gen = 0.9 * pred.ewma_gen + 0.1 * obs.n_gen
         # eviction resync (Appendix C.2.2): the engine reported zero cached
         # tokens despite a confident ledger match -> the backend evicted its
-        # KV; drop our record so affinity reflects reality next round.
+        # KV; drop our record so affinity reflects reality next round.  DAG
+        # steps live under their own session key; the confident match may
+        # have come from a parent entry (parent_credit), so drop those too.
+        sess = req.meta.get("session", req.dialogue_id)
         if obs.n_hit == 0 and x.affinity > 0.3:
-            self.ledger.evict(agent.agent_id, req.dialogue_id)
-        self.ledger.update(agent.agent_id, req.dialogue_id, req.tokens)
+            self.ledger.evict(agent.agent_id, sess)
+            for ps in req.meta.get("parent_sessions", ()):
+                self.ledger.evict(agent.agent_id, ps)
+        self.ledger.update(agent.agent_id, sess, req.tokens)
         # market accounting (weak budget balance bookkeeping, Thm 4.3)
         true_value = client_value(obs.quality, obs.latency, self.valuation)
         self.accounts["payments"] += payment

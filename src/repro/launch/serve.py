@@ -23,9 +23,9 @@ import json
 from repro.core import IEMASRouter
 from repro.core.baselines import BASELINES
 from repro.core.solvers import available_solvers
-from repro.serving import (EventSimulator, RoutingProfiler, SimCluster,
-                           WorkloadSpec, generate, iter_dialogues,
-                           make_arrivals, run_workload)
+from repro.serving import (DAG_WORKLOADS, EventSimulator, RoutingProfiler,
+                           SimCluster, WorkloadSpec, generate, iter_dialogues,
+                           load_trace, make_arrivals, run_workload)
 
 
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
@@ -59,6 +59,10 @@ def main():
     ap.add_argument("--arrival-rate", type=float, default=None,
                     help="event mode: Poisson dialogue arrivals per virtual "
                          "second (default: synchronous, all at t=0)")
+    ap.add_argument("--trace-file", default=None,
+                    help="event mode: replay arrival timestamps from a file "
+                         "(one virtual-second float per line, # comments "
+                         "allowed); overrides --arrival-rate")
     ap.add_argument("--max-inflight", type=int, default=256,
                     help="event mode: streaming-admission window (max "
                          "concurrently active dialogues)")
@@ -129,10 +133,17 @@ def main():
                           seed=args.seed)
     spec = WorkloadSpec(args.workload, n_dialogues=args.dialogues,
                         seed=args.seed + 1)
+    if args.workload in DAG_WORKLOADS and args.sim_mode != "event":
+        ap.error(f"workload {args.workload!r} is a workflow DAG; precedence "
+                 f"scheduling needs --sim-mode event")
     if args.sim_mode == "event":
-        arrivals = make_arrivals(
-            "poisson" if args.arrival_rate else "sync",
-            rate=args.arrival_rate or 8.0, seed=args.seed + 2)
+        if args.trace_file:
+            arrivals = make_arrivals("trace",
+                                     trace=load_trace(args.trace_file))
+        else:
+            arrivals = make_arrivals(
+                "poisson" if args.arrival_rate else "sync",
+                rate=args.arrival_rate or 8.0, seed=args.seed + 2)
         sim = EventSimulator(cluster, router, iter_dialogues(spec),
                              arrivals=arrivals, batch_cap=args.batch_cap,
                              batch_window=args.batch_window,

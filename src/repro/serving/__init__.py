@@ -6,7 +6,9 @@ from repro.serving.evaluator import SimulatedSkillEvaluator, TokenSpanEvaluator
 from repro.serving.simulator import (EventSimulator, RoutingProfiler,
                                      simulate_workload)
 from repro.serving.telemetry import TelemetryTracker
-from repro.serving.workload import (WORKLOADS, ArrivalProcess, DialogueScript,
+from repro.serving.workload import (DAG_WORKLOADS, WORKLOADS, ArrivalProcess,
+                                    DagScript, DagStep, DialogueScript,
                                     PoissonArrivals, SyncArrivals,
                                     TraceArrivals, WorkloadSpec, generate,
-                                    iter_dialogues, make_arrivals)
+                                    iter_dialogues, load_trace, make_arrivals,
+                                    validate_dag)

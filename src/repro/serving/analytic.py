@@ -100,12 +100,22 @@ class AnalyticEngine:
         return int(h % self.vocab) + 1
 
     def serve(self, dialogue_id: str, prompt: np.ndarray, now: float = 0.0,
-              max_new_tokens: int | None = None) -> ServeResult:
-        """Modeled serve: real cache accounting, roofline service times."""
+              max_new_tokens: int | None = None,
+              parents: tuple = ()) -> ServeResult:
+        """Modeled serve: real cache accounting, roofline service times.
+        ``parents`` names DAG parent-step session keys whose cached prefix
+        may be forked, mirroring the real engine's handoff path."""
         prompt = np.asarray(prompt, dtype=np.int32)
         n_prompt = len(prompt)
         max_new = max_new_tokens or self.max_new
         sess = self.sessions.get(dialogue_id)
+        if parents:
+            # fork the warmest candidate (attention: longest common prefix)
+            best = lcp_length(prompt, sess.prompt) if sess is not None else 0
+            for pid in parents:
+                ps = self.sessions.get(pid)
+                if ps is not None and lcp_length(prompt, ps.prompt) > best:
+                    best, sess = lcp_length(prompt, ps.prompt), ps
 
         # cache semantics — identical to AgentEngine's attention path
         n_hit = 0

@@ -198,8 +198,13 @@ class SimCluster:
             self._seq += 1
             return rec
 
-        result = rt.engine.serve(req.dialogue_id, req.tokens, now=self.now,
-                                 max_new_tokens=req.max_new_tokens)
+        # DAG steps serve under their own session key with parent-session
+        # fork candidates (handoff prefix reuse); linear requests carry no
+        # such meta and serve under the dialogue id exactly as before.
+        session = req.meta.get("session", req.dialogue_id)
+        result = rt.engine.serve(session, req.tokens, now=self.now,
+                                 max_new_tokens=req.max_new_tokens,
+                                 parents=req.meta.get("parent_sessions", ()))
         queue = self.telemetry.agent_inflight.get(rt.info.agent_id, 1) - 1
         straggle = (rt.straggle_factor
                     if self.rng.random() < rt.straggle_prob else 1.0)
@@ -323,6 +328,12 @@ def run_workload(cluster: SimCluster, router, dialogues: list[DialogueScript],
     This loop is the closed-loop oracle: `repro.serving.simulator` must
     reproduce its decisions bit-for-bit under synchronous arrivals.
     """
+    for d in dialogues:
+        if not isinstance(d, DialogueScript):
+            raise TypeError(
+                f"run_workload drives linear DialogueScripts only; got "
+                f"{type(d).__name__} for {getattr(d, 'dialogue_id', '?')!r} — "
+                f"DAG workloads need repro.serving.simulator.EventSimulator")
     state = {d.dialogue_id: {"script": d, "turn": 0, "history": np.zeros(0, np.int32),
                              "busy": False} for d in dialogues}
     pending_next: dict[str, np.ndarray] = {

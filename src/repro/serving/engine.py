@@ -132,16 +132,44 @@ class AgentEngine:
         new["pos"] = jnp.full_like(cache["pos"], keep)
         return new
 
+    def _session_hit(self, prompt: np.ndarray, sess: SessionCache) -> int:
+        """Cached prompt tokens this session would grant (arch rules):
+        attention reuses any common prefix; recurrent state only an exact
+        extension of the session's full prompt."""
+        l = lcp_length(prompt, sess.prompt)
+        if self.recurrent:
+            return l if (l == len(sess.prompt) and l <= len(prompt)) else 0
+        return l
+
+    def _pick_session(self, dialogue_id: str, prompt: np.ndarray, parents):
+        """Best cache candidate among the session's own entry and its DAG
+        parent-step sessions (handoff fork: a child step's prompt starts
+        with its parents' contexts, so a parent's cache is a warm prefix).
+        Forking is safe — cache pytrees are immutable and extend/truncate
+        return fresh dicts, so the parent's entry is never mutated."""
+        sess = self.sessions.get(dialogue_id)
+        if not parents:
+            return sess
+        best = self._session_hit(prompt, sess) if sess is not None else 0
+        for pid in parents:
+            ps = self.sessions.get(pid)
+            if ps is not None and self._session_hit(prompt, ps) > best:
+                best, sess = self._session_hit(prompt, ps), ps
+        return sess
+
     # ---------------- serving ----------------
     def serve(self, dialogue_id: str, prompt: np.ndarray, now: float = 0.0,
-              max_new_tokens: int | None = None) -> ServeResult:
+              max_new_tokens: int | None = None,
+              parents: tuple = ()) -> ServeResult:
         """Serve one request: cache-aware prefill/extend + greedy decode,
         measuring TTFT/total wall-clock (scaled by agent speed) and exact
-        cached-token counts."""
+        cached-token counts.  ``parents`` names sibling session keys whose
+        cached state may be forked (DAG handoffs); the result is stored
+        under ``dialogue_id`` regardless."""
         prompt = np.asarray(prompt, dtype=np.int32)
         n_prompt = len(prompt)
         max_new = max_new_tokens or self.max_new
-        sess = self.sessions.get(dialogue_id)
+        sess = self._pick_session(dialogue_id, prompt, parents)
 
         n_hit = 0
         mode = "fresh"

@@ -27,6 +27,17 @@ compute.  This module replaces it for scale runs:
     `benchmarks/serving_scale.py` can report where routing overhead crosses
     10% of engine compute as n_agents and batch size grow.
 
+Workflow DAGs: alongside linear `DialogueScript` turns, the simulator
+drives `repro.serving.workload.DagScript` task graphs — a step becomes
+ready only when ALL its parent steps have completed, its prompt is the
+concatenation of its parents' contexts (their prompt + generated output,
+ascending step order) followed by its own instruction tokens, and sibling
+steps dispatch concurrently.  Each step routes under its own session key
+(``meta["session"] = "<dialogue>#s<step>"``) with its parents' session
+keys in ``meta["parent_sessions"]``, which is what lets the router's
+precedence-aware affinity and the engines' cache fork reuse the producer's
+KV prefix across the handoff.
+
 Closed-loop parity: with ``quantize=round_dt`` the ROUTE events fall on the
 exact round boundaries of ``run_workload`` and completions are delivered at
 those boundaries only — under `SyncArrivals` the simulator then reproduces
@@ -46,7 +57,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.mechanism import CompletionObs, Request
-from repro.serving.workload import (ArrivalProcess, DialogueScript,
+from repro.serving.workload import (ArrivalProcess, DagScript, DialogueScript,
                                     SyncArrivals)
 from repro.utils.timing import phase_scope
 
@@ -146,15 +157,31 @@ class RoutingProfiler:
 
 @dataclass
 class _Dialogue:
-    """In-flight dialogue state (exists only between admission and finish)."""
+    """In-flight dialogue state (exists only between admission and finish).
 
-    script: DialogueScript
+    Linear scripts use ``turn``/``history``/``pending``/``busy``; DAG
+    scripts (`DagScript`) instead track per-step state: a step's prompt is
+    built the moment its last parent completes (concatenated parent
+    contexts + the step's own tokens), ``waiting`` counts incomplete
+    parents per step, ``inflight`` holds dispatched step ids (several may
+    run concurrently), and the dialogue finishes when ``remaining`` hits 0.
+    """
+
+    script: DialogueScript | DagScript
     arrived_at: float
     turn: int = 0
     history: np.ndarray = field(default_factory=lambda: _EMPTY)
     pending: np.ndarray | None = None   # next user turn awaiting dispatch
     busy: bool = False
     ready_since: float = 0.0
+    # ---- DAG-mode fields (unused for linear scripts) ----
+    step_prompt: dict = field(default_factory=dict)   # step -> prompt tokens
+    step_ctx: dict = field(default_factory=dict)      # step -> prompt+output
+    step_ready_since: dict = field(default_factory=dict)
+    waiting: dict = field(default_factory=dict)       # step -> open parents
+    children: dict = field(default_factory=dict)      # step -> child steps
+    inflight: set = field(default_factory=set)        # dispatched step ids
+    remaining: int = 0                                # steps not yet done
 
 
 class EventSimulator:
@@ -163,9 +190,10 @@ class EventSimulator:
     Parameters
     ----------
     cluster, router : the `SimCluster` + router pair to drive.
-    dialogues : iterable of `DialogueScript` — consumed lazily, one script
-        per arrival (pass `repro.serving.workload.iter_dialogues` output
-        for streaming scale runs).
+    dialogues : iterable of `DialogueScript` / `DagScript` — consumed
+        lazily, one script per arrival (pass
+        `repro.serving.workload.iter_dialogues` output for streaming scale
+        runs); DAG scripts run their steps under precedence constraints.
     arrivals : `ArrivalProcess` pacing dialogue arrivals (default: all at
         t=0, the closed-loop population).
     batch_cap : max requests per router invocation (micro-batch size).
@@ -234,7 +262,9 @@ class EventSimulator:
         if max_inflight is not None and max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.states: dict[str, _Dialogue] = {}
-        self.ready: deque[str] = deque()
+        # FIFO of ready work units: (dialogue_id, step_id) — step_id is None
+        # for linear-dialogue turns, a DAG step id otherwise
+        self.ready: deque[tuple] = deque()
         self.backlog: deque[DialogueScript] = deque()
         # per-dialogue dispatch attribution (includes fault-path retries)
         self.dispatch_count: Counter[str] = Counter()
@@ -304,12 +334,29 @@ class EventSimulator:
                     or self.states)
 
     # ---------------- dialogue lifecycle ----------------
-    def _admit(self, script: DialogueScript) -> None:
+    def _admit(self, script) -> None:
         now = self.cluster.now
+        if isinstance(script, DagScript):
+            st = _Dialogue(script, arrived_at=now,
+                           remaining=len(script.steps))
+            for s in script.steps:
+                st.waiting[s.step_id] = len(s.parents)
+                for p in s.parents:
+                    st.children.setdefault(p, []).append(s.step_id)
+            self.states[script.dialogue_id] = st
+            self.peak_inflight = max(self.peak_inflight, len(self.states))
+            # roots have no parents: ready (and bidding) immediately
+            for s in script.steps:
+                if not s.parents:
+                    st.step_prompt[s.step_id] = s.tokens.astype(np.int32)
+                    st.step_ready_since[s.step_id] = now
+                    self.ready.append((script.dialogue_id, s.step_id))
+                    self._try_incremental()
+            return
         self.states[script.dialogue_id] = _Dialogue(
             script, arrived_at=now, pending=script.turns[0], ready_since=now)
         self.peak_inflight = max(self.peak_inflight, len(self.states))
-        self.ready.append(script.dialogue_id)
+        self.ready.append((script.dialogue_id, None))
         self._try_incremental()
 
     def _on_arrival(self, script: DialogueScript) -> None:
@@ -320,16 +367,31 @@ class EventSimulator:
         else:
             self._admit(script)
 
+    def _finish_dialogue(self, did: str, now: float) -> None:
+        """Release a finished dialogue's state and admit from the backlog."""
+        st = self.states[did]
+        self.n_completed_dialogues += 1
+        self._dlg_latency_sum += now - st.arrived_at
+        del self.states[did]
+        if self.backlog:
+            self._admit(self.backlog.popleft())
+
     def _handle_completions(self, t: float) -> None:
         done = self.cluster.advance_to(t, self.router)
         now = self.cluster.now
         for rec in done:
             did = rec.request.dialogue_id
             st = self.states[did]
+            step = rec.request.meta.get("step_id")
+            if step is not None:
+                self._complete_step(st, did, step, rec, now)
+                continue
             st.busy = False
             if rec.failed:
-                st.ready_since = now
-                self.ready.append(did)      # re-issue the same turn
+                # retry keeps the ORIGINAL ready time: the turn has been
+                # waiting since it first became ready, and resetting the
+                # clock here under-reported queueing wait across retries
+                self.ready.append((did, None))  # re-issue the same turn
                 self._try_incremental()
                 continue
             st.history = np.concatenate(
@@ -341,72 +403,132 @@ class EventSimulator:
             if st.turn < len(st.script.turns):
                 st.pending = st.script.turns[st.turn]
                 st.ready_since = now
-                self.ready.append(did)
+                self.ready.append((did, None))
                 self._try_incremental()
             else:
-                # dialogue finished: release its state, admit from backlog
-                self.n_completed_dialogues += 1
-                self._dlg_latency_sum += now - st.arrived_at
-                del self.states[did]
-                if self.backlog:
-                    self._admit(self.backlog.popleft())
+                self._finish_dialogue(did, now)
+
+    def _complete_step(self, st: _Dialogue, did: str, step: int, rec,
+                       now: float) -> None:
+        """One DAG step finished (or failed): update precedence state.
+
+        On success the step's context (prompt + generated output) is
+        recorded; every child whose last open parent this was gets its
+        prompt built — concatenated parent contexts in ascending step order,
+        then the child's own tokens — and becomes ready.  On failure the
+        step re-queues with its original ready time (same wait-clock
+        contract as linear retries).
+        """
+        st.inflight.discard(step)
+        if rec.failed:
+            self.ready.append((did, step))
+            self._try_incremental()
+            return
+        st.step_ctx[step] = np.concatenate(
+            [st.step_prompt[step], rec.output_tokens]).astype(np.int32)
+        st.remaining -= 1
+        if self.lean:
+            rec.request.tokens = _EMPTY
+            rec.output_tokens = _EMPTY
+        for c in st.children.get(step, ()):
+            st.waiting[c] -= 1
+            if st.waiting[c] == 0:
+                s = st.script.steps[c]
+                st.step_prompt[c] = np.concatenate(
+                    [st.step_ctx[p] for p in sorted(s.parents)]
+                    + [s.tokens]).astype(np.int32)
+                st.step_ready_since[c] = now
+                self.ready.append((did, c))
+                self._try_incremental()
+        if st.remaining == 0:
+            self._finish_dialogue(did, now)
 
     # ---------------- routing ----------------
-    def _try_incremental(self) -> None:
-        """Offer the just-readied dialogue a provisional posted-price route.
+    def _build_request(self, key: tuple) -> Request:
+        """Materialize the Request for one ready unit ``(did, step)``,
+        consuming a fresh request id.
 
-        Called right after a dialogue is appended to ``ready``; on success
-        the request dispatches immediately (its batch-window wait collapses
-        to zero) and the dialogue is removed from the queue — the next
+        Id contract: every built request burns its ``r{N}`` id — including
+        incremental offers that end up deferred or dead-dispatched — so a
+        dispatched id is NEVER re-issued to a different request and
+        router/profiler state keyed by request_id cannot collide.  DAG
+        steps carry their handoff metadata here: ``session`` (the step's
+        own ledger/engine key), ``parent_sessions`` (precedence-aware
+        affinity + engine cache fork), ``step_id`` and ``role``.
+        """
+        did, step = key
+        st = self.states[did]
+        if step is None:
+            prompt = np.concatenate([st.history, st.pending])
+            turn, domain = st.turn, st.script.domain
+            meta = {"difficulty": st.script.difficulty}
+        else:
+            s = st.script.steps[step]
+            prompt = st.step_prompt[step]
+            turn, domain = step, s.domain
+            meta = {"difficulty": st.script.difficulty,
+                    "session": f"{did}#s{step}",
+                    "parent_sessions": tuple(f"{did}#s{p}"
+                                             for p in sorted(s.parents)),
+                    "step_id": step, "role": s.role}
+        req = Request(
+            request_id=f"r{self._rid}", dialogue_id=did,
+            tokens=prompt.astype(np.int32), turn=turn, domain=domain,
+            max_new_tokens=self.max_new_tokens, meta=meta)
+        self._rid += 1
+        return req
+
+    def _note_dispatch(self, st: _Dialogue, did: str, step) -> None:
+        """Shared dispatch bookkeeping: busy/inflight + wait accounting."""
+        if step is None:
+            st.busy = True
+            since = st.ready_since
+        else:
+            st.inflight.add(step)
+            since = st.step_ready_since[step]
+        self.dispatch_count[did] += 1
+        self.n_dispatched += 1
+        self._wait_sum += self.cluster.now - since
+        self._wait_n += 1
+
+    def _try_incremental(self) -> None:
+        """Offer the just-readied work unit a provisional posted-price route.
+
+        Called right after a unit is appended to ``ready``; on success the
+        request dispatches immediately (its batch-window wait collapses
+        to zero) and the unit is removed from the queue — the next
         batch auction re-equilibrates it as a shadow participant.  On any
         miss (stale/absent duals, no profitable unit, dead dispatch target)
-        the dialogue simply stays queued for the batch path.
+        the unit simply stays queued for the batch path; its request id is
+        burned, not recycled (see `_build_request`).
         """
         if not self.incremental or not self.ready:
             return
         cluster, router = self.cluster, self.router
-        did = self.ready[-1]
+        did, step = key = self.ready[-1]
         st = self.states[did]
-        prompt = np.concatenate([st.history, st.pending])
-        req = Request(
-            request_id=f"r{self._rid}", dialogue_id=did,
-            tokens=prompt.astype(np.int32), turn=st.turn,
-            domain=st.script.domain, max_new_tokens=self.max_new_tokens,
-            meta={"difficulty": st.script.difficulty})
+        req = self._build_request(key)
         telem = cluster.telemetry.snapshot(cluster.now)
         free = cluster.free_slots()
         with phase_scope(self.profiler, "route_incremental"):
             dec = router.route_incremental([req], telem, free_slots=free)[0]
         if dec.agent_id is None:
             return                      # deferred to the next batch auction
-        self._rid += 1
         if cluster.execute(dec, router) is None:
             # dead dispatch target: fault-path feedback (quarantine +
-            # pending/provisional cleanup); the dialogue stays queued
+            # pending/provisional cleanup); the unit stays queued
             router.on_complete(dec.request.request_id, CompletionObs(
                 0.0, len(dec.request.tokens), 0, 0, 0.0, failed=True))
             return
         self.ready.pop()
-        st.busy = True
-        self.dispatch_count[did] += 1
-        self.n_dispatched += 1
+        self._note_dispatch(st, did, step)
         self.n_incremental += 1
-        self._wait_sum += cluster.now - st.ready_since
-        self._wait_n += 1
 
     def _route_step(self) -> None:
         cluster, router = self.cluster, self.router
         batch = []
         while self.ready and len(batch) < self.batch_cap:
-            did = self.ready.popleft()
-            st = self.states[did]
-            prompt = np.concatenate([st.history, st.pending])
-            batch.append(Request(
-                request_id=f"r{self._rid}", dialogue_id=did,
-                tokens=prompt.astype(np.int32), turn=st.turn,
-                domain=st.script.domain, max_new_tokens=self.max_new_tokens,
-                meta={"difficulty": st.script.difficulty}))
-            self._rid += 1
+            batch.append(self._build_request(self.ready.popleft()))
         if not batch:
             return
         telem = cluster.telemetry.snapshot(cluster.now)
@@ -416,8 +538,9 @@ class EventSimulator:
         unmatched = []
         for dec in decisions:
             did = dec.request.dialogue_id
+            step = dec.request.meta.get("step_id")
             if dec.agent_id is None:
-                unmatched.append(did)
+                unmatched.append((did, step))
                 continue
             if cluster.execute(dec, router) is None:
                 # dead dispatch target: fault-path feedback (quarantine +
@@ -425,14 +548,9 @@ class EventSimulator:
                 # handling as run_workload (parity contract)
                 router.on_complete(dec.request.request_id, CompletionObs(
                     0.0, len(dec.request.tokens), 0, 0, 0.0, failed=True))
-                unmatched.append(did)
+                unmatched.append((did, step))
                 continue
-            st = self.states[did]
-            st.busy = True
-            self.dispatch_count[did] += 1
-            self.n_dispatched += 1
-            self._wait_sum += cluster.now - st.ready_since
-            self._wait_n += 1
+            self._note_dispatch(self.states[did], did, step)
         # unmatched requests keep their queue priority, in order
         self.ready.extendleft(reversed(unmatched))
 

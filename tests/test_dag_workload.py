@@ -1,0 +1,292 @@
+"""Workflow-DAG serving: family generation, precedence scheduling, handoff
+prefix threading, precedence-aware affinity credit, and the id/precedence
+property suite (ISSUE-7 tentpole + satellite 4).
+
+Everything runs on ``engine_mode="analytic"`` clusters (deterministic
+virtual service times), same as tests/test_simulator.py."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import IEMASRouter
+from repro.core.affinity import PrefixLedger
+from repro.core.baselines import GraphSchedulerRouter
+from repro.serving import (DAG_WORKLOADS, EventSimulator, PoissonArrivals,
+                           SimCluster, WorkloadSpec, generate, iter_dialogues,
+                           run_workload)
+from repro.serving.analytic import AnalyticEngine
+from repro.serving.workload import (DOMAINS, DagScript, DagStep,
+                                    validate_dag)
+
+
+def _fresh(seed=0, n_agents=4, fail=0.0, **cluster_kw):
+    cluster = SimCluster(n_agents=n_agents, seed=seed, max_new_tokens=3,
+                         engine_mode="analytic", fail_prob=fail, **cluster_kw)
+    router = IEMASRouter(cluster.agent_infos(), solver="dense", n_hubs=2,
+                         warm_start=True)
+    return cluster, router
+
+
+def _tok(rng, n):
+    return rng.integers(1, 255, size=n, dtype=np.int32)
+
+
+# ------------------------------------------------- family generation --
+@pytest.mark.parametrize("family", DAG_WORKLOADS)
+def test_dag_families_generate_valid_graphs(family):
+    """Both topology families draw well-formed DAGs: contiguous ids,
+    topological edges, at least one root, and the advertised shapes."""
+    scripts = generate(WorkloadSpec(family, n_dialogues=20, seed=3))
+    assert len(scripts) == 20
+    for s in scripts:
+        assert isinstance(s, DagScript)
+        validate_dag(s)  # raises on malformed graphs
+        assert all(st_.domain in DOMAINS for st_ in s.steps)
+        roles = [st_.role for st_ in s.steps]
+        if family == "dag_orchestrator":
+            # plan -> W parallel workers -> fan-in aggregation
+            assert roles[0] == "orchestrator" and roles[-1] == "aggregator"
+            workers = [st_ for st_ in s.steps if st_.role == "worker"]
+            assert 2 <= len(workers) <= 4
+            assert all(st_.parents == (0,) for st_ in workers)
+            assert s.steps[-1].parents == tuple(w.step_id for w in workers)
+        else:
+            # handoff chain; optional side branch merged by an aggregator
+            chain = [st_ for st_ in s.steps if st_.role == "handoff"]
+            assert len(chain) >= 3
+            assert all(st_.parents == (st_.step_id - 1,)
+                       for st_ in chain[1:])
+            if "aggregator" in roles:
+                assert roles[-1] == "aggregator" \
+                    and len(s.steps[-1].parents) == 2
+    # cross-agent handoffs exist: at least one script changes domain
+    assert any(len({st_.domain for st_ in s.steps}) > 1 for s in scripts)
+
+
+def test_validate_dag_rejects_malformed_graphs():
+    """Non-contiguous ids, forward/self edges and empty graphs all raise."""
+    rng = np.random.default_rng(0)
+    ok = DagStep(0, (), "orchestrator", "reasoning", _tok(rng, 8))
+    with pytest.raises(ValueError, match="step_ids must be 0..n-1"):
+        validate_dag(DagScript("d", "reasoning", [
+            ok, DagStep(2, (0,), "worker", "code", _tok(rng, 4))], 0.5))
+    with pytest.raises(ValueError, match="non-topological"):
+        validate_dag(DagScript("d", "reasoning", [
+            ok, DagStep(1, (1,), "worker", "code", _tok(rng, 4))], 0.5))
+    with pytest.raises(ValueError, match="non-topological"):
+        validate_dag(DagScript("d", "reasoning", [
+            DagStep(0, (0,), "orchestrator", "reasoning", _tok(rng, 8))],
+            0.5))
+    with pytest.raises(ValueError, match="no root step"):
+        validate_dag(DagScript("d", "reasoning", [], 0.5))
+
+
+# ------------------------------------------- precedence-aware affinity --
+def test_parent_credit_raises_handoff_affinity():
+    """An agent that served a PARENT step gets credit for the child's
+    prompt prefix even though the child runs under a fresh session key."""
+    rng = np.random.default_rng(1)
+    ledger = PrefixLedger()
+    parent_ctx = _tok(rng, 40)
+    ledger.update("a0", "d#s0", parent_ctx)
+    child = np.concatenate([parent_ctx, _tok(rng, 10)])
+    # fresh child session: own-session affinity is zero for everyone
+    o = ledger.affinity_matrix([child], ["d#s1"], ["a0", "a1"])
+    assert o[0, 0] == 0.0 and o[0, 1] == 0.0
+    o = ledger.parent_credit(o, [child], [("d#s0",)], ["a0", "a1"])
+    assert o[0, 0] == pytest.approx(40 / 50)   # a0 holds the parent prefix
+    assert o[0, 1] == 0.0                      # a1 never served the parent
+    # linear rows (no parents) are untouched
+    o2 = np.full((2, 2), 0.25)
+    out = ledger.parent_credit(o2, [child, child], [(), ()], ["a0", "a1"])
+    assert np.array_equal(out, np.full((2, 2), 0.25))
+
+
+def test_parent_credit_respects_lru_and_arch_masks():
+    """Parent entries are LRU-masked like own-session affinity, and
+    recurrent agents only get exact-extension credit."""
+    rng = np.random.default_rng(2)
+    ledger = PrefixLedger()
+    parent_ctx = _tok(rng, 30)
+    ledger.update("a0", "d#s0", parent_ctx)
+    ledger.update("a0", "other", _tok(rng, 12))   # newer session
+    child = np.concatenate([parent_ctx, _tok(rng, 6)])
+    # 1 cache slot: only "other" is presumed resident -> no parent credit
+    o = ledger.parent_credit(np.zeros((1, 1)), [child], [("d#s0",)], ["a0"],
+                             cache_slots=[1])
+    assert o[0, 0] == 0.0
+    # 2 slots: the parent entry is back in the window
+    o = ledger.parent_credit(np.zeros((1, 1)), [child], [("d#s0",)], ["a0"],
+                             cache_slots=[2])
+    assert o[0, 0] == pytest.approx(30 / 36)
+    # recurrent mask: the parent ctx IS an exact prefix -> extension credit
+    o = ledger.parent_credit(np.zeros((1, 1)), [child], [("d#s0",)], ["a0"],
+                             extension_only_mask=[True])
+    assert o[0, 0] == pytest.approx(30 / 36)
+    # ...but a diverging child prompt gets nothing under extension-only
+    diverged = np.concatenate([parent_ctx[:10], _tok(rng, 20)])
+    o = ledger.parent_credit(np.zeros((1, 1)), [diverged], [("d#s0",)],
+                             ["a0"], extension_only_mask=[True])
+    assert o[0, 0] == 0.0
+
+
+def test_engine_parent_fork_reuses_handoff_prefix():
+    """The engine forks a parent step's cache when the child's prompt
+    extends the parent context — and stays cold without the parent hint."""
+    rng = np.random.default_rng(3)
+    eng = AnalyticEngine("qwen-4b", seed=0, cache_slots=8, max_new_tokens=4)
+    parent_prompt = _tok(rng, 40)
+    rp = eng.serve("d#s0", parent_prompt, now=0.0)
+    parent_ctx = np.concatenate([parent_prompt, rp.output_tokens])
+    child_prompt = np.concatenate([parent_ctx, _tok(rng, 10)]).astype(np.int32)
+    rc = eng.serve("d#s1", child_prompt, now=1.0, parents=("d#s0",))
+    assert rc.n_hit == len(parent_ctx)          # the whole handoff is warm
+    assert "d#s1" in eng.sessions and "d#s0" in eng.sessions
+    # same handoff WITHOUT the parent hint: cold prefill
+    eng2 = AnalyticEngine("qwen-4b", seed=0, cache_slots=8, max_new_tokens=4)
+    r2 = eng2.serve("d#s0", parent_prompt, now=0.0)
+    child2 = np.concatenate([parent_prompt, r2.output_tokens,
+                             _tok(rng, 10)]).astype(np.int32)
+    assert eng2.serve("d#s1", child2, now=1.0).n_hit == 0
+
+
+# --------------------------------------------- end-to-end precedence --
+@pytest.mark.parametrize("family", DAG_WORKLOADS)
+def test_dag_end_to_end_precedence_and_prefixes(family):
+    """The simulator never dispatches a step before all its parents
+    completed, every step prompt begins with the concatenated parent
+    contexts, and handoffs produce real KV hits."""
+    cluster, router = _fresh(seed=2)
+    spec = WorkloadSpec(family, n_dialogues=8, seed=4)
+    sim = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=PoissonArrivals(rate=10.0, seed=5),
+                         batch_cap=8, batch_window=0.02, max_new_tokens=3)
+    orig_execute = cluster.execute
+
+    def checked(dec, rtr):
+        step = dec.request.meta.get("step_id")
+        if step is not None:
+            dst = sim.states[dec.request.dialogue_id]
+            s = dst.script.steps[step]
+            assert all(p in dst.step_ctx for p in s.parents), \
+                f"step {step} dispatched before parents {s.parents}"
+            if s.parents:
+                prefix = np.concatenate([dst.step_ctx[p]
+                                         for p in sorted(s.parents)])
+                assert np.array_equal(dec.request.tokens[:len(prefix)],
+                                      prefix)
+        return orig_execute(dec, rtr)
+
+    cluster.execute = checked
+    out = sim.run()
+    assert out["dialogues_completed"] == 8 and not out["truncated"]
+    assert out["kv_hit_rate"] > 0          # handoff prefixes were reused
+    # every record carries the step session scheme
+    for rec in cluster.records:
+        meta = rec.request.meta
+        did = rec.request.dialogue_id
+        assert meta["session"] == f"{did}#s{meta['step_id']}"
+        assert all(ps.startswith(f"{did}#s")
+                   for ps in meta["parent_sessions"])
+
+
+def test_dag_beats_affinity_blind_on_handoff_hits():
+    """Sanity companion to benchmarks/dag_routing.py: on the same workload
+    the precedence-aware router reuses strictly more handoff prefix than
+    the affinity-blind graph scheduler."""
+    def kv(router_for):
+        cluster = SimCluster(n_agents=8, seed=0, max_new_tokens=3,
+                             engine_mode="analytic")
+        router = router_for(cluster)
+        spec = WorkloadSpec("dag_handoff", n_dialogues=12, seed=6)
+        out = EventSimulator(cluster, router, iter_dialogues(spec),
+                             arrivals=PoissonArrivals(rate=10.0, seed=7),
+                             batch_cap=8, batch_window=0.02,
+                             max_new_tokens=3).run()
+        assert out["dialogues_completed"] == 12
+        return out["kv_hit_rate"]
+
+    kv_iemas = kv(lambda c: IEMASRouter(c.agent_infos(), solver="dense",
+                                        n_hubs=2, warm_start=True))
+    kv_blind = kv(lambda c: GraphSchedulerRouter(c.agent_infos(), seed=0))
+    assert kv_iemas > kv_blind
+
+
+def test_run_workload_rejects_dag_scripts():
+    """The closed-loop round loop has no precedence scheduler; handing it
+    a DAG script must fail loudly, pointing at the event simulator."""
+    cluster, router = _fresh(seed=0)
+    dlg = generate(WorkloadSpec("dag_orchestrator", n_dialogues=2, seed=1))
+    with pytest.raises(TypeError, match="EventSimulator"):
+        run_workload(cluster, router, dlg, max_new_tokens=3)
+
+
+# ---------------------------------------------- property suite (sat 4) --
+@st.composite
+def _dag_cases(draw):
+    """Random topology + fault/incremental regime for one property run."""
+    n_steps = draw(st.integers(min_value=1, max_value=6))
+    parents = [()]
+    for k in range(1, n_steps):
+        n_par = draw(st.integers(min_value=1, max_value=min(k, 2)))
+        ps = {draw(st.integers(min_value=0, max_value=k - 1))
+              for _ in range(n_par)}
+        parents.append(tuple(sorted(ps)))
+    fail = draw(st.integers(min_value=0, max_value=1)) * 0.25
+    incremental = bool(draw(st.integers(min_value=0, max_value=1)))
+    seed = draw(st.integers(min_value=0, max_value=10))
+    return tuple(parents), fail, incremental, seed
+
+
+@settings(max_examples=12, deadline=None)
+@given(_dag_cases())
+def test_dag_property_unique_ids_and_precedence(case):
+    """Over random DAG shapes, fault rates and incremental on/off: the
+    batch and incremental paths together never emit a duplicate
+    request_id, never dispatch a step before all its parents completed,
+    and every workflow drains."""
+    parents, fail, incremental, seed = case
+    rng = np.random.default_rng(seed)
+    scripts = []
+    for d in range(2):
+        steps = [DagStep(k, ps, "worker" if ps else "orchestrator",
+                         DOMAINS[int(rng.integers(len(DOMAINS)))],
+                         _tok(rng, int(rng.integers(6, 30))))
+                 for k, ps in enumerate(parents)]
+        script = DagScript(f"prop-{d}", steps[0].domain, steps,
+                           float(rng.uniform(0.2, 0.8)))
+        validate_dag(script)
+        scripts.append(script)
+
+    cluster, router = _fresh(seed=seed, n_agents=3, fail=fail,
+                             quarantine_cooldown=1.0)
+    sim = EventSimulator(cluster, router, scripts,
+                         arrivals=PoissonArrivals(rate=20.0, seed=seed),
+                         batch_cap=6, batch_window=0.01,
+                         incremental=incremental, max_new_tokens=3)
+    seen_rids = []
+    orig_batch, orig_inc = router.route_batch, router.route_incremental
+
+    def batch(reqs, telem, free_slots=None):
+        seen_rids.extend(r.request_id for r in reqs)
+        return orig_batch(reqs, telem, free_slots=free_slots)
+
+    def inc(reqs, telem, free_slots=None):
+        seen_rids.extend(r.request_id for r in reqs)
+        return orig_inc(reqs, telem, free_slots=free_slots)
+
+    router.route_batch, router.route_incremental = batch, inc
+    orig_execute = cluster.execute
+
+    def checked(dec, rtr):
+        step = dec.request.meta.get("step_id")
+        if step is not None:
+            dst = sim.states[dec.request.dialogue_id]
+            assert all(p in dst.step_ctx
+                       for p in dst.script.steps[step].parents)
+        return orig_execute(dec, rtr)
+
+    cluster.execute = checked
+    out = sim.run()
+    assert out["dialogues_completed"] == 2 and not out["truncated"]
+    assert len(seen_rids) == len(set(seen_rids)), "request_id re-issued"

@@ -16,6 +16,7 @@ TIER1_MODULES = {
     "test_auction_dense",
     "test_auction_pallas",
     "test_column_market",
+    "test_dag_workload",
     "test_docs",
     "test_hoeffding",
     "test_hoeffding_batch",

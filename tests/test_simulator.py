@@ -3,13 +3,16 @@ run_workload, streaming admission, profiler attribution, 10k smoke.
 
 Everything here runs on ``engine_mode="analytic"`` clusters — deterministic
 virtual service times, so records can be compared bit-for-bit."""
+import json
+
 import numpy as np
 import pytest
 
 from repro.core import IEMASRouter
-from repro.serving import (EventSimulator, PoissonArrivals, RoutingProfiler,
-                           SimCluster, SyncArrivals, TraceArrivals,
-                           WorkloadSpec, generate, iter_dialogues,
+from repro.serving import (DialogueScript, EventSimulator, PoissonArrivals,
+                           RoutingProfiler, SimCluster, SyncArrivals,
+                           TraceArrivals, WorkloadSpec, generate,
+                           iter_dialogues, load_trace, make_arrivals,
                            run_workload)
 
 
@@ -279,6 +282,128 @@ def test_incremental_off_is_default_noop():
                          batch_cap=8, quantize=0.05, max_new_tokens=3).run()
     assert out["incremental_dispatched"] == 0
     assert router.accounts["incremental_routed"] == 0
+
+
+# ----------------------------------------- id/wait-clock regressions --
+def test_request_ids_unique_across_deferral_and_faults():
+    """ISSUE-7 satellite 1 regression (fails pre-fix): incremental offers
+    that get deferred must still burn their request id — under a mixed
+    deferral/fault trace no id may ever be re-issued to a different
+    request (router/profiler state is keyed by request_id)."""
+    cluster, router = _fresh(seed=4, fail=0.15)
+    seen_rids, deferred = [], [0]
+    orig_batch, orig_inc = router.route_batch, router.route_incremental
+
+    def batch(reqs, telem, free_slots=None):
+        seen_rids.extend(r.request_id for r in reqs)
+        return orig_batch(reqs, telem, free_slots=free_slots)
+
+    def inc(reqs, telem, free_slots=None):
+        seen_rids.extend(r.request_id for r in reqs)
+        decs = orig_inc(reqs, telem, free_slots=free_slots)
+        deferred[0] += sum(d.agent_id is None for d in decs)
+        return decs
+
+    router.route_batch, router.route_incremental = batch, inc
+    spec = WorkloadSpec("coqa_like", n_dialogues=10, seed=6)
+    out = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=PoissonArrivals(rate=6.0, seed=7),
+                         batch_cap=6, batch_window=0.03, incremental=True,
+                         max_new_tokens=3).run()
+    assert out["dialogues_completed"] == 10 and not out["truncated"]
+    # the trace really mixed the regimes: provisional dispatches AND
+    # deferred offers (the pre-fix id-reuse trigger) both happened
+    assert out["incremental_dispatched"] > 0
+    assert deferred[0] > 0
+    assert len(seen_rids) == len(set(seen_rids)), \
+        "a request_id was re-issued to a different request"
+
+
+def test_fault_retry_preserves_wait_clock():
+    """ISSUE-7 satellite 2 regression (fails pre-fix): a failed dispatch
+    re-queues its turn with the ORIGINAL ready time — resetting the clock
+    to the failure completion under-reports queueing wait across retries."""
+    cluster = SimCluster(n_agents=1, seed=0, max_new_tokens=3,
+                         engine_mode="analytic", quarantine_cooldown=0.5)
+    router = IEMASRouter(cluster.agent_infos(), solver="dense", n_hubs=1,
+                         warm_start=True)
+    rt = next(iter(cluster.agents.values()))
+    rt.down_until = 1.0   # first dispatch fails; the agent recovers at t=1
+    rng = np.random.default_rng(0)
+    dlg = [DialogueScript("w0", next(iter(rt.info.domains)),
+                          [rng.integers(1, 255, 20, dtype=np.int32)], 0.3)]
+    out = EventSimulator(cluster, router, dlg, arrivals=SyncArrivals(),
+                         batch_cap=2, quantize=0.05, max_new_tokens=3).run()
+    assert out["dialogues_completed"] == 1 and not out["truncated"]
+    [rec] = cluster.records
+    t_disp = rec.dispatched_at
+    assert t_disp >= 1.0 - 1e-9   # redispatch only after the recovery
+    # two dispatches accrued wait: the failed one waited 0 (ready and
+    # dispatched at t=0), the retry is charged from the original t=0 ready
+    # time -> mean wait is t_disp/2 exactly (pre-fix: (t_disp - 0.05)/2,
+    # the clock restarted at the failure completion)
+    assert out["queue_wait_mean_s"] == pytest.approx(t_disp / 2)
+
+
+# ------------------------------------------------- trace CLI wiring --
+def test_load_trace_and_make_arrivals(tmp_path):
+    """ISSUE-7 satellite 3: load_trace parses timestamp files (comments,
+    blanks, loud errors) and make_arrivals wires every process by name."""
+    p = tmp_path / "trace.txt"
+    p.write_text("# arrival trace\n0.0\n1.5  # second dialogue\n\n2.5\n")
+    ts = load_trace(p)
+    assert ts == (0.0, 1.5, 2.5)
+    arr = make_arrivals("trace", trace=ts)
+    assert isinstance(arr, TraceArrivals)
+    assert list(arr.times()) == [0.0, 1.5, 2.5]
+    assert isinstance(make_arrivals("sync"), SyncArrivals)
+    assert isinstance(make_arrivals("poisson", rate=2.0), PoissonArrivals)
+    with pytest.raises(ValueError, match="--trace-file"):
+        make_arrivals("trace")          # no timestamps supplied
+    with pytest.raises(KeyError, match=r"sync\|poisson\|trace"):
+        make_arrivals("uniform")
+    bad = tmp_path / "bad.txt"
+    bad.write_text("0.0\nnot-a-time\n")
+    with pytest.raises(ValueError, match=r"bad\.txt:2"):
+        load_trace(bad)
+    empty = tmp_path / "empty.txt"
+    empty.write_text("# nothing here\n\n")
+    with pytest.raises(ValueError, match="empty arrival trace"):
+        load_trace(empty)
+
+
+def test_trace_sorted_validation_error_path():
+    """An out-of-order trace fails loudly — directly and through a run."""
+    with pytest.raises(ValueError, match="non-decreasing"):
+        list(TraceArrivals((0.0, 2.0, 1.0)).times())
+    cluster, router = _fresh(seed=1)
+    dlg = generate(WorkloadSpec("hotpot_like", n_dialogues=3, seed=2))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        EventSimulator(cluster, router, dlg,
+                       arrivals=TraceArrivals((0.0, 2.0, 1.0)),
+                       batch_cap=4, batch_window=0.01,
+                       max_new_tokens=3).run()
+
+
+def test_serve_cli_trace_file(tmp_path, capsys, monkeypatch):
+    """--trace-file reaches the event simulator end to end (the arrivals
+    pace admission), and DAG workloads are rejected in closed mode."""
+    from repro.launch import serve
+    trace = tmp_path / "arrivals.txt"
+    trace.write_text("0.0\n0.4\n")
+    monkeypatch.setattr("sys.argv", [
+        "serve", "--sim-mode", "event", "--trace-file", str(trace),
+        "--workload", "hotpot_like", "--agents", "4", "--dialogues", "2",
+        "--solver", "dense", "--router", "iemas"])
+    serve.main()
+    out = json.loads(capsys.readouterr().out)
+    assert out["dialogues_arrived"] == 2
+    assert out["dialogues_completed"] == 2 and not out["truncated"]
+    # second dialogue cannot dispatch before its traced arrival at t=0.4
+    assert out["sim_time_s"] >= 0.4
+    monkeypatch.setattr("sys.argv", ["serve", "--workload", "dag_handoff"])
+    with pytest.raises(SystemExit):
+        serve.main()                     # DAG needs --sim-mode event
 
 
 # ------------------------------------------------------- 10k smoke --
