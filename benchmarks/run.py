@@ -26,6 +26,10 @@ reduced sizes used in CI-style runs).
                       handoff chains): precedence-aware IEMAS vs an
                       affinity-blind graph scheduler on welfare/request,
                       graph makespan and KV hit rate
+  adversarial  —    — strategic-agent stress sweep: misreport / collusion /
+                      free-rider / churn policies at fleet fractions
+                      0-0.5, ground-truth welfare + honest-agent revenue
+                      degradation, settlement-ledger replay audit per cell
 """
 from __future__ import annotations
 
@@ -70,6 +74,9 @@ def main() -> None:
     if want("dagrouting"):
         from benchmarks import dag_routing
         dag_routing.run(smoke=QUICK)
+    if want("adversarial"):
+        from benchmarks import adversarial
+        adversarial.run(smoke=QUICK)
     if want("fig3"):
         from benchmarks import fig3_predictor
         fig3_predictor.run()

@@ -57,7 +57,12 @@ class RouterConfig:
     ``predictor_backend`` is ``"numpy"`` (bit-exact vs scalar; the serving
     default) or ``"jax"`` (jit-staged descent, float32; retraces whenever
     the batch shape or a split-grown node pool changes shape, so it only
-    pays off under shape-stable batches — benchmark steady state)."""
+    pays off under shape-stable batches — benchmark steady state).
+
+    ``reputation`` enables the reputation-weighted priors (exactly neutral
+    without an audit channel, so leaving it on costs honest runs nothing);
+    ``audit_ledger`` attaches the append-only hash-chained settlement
+    ledger (`repro.core.ledger`) for replay audits."""
     solver: str = "mcmf"
     payment_mode: str = "warmstart"
     n_hubs: int = 1
@@ -67,6 +72,8 @@ class RouterConfig:
     use_kernel_affinity: bool = False
     batched: bool = True
     predictor_backend: str = "numpy"
+    reputation: bool = True
+    audit_ledger: bool = False
 
     def router_kwargs(self) -> dict:
         import dataclasses

@@ -3,7 +3,11 @@
 Cache-aware prediction (PrefixLedger + Hoeffding QoS), VCG/MCMF matching
 (run_auction), proxy hubs, and the Algorithm-1 router (IEMASRouter).
 """
+from repro.core.adversary import (AdversaryMix, AdversaryPolicy,
+                                  ChurnStormPolicy, CollusionRingPolicy,
+                                  CostMisreportPolicy, FreeRiderPolicy)
 from repro.core.affinity import PrefixLedger, lcp_length
+from repro.core.ledger import SettlementEntry, SettlementLedger
 from repro.core.auction import (AuctionResult, run_auction,
                                 run_sharded_auction, solve_allocation)
 from repro.core.solvers import (DenseAuctionResult, SolverBackend,

@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.affinity import PrefixLedger
 from repro.core.auction import SPILL_HUB, run_sharded_auction
 from repro.core.hub import (Hub, SlotPriceBook, cluster_agents, route_to_hub)
+from repro.core.ledger import SettlementLedger
 from repro.core.solvers import get_solver
 from repro.distributed.elastic import AgentSetVersion
 from repro.core.predictor import (PredictorInput, PredictorPool, QoSEstimate,
@@ -101,8 +102,14 @@ class CompletionObs:
     n_prompt: int
     n_hit: int              # cached prompt tokens reported by the engine
     n_gen: int
-    quality: float          # evaluator score in [0,1]
+    quality: float          # evaluator score in [0,1] as REPORTED
     failed: bool = False
+    # audited ground-truth quality (settlement audit channel): None means no
+    # audit ran and the report is taken at face value — bit-identical to the
+    # pre-audit router.  When set, value is settled at the audited score and
+    # the inflation residual max(0, quality - audit_quality) feeds the
+    # agent's reputation (repro.core.adversary).
+    audit_quality: float | None = None
 
 
 class IEMASRouter:
@@ -118,7 +125,8 @@ class IEMASRouter:
                  warm_start: bool = False, spill: bool = True,
                  use_kernel_affinity: bool = False,
                  batched: bool = True, predictor_backend: str = "numpy",
-                 predictor_kw: dict | None = None):
+                 predictor_kw: dict | None = None,
+                 reputation: bool = True, audit_ledger: bool = False):
         self.agents = list(agents)
         self.valuation = valuation or ValuationConfig()
         self.payment_mode = payment_mode
@@ -139,6 +147,10 @@ class IEMASRouter:
         self._refresh_ledger_cap()
         self.pool = PredictorPool({a.agent_id: a.prices for a in agents},
                                   **(predictor_kw or {}))
+        # reputation-weighted priors (on by default, exactly neutral without
+        # an audit channel) + the optional hash-chained settlement ledger
+        self.use_reputation = reputation
+        self.settlement = SettlementLedger() if audit_ledger else None
         self._pending: dict[str, tuple] = {}  # request_id -> (x, agent, req)
         self.accounts = {"payments": 0.0, "agent_costs": 0.0,
                          "welfare_realized": 0.0, "surplus": 0.0,
@@ -594,10 +606,32 @@ class IEMASRouter:
             # fault path: no payment, quarantine the agent; the request is
             # re-auctioned by the cluster layer.
             self.quarantine(agent.agent_id)
+            if self.settlement is not None:
+                rep = (self.pool[agent.agent_id].reputation
+                       if agent.agent_id in self.pool else 1.0)
+                self.settlement.append(
+                    kind="fault", request_id=request_id,
+                    agent_id=agent.agent_id,
+                    reputation_before=rep, reputation_after=rep)
+            return
+        if agent.agent_id not in self.pool:
+            # churn: the agent left between dispatch and completion — no
+            # predictor to teach and nothing to settle against (the cluster
+            # keeps the ground-truth record; accounts and ledger stay
+            # consistent by both skipping the orphan)
             return
         cost = observed_cost(agent.prices, obs.n_prompt, obs.n_hit, obs.n_gen)
-        self.pool[agent.agent_id].update(x, obs.latency, cost, obs.quality)
         pred = self.pool[agent.agent_id]
+        rep_before = pred.reputation
+        # settlement audit channel: when ground truth rides along, settle
+        # value at the audited quality and charge the inflation residual to
+        # the agent's reputation; a None channel reproduces the pre-audit
+        # router bit for bit (audited == reported, no residual update)
+        audited_q = (obs.quality if obs.audit_quality is None
+                     else float(obs.audit_quality))
+        if self.use_reputation and obs.audit_quality is not None:
+            pred.note_residual(max(0.0, obs.quality - audited_q))
+        pred.update(x, obs.latency, cost, obs.quality)
         pred.ewma_gen = 0.9 * pred.ewma_gen + 0.1 * obs.n_gen
         # eviction resync (Appendix C.2.2): the engine reported zero cached
         # tokens despite a confident ledger match -> the backend evicted its
@@ -610,9 +644,19 @@ class IEMASRouter:
             for ps in req.meta.get("parent_sessions", ()):
                 self.ledger.evict(agent.agent_id, ps)
         self.ledger.update(agent.agent_id, sess, req.tokens)
-        # market accounting (weak budget balance bookkeeping, Thm 4.3)
-        true_value = client_value(obs.quality, obs.latency, self.valuation)
+        # market accounting (weak budget balance bookkeeping, Thm 4.3);
+        # realized value settles at the AUDITED quality when available
+        true_value = client_value(audited_q, obs.latency, self.valuation)
         self.accounts["payments"] += payment
         self.accounts["agent_costs"] += cost
         self.accounts["surplus"] += payment - cost
         self.accounts["welfare_realized"] += float(true_value) - cost
+        if self.settlement is not None:
+            self.settlement.append(
+                kind="settle", request_id=request_id,
+                agent_id=agent.agent_id, payment=payment, cost=cost,
+                reported_quality=float(obs.quality),
+                audited_quality=float(audited_q),
+                true_value=float(true_value),
+                reputation_before=rep_before,
+                reputation_after=pred.reputation)

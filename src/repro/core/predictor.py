@@ -16,6 +16,17 @@ target), the structural prior and the ``w = min(1, n_obs/60)`` blend applied
 as arrays. Every operation mirrors ``AgentPredictor.predict`` double-for-
 double, so the batched path is a pure oracle-parity optimization
 (tests/test_predictor_batch.py).
+
+Reputation-weighted priors (adversarial stress, `repro.core.adversary`):
+each agent carries a multiplicative reputation in [0, 1], EWMA-updated from
+settled report-vs-audit quality-inflation residuals
+(``note_residual``).  Reputation scales the w-blend (``w_eff = w * rep``,
+leaning a distrusted agent's latency/cost back onto the structural prior)
+and multiplies predicted quality in both the warm and cold paths, so an
+inflating agent's Eq.-1 value decays instead of its lies poisoning the
+estimate.  At reputation exactly 1.0 — the honest fixed point, preserved
+exactly by the EWMA — every scaling is a bit-neutral multiply-by-one, so
+honest runs are bit-identical to the pre-reputation router.
 """
 from __future__ import annotations
 
@@ -61,26 +72,29 @@ def feature_tensor(prompt_lens, turns, affinity, *, router_inflight=0.0,
 
 
 def _blend_with_prior(X, *, lpt, lb, miss, hit, out, ewma, n_obs, warm_n,
-                      prior_q, raw_lat, raw_cst, raw_q):
+                      prior_q, rep, raw_lat, raw_cst, raw_q):
     """Structural cold-start prior + ``w = min(1, n_obs/60)`` tree blend as
     array ops — the single vectorized transcription of the scalar
     ``AgentPredictor.predict`` math (kept bit-equivalent: same op order,
     same ``trunc``/``maximum``/``clip`` semantics), shared by
     ``predict_rows`` (scalar per-agent params) and ``predict_matrix``
-    ((m,) per-agent param arrays broadcast against (n, m) features)."""
+    ((m,) per-agent param arrays broadcast against (n, m) features).
+    ``rep`` is the reputation weight: it scales the tree-blend weight and
+    multiplies quality in both warm and cold branches (exactly neutral at
+    1.0, the honest fixed point)."""
     pl, aff, util = X[..., 0], X[..., 2], X[..., 8]
     uncached = pl * (1.0 - aff)
     prior_lat = (lb + lpt * uncached) * (1.0 + util)
     npmt = np.trunc(pl)  # == int(prompt_len) for non-negative lengths
     nhit = aff * npmt
     prior_cst = miss * (npmt - nhit) + hit * nhit + out * ewma
-    w = np.minimum(1.0, n_obs / 60.0)
+    w = np.minimum(1.0, n_obs / 60.0) * rep
     lat = (1 - w) * prior_lat + w * np.maximum(0.0, raw_lat)
     cst = (1 - w) * prior_cst + w * np.maximum(0.0, raw_cst)
     cold = n_obs < warm_n
     return (np.where(cold, prior_lat, lat),
             np.where(cold, prior_cst, cst),
-            np.where(cold, prior_q, np.clip(raw_q, 0.0, 1.0)))
+            np.where(cold, prior_q * rep, np.clip(raw_q, 0.0, 1.0) * rep))
 
 
 @dataclass
@@ -122,7 +136,8 @@ class AgentPredictor:
 
     def __init__(self, agent_id: str, prices: TokenPrices, *,
                  warm_n: int = 6, prior_latency_per_tok: float = 1e-3,
-                 prior_latency_base: float = 0.02, prior_quality: float = 0.6):
+                 prior_latency_base: float = 0.02, prior_quality: float = 0.6,
+                 rep_alpha: float = 0.25):
         self.agent_id = agent_id
         self.prices = prices
         self.lat = HoeffdingTreeRegressor(N_FEATURES)
@@ -134,26 +149,45 @@ class AgentPredictor:
         self.prior_lb = prior_latency_base
         self.prior_q = prior_quality
         self.ewma_gen = 32.0  # expected generation length
+        self.reputation = 1.0  # report-trust weight in [0, 1]; 1.0 = honest
+        self.rep_alpha = rep_alpha
+
+    def note_residual(self, residual: float) -> None:
+        """Fold one settled report-vs-audit residual into reputation.
+
+        ``residual`` is the quality inflation ``max(0, reported - audited)``
+        in [0, 1]; the EWMA target is ``1 - residual``.  A zero residual
+        leaves a 1.0 reputation at exactly 1.0 (``0.75*1.0 + 0.25*1.0``
+        is exact in IEEE arithmetic), so honest fleets stay bit-identical
+        with or without the audit channel attached.
+        """
+        target = 1.0 - min(1.0, max(0.0, float(residual)))
+        self.reputation = ((1.0 - self.rep_alpha) * self.reputation
+                           + self.rep_alpha * target)
 
     def predict(self, x: PredictorInput) -> QoSEstimate:
-        """Eq.-5 QoS estimate: structural prior blended into tree output."""
+        """Eq.-5 QoS estimate: structural prior blended into tree output,
+        scaled by the agent's reputation (neutral at 1.0)."""
         uncached = x.prompt_len * (1.0 - x.affinity)
         prior_lat = (self.prior_lb + self.prior_lpt * uncached) * (1.0 + x.utilization)
         prior_cst = predicted_cost(self.prices, int(x.prompt_len), x.affinity,
                                    self.ewma_gen)
+        rep = self.reputation
         if self.n_obs < self.warm_n:
-            return QoSEstimate(prior_lat, prior_cst, self.prior_q)
+            return QoSEstimate(prior_lat, prior_cst, self.prior_q * rep)
         v = x.vector()
         # blend structural prior -> tree as evidence accumulates: the Eq.6
         # cost prior is nearly exact given affinity, so a barely-trained tree
-        # must not displace it abruptly (tests/test_system.py convergence)
-        w = min(1.0, self.n_obs / 60.0)
+        # must not displace it abruptly (tests/test_system.py convergence).
+        # Reputation scales the blend: a distrusted agent's self-reported
+        # telemetry counts for less, and its quality is discounted outright.
+        w = min(1.0, self.n_obs / 60.0) * rep
         lat = (1 - w) * prior_lat + w * max(0.0, self.lat.predict_one(v))
         cst = (1 - w) * prior_cst + w * max(0.0, self.cost.predict_one(v))
         return QoSEstimate(
             latency=lat,
             cost=cst,
-            quality=float(np.clip(self.quality.predict_one(v), 0.0, 1.0)),
+            quality=float(np.clip(self.quality.predict_one(v), 0.0, 1.0)) * rep,
         )
 
     def predict_rows(self, X, backend: str = "numpy"):
@@ -168,7 +202,7 @@ class AgentPredictor:
             X, lpt=self.prior_lpt, lb=self.prior_lb, miss=self.prices.miss,
             hit=self.prices.hit, out=self.prices.out, ewma=self.ewma_gen,
             n_obs=self.n_obs, warm_n=self.warm_n,
-            prior_q=np.full(X.shape[0], self.prior_q),
+            prior_q=np.full(X.shape[0], self.prior_q), rep=self.reputation,
             raw_lat=self.lat.predict_batch(X, backend),
             raw_cst=self.cost.predict_batch(X, backend),
             raw_q=self.quality.predict_batch(X, backend))
@@ -215,6 +249,18 @@ class PredictorPool:
     def agents(self):
         """Agent ids currently in the pool."""
         return list(self._preds)
+
+    def note_residual(self, agent_id: str, residual: float) -> None:
+        """Route one settled quality-inflation residual into the agent's
+        reputation (no-op for unknown/removed agents).  Reputation lives
+        blend-side, not in the trees, so no stacked-forest invalidation."""
+        pred = self._preds.get(agent_id)
+        if pred is not None:
+            pred.note_residual(residual)
+
+    def reputations(self) -> dict[str, float]:
+        """Current reputation weight per agent (1.0 = fully trusted)."""
+        return {aid: p.reputation for aid, p in self._preds.items()}
 
     # ---------------- batched Phase-1 scoring ----------------
     def _stacked_forest(self, name: str, agent_ids: list[str]):
@@ -282,4 +328,5 @@ class PredictorPool:
             n_obs=np.array([p.n_obs for p in preds], dtype=np.float64),
             warm_n=np.array([p.warm_n for p in preds], dtype=np.float64),
             prior_q=np.array([p.prior_q for p in preds]),
+            rep=np.array([p.reputation for p in preds]),
             raw_lat=raw["lat"], raw_cst=raw["cost"], raw_q=raw["quality"])

@@ -21,6 +21,7 @@ import argparse
 import json
 
 from repro.core import IEMASRouter
+from repro.core.adversary import POLICIES, AdversaryMix
 from repro.core.baselines import BASELINES
 from repro.core.solvers import available_solvers
 from repro.serving import (DAG_WORKLOADS, EventSimulator, RoutingProfiler,
@@ -31,13 +32,15 @@ from repro.serving import (DAG_WORKLOADS, EventSimulator, RoutingProfiler,
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
                  solver: str = "mcmf", warm_start: bool = False,
                  spill: bool = True, batched: bool = True,
-                 predictor_backend: str = "numpy", seed: int = 0):
+                 predictor_backend: str = "numpy", seed: int = 0,
+                 reputation: bool = True, audit_ledger: bool = False):
     """Build the IEMAS router (or a named baseline) over ``infos``."""
     if name == "iemas":
         return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
                            solver=solver, warm_start=warm_start, spill=spill,
                            batched=batched,
-                           predictor_backend=predictor_backend)
+                           predictor_backend=predictor_backend,
+                           reputation=reputation, audit_ledger=audit_ledger)
     return BASELINES[name](infos, seed=seed)
 
 
@@ -99,6 +102,25 @@ def main():
                          "batched Phase-1 tensor path")
     ap.add_argument("--predictor-backend", default="numpy",
                     choices=["numpy", "jax"])
+    ap.add_argument("--adversary", default="none",
+                    choices=["none", *POLICIES],
+                    help="inject a strategic-agent population "
+                         "(repro.core.adversary): published-profile/QoS "
+                         "misreports or membership churn, on a seeded "
+                         "fraction of the fleet")
+    ap.add_argument("--adversary-fraction", type=float, default=0.25,
+                    help="fleet fraction assigned the adversary policy")
+    ap.add_argument("--adversary-theta", type=float, default=0.4,
+                    help="adversary intensity (price/quality misreport "
+                         "magnitude)")
+    ap.add_argument("--audit-ledger", action="store_true",
+                    help="attach the append-only hash-chained settlement "
+                         "ledger (repro.core.ledger); the report includes "
+                         "verify_chain + the replay audit")
+    ap.add_argument("--no-reputation", action="store_true",
+                    help="disable reputation-weighted priors (the audit "
+                         "residual no longer decays an inflating agent's "
+                         "predicted QoS)")
     ap.add_argument("--fail-prob", type=float, default=0.0)
     ap.add_argument("--straggle-prob", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -119,18 +141,26 @@ def main():
 
     engine_mode = args.engine_mode or (
         "analytic" if args.sim_mode == "event" else "real")
+    mix = None
+    if args.adversary != "none":
+        mix = AdversaryMix(policy=args.adversary,
+                           fraction=args.adversary_fraction,
+                           theta=args.adversary_theta, seed=args.seed + 3)
     cluster = SimCluster(n_agents=args.agents, seed=args.seed,
                          fail_prob=args.fail_prob,
                          straggle_prob=args.straggle_prob,
                          warmup=not args.no_warmup and engine_mode == "real",
-                         engine_mode=engine_mode)
+                         engine_mode=engine_mode,
+                         adversary_mix=mix)
     router = build_router(args.router, cluster.agent_infos(), n_hubs=args.hubs,
                           payment_mode=args.payment_mode, solver=args.solver,
                           warm_start=args.warm_start,
                           spill=not args.no_spill,
                           batched=not args.scalar_phase1,
                           predictor_backend=args.predictor_backend,
-                          seed=args.seed)
+                          seed=args.seed,
+                          reputation=not args.no_reputation,
+                          audit_ledger=args.audit_ledger)
     spec = WorkloadSpec(args.workload, n_dialogues=args.dialogues,
                         seed=args.seed + 1)
     if args.workload in DAG_WORKLOADS and args.sim_mode != "event":
@@ -155,6 +185,13 @@ def main():
         metrics = run_workload(cluster, router, generate(spec))
     if hasattr(router, "accounts"):
         metrics["accounts"] = dict(router.accounts)
+    if mix is not None:
+        metrics["adversaries"] = sorted(cluster.adversaries)
+        if hasattr(router, "pool"):
+            metrics["reputation"] = router.pool.reputations()
+    if getattr(router, "settlement", None) is not None:
+        metrics["ledger"] = router.settlement.audit(router.accounts)
+        metrics["ledger"]["head"] = router.settlement.head
     print(json.dumps(metrics, indent=2, default=float))
     if args.json:
         with open(args.json, "w") as f:

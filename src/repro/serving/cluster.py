@@ -31,13 +31,14 @@ import heapq
 import warnings
 import zlib
 from collections import Counter, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import numpy as np
 
 from repro.configs.iemas_cluster import (DEFAULT_ROUTER, MODEL_CLASSES,
                                          AgentProfile, RouterConfig,
                                          agent_profiles)
+from repro.core.adversary import AdversaryMix, AdversaryPolicy
 from repro.core.mechanism import AgentInfo, CompletionObs, IEMASRouter, Request
 from repro.core.pricing import TokenPrices
 from repro.serving.engine import AgentEngine
@@ -104,7 +105,8 @@ class SimCluster:
                  max_new_tokens: int = 6, fail_prob: float = 0.0,
                  straggle_prob: float = 0.0, cache_slots: int | None = None,
                  quarantine_cooldown: float = 30.0, warmup: bool = False,
-                 engine_mode: str = "real"):
+                 engine_mode: str = "real",
+                 adversary_mix: AdversaryMix | None = None):
         if engine_mode not in ("real", "analytic"):
             raise ValueError(f"engine_mode must be real|analytic, "
                              f"got {engine_mode!r}")
@@ -121,6 +123,12 @@ class SimCluster:
         for prof in agent_profiles(n_agents, seed=seed):
             self._add_runtime(prof, fail_prob, straggle_prob, cache_slots,
                               max_new_tokens)
+        # strategic-agent injection (repro.core.adversary): policies keyed by
+        # agent id mutate published profiles / Phase-4 reports / membership;
+        # an empty dict (no mix, or fraction 0) is bit-identical honest play
+        self.adversaries: dict[str, AdversaryPolicy] = (
+            adversary_mix.assign([rt.info for rt in self.agents.values()])
+            if adversary_mix is not None else {})
         if warmup:
             for rt in self.agents.values():
                 rt.engine.warmup()
@@ -156,8 +164,17 @@ class SimCluster:
 
     # ---------------- elastic membership ----------------
     def agent_infos(self) -> list[AgentInfo]:
-        """Published AgentInfo profiles of every live runtime."""
-        return [rt.info for rt in self.agents.values()]
+        """Published AgentInfo profiles of every live runtime.
+
+        Strategic agents publish through their policy (a mutated COPY —
+        e.g. misreported prices); everyone else publishes their true
+        ``rt.info`` object itself, preserving the seed behavior where the
+        router and cluster share one AgentInfo instance."""
+        out = []
+        for aid, rt in self.agents.items():
+            pol = self.adversaries.get(aid)
+            out.append(pol.publish(rt.info) if pol is not None else rt.info)
+        return out
 
     def add_agent(self, profile: AgentProfile, router=None) -> None:
         """Elastic scale-out: spin up a runtime (and tell the router)."""
@@ -170,6 +187,16 @@ class SimCluster:
         self.agents.pop(agent_id, None)
         if router is not None and hasattr(router, "remove_agent"):
             router.remove_agent(agent_id)
+
+    def adversary_tick(self, router) -> None:
+        """Give every strategic agent its per-round action hook (churn
+        policies flap membership/capacity/quarantine here).  A no-op when
+        no adversaries are assigned, so honest serving loops keep their
+        bit-exact lockstep parity."""
+        if not self.adversaries:
+            return
+        for aid, pol in list(self.adversaries.items()):
+            pol.tick(self, router, aid)
 
     # ---------------- serving rounds ----------------
     def free_slots(self) -> dict:
@@ -225,6 +252,13 @@ class SimCluster:
                             output_tokens=result.output_tokens)
         obs = CompletionObs(latency, result.n_prompt, result.n_hit,
                             result.n_gen, quality)
+        if self.adversaries:
+            # adversarial run: every Phase-4 report flows through a policy
+            # (strategic agents may lie; honest ones attach the audit truth,
+            # whose zero residual is reputation-neutral by construction)
+            pol = self.adversaries.get(rt.info.agent_id)
+            obs = (pol.report(obs, quality) if pol is not None
+                   else replace(obs, audit_quality=quality))
         self.telemetry.on_busy(rt.info.agent_id, total)
         if self.profiler is not None:
             # virtual engine seconds — the overhead-attribution denominator
@@ -400,6 +434,8 @@ def run_workload(cluster: SimCluster, router, dialogues: list[DialogueScript],
             if st["turn"] < len(script.turns):
                 pending_next[did] = script.turns[st["turn"]]
                 ready.append(did)
+        # strategic-agent round hook (no-op without an adversary mix)
+        cluster.adversary_tick(router)
         if not pending_next and not any(st["busy"] for st in state.values()):
             break
         if on_round is not None:

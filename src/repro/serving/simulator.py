@@ -597,6 +597,12 @@ class EventSimulator:
                 # empty_route_calls invariant
                 self._rounds += 1
                 self._route_step()
+                # strategic-agent round hook (repro.core.adversary): churn
+                # policies flap membership here; a no-op without a mix, so
+                # honest runs keep bit-exact lockstep parity vs run_workload
+                tick = getattr(self.cluster, "adversary_tick", None)
+                if tick is not None:
+                    tick(self.router)
                 if self.on_round is not None:
                     self.on_round(self._rounds, self.cluster)
                 if self._rounds >= self.max_rounds:

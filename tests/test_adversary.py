@@ -1,0 +1,184 @@
+"""Adversary layer: seeded assignment, report-only mutation, reputation
+countermeasure, fraction-0 bit-neutrality, and the settlement ledger's
+hash-chain / tamper / replay guarantees."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.iemas_cluster import RouterConfig
+from repro.core.adversary import (POLICIES, AdversaryMix, AdversaryPolicy,
+                                  CollusionRingPolicy, CostMisreportPolicy,
+                                  FreeRiderPolicy)
+from repro.core.ledger import GENESIS, SettlementLedger
+from repro.core.mechanism import CompletionObs
+from repro.core.predictor import AgentPredictor
+from repro.core.pricing import TokenPrices
+from repro.serving import SimCluster, make_router, run_workload
+from repro.serving.workload import WorkloadSpec, generate
+
+
+def _run(n_dialogues=6, seed=0, mix=None, **router_kw):
+    cluster = SimCluster(6, seed=seed, engine_mode="analytic",
+                         adversary_mix=mix)
+    router = make_router(cluster, RouterConfig(
+        solver="dense", n_hubs=2, warm_start=True, **router_kw))
+    spec = WorkloadSpec("coqa_like", n_dialogues=n_dialogues, seed=seed + 1)
+    metrics = run_workload(cluster, router, generate(spec), max_new_tokens=4)
+    return cluster, router, metrics
+
+
+# --------------------------- AdversaryMix ---------------------------------
+
+def test_mix_fraction_zero_assigns_nobody():
+    cluster = SimCluster(5, seed=0, engine_mode="analytic")
+    infos = cluster.agent_infos()
+    for policy in POLICIES:
+        assert AdversaryMix(policy=policy, fraction=0.0).assign(infos) == {}
+
+
+def test_mix_assignment_deterministic_in_seed():
+    cluster = SimCluster(8, seed=1, engine_mode="analytic")
+    infos = cluster.agent_infos()
+    a = AdversaryMix(policy="misreport", fraction=0.5, seed=9).assign(infos)
+    b = AdversaryMix(policy="misreport", fraction=0.5, seed=9).assign(infos)
+    c = AdversaryMix(policy="misreport", fraction=0.5, seed=10).assign(infos)
+    assert sorted(a) == sorted(b)
+    assert len(a) == 4
+    # a different seed is allowed to pick a different subset; sizes match
+    assert len(c) == 4
+
+
+def test_mix_unknown_policy_rejected():
+    with pytest.raises(ValueError, match="unknown adversary policy"):
+        AdversaryMix(policy="bribery").assign([])
+
+
+def test_collusion_ring_shares_one_instance_and_a_domain():
+    cluster = SimCluster(8, seed=2, engine_mode="analytic")
+    infos = cluster.agent_infos()
+    adv = AdversaryMix(policy="collusion", fraction=0.25, seed=0).assign(infos)
+    policies = list(adv.values())
+    assert len(adv) == 2
+    assert all(p is policies[0] for p in policies)  # one shared cartel
+    assert sorted(adv) == sorted(policies[0].members)
+    # the ring seeds from the largest domain cluster: its first two members
+    # share at least one domain
+    doms = {a.agent_id: set(a.domains) for a in infos}
+    ring = list(policies[0].members)
+    assert doms[ring[0]] & doms[ring[1]]
+
+
+# ----------------------- report-only mutation ------------------------------
+
+def test_misreport_publishes_a_deflated_copy():
+    cluster = SimCluster(4, seed=3, engine_mode="analytic")
+    rt = next(iter(cluster.agents.values()))
+    true_prices = rt.info.prices
+    pol = CostMisreportPolicy(theta=0.5)
+    published = pol.publish(rt.info)
+    assert published is not rt.info  # a copy, never the runtime's object
+    assert published.prices.out == pytest.approx(true_prices.out * 0.5)
+    assert rt.info.prices is true_prices  # ground truth untouched
+    inflated = CollusionRingPolicy(theta=0.5).publish(rt.info)
+    assert inflated.prices.miss == pytest.approx(true_prices.miss * 1.5)
+
+
+def test_freerider_inflates_report_but_audit_carries_truth():
+    obs = CompletionObs(latency=0.1, n_prompt=10, n_hit=0, n_gen=4,
+                        quality=0.7)
+    out = FreeRiderPolicy(theta=0.4).report(obs, true_quality=0.7)
+    assert out.quality == pytest.approx(1.0)  # 0.7 + 0.4 clipped
+    assert out.audit_quality == pytest.approx(0.7)
+    # the honest base policy reports truthfully with a zero residual
+    base = AdversaryPolicy().report(obs, true_quality=0.7)
+    assert base.quality == pytest.approx(0.7)
+    assert base.audit_quality == pytest.approx(0.7)
+
+
+# -------------------- reputation countermeasure ----------------------------
+
+def test_note_residual_ewma_and_exact_fixed_point():
+    p = AgentPredictor("a0", TokenPrices(1e-6, 1e-7, 2e-6), rep_alpha=0.25)
+    assert p.reputation == 1.0
+    p.note_residual(0.0)
+    assert p.reputation == 1.0  # zero residual is an EXACT fixed point
+    p.note_residual(0.4)
+    assert p.reputation == pytest.approx(0.75 * 1.0 + 0.25 * 0.6)
+    p.note_residual(2.0)  # residual clips to 1 -> target 0
+    assert p.reputation == pytest.approx(0.75 * 0.9)
+
+
+def test_freerider_reputation_decays_only_for_the_liar():
+    # seed chosen so a free-rider both wins traffic and draws a quality-0
+    # outcome (the Bernoulli evaluator only exposes inflation when the true
+    # draw is below the inflated report)
+    mix = AdversaryMix(policy="freerider", fraction=0.34, theta=0.5, seed=9)
+    cluster, router, _ = _run(n_dialogues=16, seed=9, mix=mix)
+    adv = set(cluster.adversaries)
+    assert adv
+    reps = router.pool.reputations()
+    # honest agents keep reputation at EXACTLY 1.0 (bit-level fixed point)
+    for aid, rep in reps.items():
+        if aid not in adv:
+            assert rep == 1.0, aid
+    # at least one free-rider won traffic and got caught inflating
+    assert min(reps[a] for a in adv) < 1.0
+
+
+def test_fraction_zero_mix_is_bit_identical_to_no_mix():
+    _, r_plain, m_plain = _run(seed=7, audit_ledger=True)
+    mix = AdversaryMix(policy="misreport", fraction=0.0, seed=7)
+    _, r_mix, m_mix = _run(seed=7, mix=mix, audit_ledger=True)
+    assert m_plain == m_mix
+    assert r_plain.accounts == r_mix.accounts
+    assert r_plain.settlement.head == r_mix.settlement.head  # same chain
+
+
+# --------------------------- ledger ----------------------------------------
+
+def test_ledger_chain_verifies_and_detects_tampering():
+    led = SettlementLedger()
+    assert led.head == GENESIS
+    led.append(kind="settle", request_id="r1", agent_id="a1", payment=2.0,
+               cost=1.0, reported_quality=0.9, audited_quality=0.9,
+               true_value=3.0, reputation_before=1.0, reputation_after=1.0)
+    led.append(kind="fault", request_id="r2", agent_id="a2",
+               reputation_before=1.0, reputation_after=1.0)
+    assert led.verify_chain()
+    assert led.entries[1].prev_hash == led.entries[0].entry_hash
+    # tamper with a settled payment: the recomputed hash must not match
+    led.entries[0] = dataclasses.replace(led.entries[0], payment=99.0)
+    assert not led.verify_chain()
+    with pytest.raises(ValueError, match="chain"):
+        led.audit({"payments": 99.0, "agent_costs": 1.0, "surplus": 98.0,
+                   "welfare_realized": 2.0})
+
+
+def test_ledger_replay_matches_accounts_under_adversaries_and_faults():
+    mix = AdversaryMix(policy="misreport", fraction=0.34, seed=11)
+    cluster = SimCluster(6, seed=11, engine_mode="analytic",
+                         adversary_mix=mix, fail_prob=0.2)
+    router = make_router(cluster, RouterConfig(
+        solver="dense", n_hubs=2, warm_start=True, audit_ledger=True))
+    spec = WorkloadSpec("coqa_like", n_dialogues=8, seed=12)
+    run_workload(cluster, router, generate(spec), max_new_tokens=4)
+    balances = router.settlement.audit(router.accounts)
+    assert balances["faults"] > 0
+    assert balances["payments"] == router.accounts["payments"]
+    assert balances["surplus"] == router.accounts["surplus"]
+    # per-agent revenue recomputed from the chain covers every settled payee
+    rev = router.settlement.revenue_by_agent()
+    assert sum(rev.values()) == pytest.approx(balances["payments"])
+
+
+def test_audit_rejects_diverged_accounts():
+    led = SettlementLedger()
+    led.append(kind="settle", request_id="r1", agent_id="a1", payment=2.0,
+               cost=1.0, reported_quality=1.0, audited_quality=1.0,
+               true_value=2.5, reputation_before=1.0, reputation_after=1.0)
+    good = {"payments": 2.0, "agent_costs": 1.0, "surplus": 1.0,
+            "welfare_realized": 1.5}
+    assert led.audit(good)["settled"] == 1
+    with pytest.raises(ValueError, match="payments"):
+        led.audit({**good, "payments": 2.5})

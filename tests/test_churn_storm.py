@@ -1,0 +1,127 @@
+"""Churn-storm stress: membership/capacity/quarantine flapping under the
+event-driven simulator — price-book cold-start correctness, exactly-once
+settlement, global request-id uniqueness, and the orphan-completion guard."""
+import numpy as np
+
+from repro.configs.iemas_cluster import RouterConfig
+from repro.core.adversary import AdversaryMix, ChurnStormPolicy
+from repro.core.mechanism import CompletionObs, Request
+from repro.serving import (EventSimulator, SimCluster, iter_dialogues,
+                           make_arrivals, make_router, run_workload)
+from repro.serving.workload import WorkloadSpec, generate
+
+
+def _storm_mix(seed=13, fraction=0.5, period=2):
+    return AdversaryMix(policy="churn", fraction=fraction, theta=0.4,
+                        seed=seed, churn_period=period)
+
+
+def _event_run(mix=None, *, n_agents=8, n_dialogues=12, seed=13,
+               fail_prob=0.0, incremental=False):
+    cluster = SimCluster(n_agents, seed=seed, engine_mode="analytic",
+                         fail_prob=fail_prob, adversary_mix=mix)
+    router = make_router(cluster, RouterConfig(
+        solver="dense", n_hubs=2, warm_start=True, audit_ledger=True))
+    spec = WorkloadSpec("coqa_like", n_dialogues=n_dialogues, seed=seed + 1)
+    sim = EventSimulator(cluster, router, iter_dialogues(spec),
+                         arrivals=make_arrivals("poisson", rate=40.0,
+                                                seed=seed + 2),
+                         batch_cap=8, incremental=incremental,
+                         max_inflight=64, lean=True)
+    metrics = sim.run()
+    return cluster, router, metrics
+
+
+def test_churn_storm_run_completes_with_exactly_once_settlement():
+    """A flapping fleet (join/leave/quarantine/capacity every other tick on
+    half the agents) must still drain the workload, and every request must
+    appear in the settlement ledger at most once."""
+    cluster, router, metrics = _event_run(_storm_mix(), fail_prob=0.1)
+    assert cluster.records  # work actually flowed through the storm
+    led = router.settlement
+    assert led.verify_chain()
+    balances = led.audit(router.accounts)  # replay == books, bit-exact
+    # exactly-once: no request id is ever settled or faulted twice (retries
+    # burn fresh ids; orphans are skipped, never double-booked)
+    ids = [e.request_id for e in led.entries]
+    assert len(ids) == len(set(ids))
+    settled_ids = {e.request_id for e in led.entries if e.kind == "settle"}
+    fault_ids = {e.request_id for e in led.entries if e.kind == "fault"}
+    assert not settled_ids & fault_ids
+    # completions never exceed matched dispatches (orphans may skip some)
+    assert balances["settled"] + balances["faults"] <= \
+        router.accounts["matched"]
+
+
+def test_churn_flips_cold_start_the_price_book():
+    """Every membership/capacity flip invalidates the warm-start key, so a
+    storm run must cold-start the SlotPriceBook strictly more often than
+    the identical honest run."""
+    def cold_starts(mix):
+        cluster = SimCluster(8, seed=21, engine_mode="analytic",
+                             adversary_mix=mix)
+        router = make_router(cluster, RouterConfig(
+            solver="dense", n_hubs=2, warm_start=True))
+        spec = WorkloadSpec("coqa_like", n_dialogues=12, seed=22)
+        run_workload(cluster, router, generate(spec), max_new_tokens=4)
+        return router.price_book.stats()
+
+    honest = cold_starts(None)
+    storm = cold_starts(_storm_mix(seed=21))
+    assert honest["warm_hits"] > 0  # the steady state actually warm-starts
+    assert storm["cold_starts"] > honest["cold_starts"]
+
+
+def test_request_ids_globally_unique_under_incremental_and_retry():
+    """Ids burn monotonically: across batch routing, incremental offers,
+    fault retries and churn, no dispatched request id is ever reused."""
+    cluster, router, _ = _event_run(_storm_mix(), fail_prob=0.15,
+                                    incremental=True)
+    ids = [r.request.request_id for r in cluster.records]
+    assert ids
+    assert len(ids) == len(set(ids))
+    led_ids = [e.request_id for e in router.settlement.entries]
+    assert len(led_ids) == len(set(led_ids))
+
+
+def test_churn_tick_actions_cover_the_policy_space():
+    """Driven directly, a storm policy eventually exercises all three
+    actions (capacity flap, leave+rejoin, quarantine) and always returns
+    from quarantine one cycle later."""
+    cluster = SimCluster(6, seed=31, engine_mode="analytic")
+    router = make_router(cluster, RouterConfig(solver="dense", n_hubs=2))
+    aid = cluster.agent_infos()[0].agent_id
+    pol = ChurnStormPolicy(theta=0.4, period=1, seed=2)
+    n_before = len(router.agents)
+    was_quarantined = False
+    for _ in range(40):
+        pol.tick(cluster, router, aid)
+        if aid in router.quarantined:
+            was_quarantined = True
+        assert len(router.agents) == n_before  # leave+rejoin nets to zero
+        assert aid in cluster.agents
+    assert was_quarantined
+    assert aid not in router.quarantined or pol._quarantined
+
+
+def test_orphan_completion_is_skipped_not_crashed():
+    """An agent that leaves between dispatch and completion: the router
+    must drop the orphan completion without touching accounts or ledger."""
+    cluster = SimCluster(4, seed=41, engine_mode="analytic")
+    router = make_router(cluster, RouterConfig(
+        solver="dense", n_hubs=1, audit_ledger=True))
+    req = Request(request_id="r-orphan", dialogue_id="d0",
+                  tokens=np.arange(12, dtype=np.int32), turn=0,
+                  domain=cluster.agent_infos()[0].domains[0],
+                  max_new_tokens=4, meta={"difficulty": 0.2})
+    telem = cluster.telemetry.snapshot(cluster.now)
+    dec = router.route_batch([req], telem,
+                             free_slots=cluster.free_slots())[0]
+    assert dec.agent_id is not None
+    router.remove_agent(dec.agent_id)  # agent leaves mid-flight
+    before = dict(router.accounts)
+    n_entries = len(router.settlement.entries)
+    router.on_complete("r-orphan", CompletionObs(
+        latency=0.1, n_prompt=12, n_hit=0, n_gen=4, quality=1.0))
+    assert router.accounts == before
+    assert len(router.settlement.entries) == n_entries

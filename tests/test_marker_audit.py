@@ -11,10 +11,12 @@ TESTS_DIR = Path(__file__).parent
 
 # modules vetted to run in tier-1 (keep the combined suite < ~5 min)
 TIER1_MODULES = {
+    "test_adversary",
     "test_affinity",
     "test_auction",
     "test_auction_dense",
     "test_auction_pallas",
+    "test_churn_storm",
     "test_column_market",
     "test_dag_workload",
     "test_docs",
@@ -30,6 +32,7 @@ TIER1_MODULES = {
     "test_sharding",
     "test_simulator",
     "test_system",
+    "test_truthfulness",
 }
 
 SLOW_RE = re.compile(r"^pytestmark\s*=.*pytest\.mark\.slow", re.MULTILINE)
