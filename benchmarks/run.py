@@ -30,6 +30,10 @@ reduced sizes used in CI-style runs).
                       free-rider / churn policies at fleet fractions
                       0-0.5, ground-truth welfare + honest-agent revenue
                       degradation, settlement-ledger replay audit per cell
+  fusedrouting —    — fused device-resident routing step vs the staged
+                      pipeline at 16->128 agents on one hub: steady-state
+                      routing overhead, host-transfer / mid-sync / retrace
+                      counters, lockstep decision parity
 """
 from __future__ import annotations
 
@@ -77,6 +81,9 @@ def main() -> None:
     if want("adversarial"):
         from benchmarks import adversarial
         adversarial.run(smoke=QUICK)
+    if want("fusedrouting"):
+        from benchmarks import fused_routing
+        fused_routing.run(smoke=QUICK)
     if want("fig3"):
         from benchmarks import fig3_predictor
         fig3_predictor.run()

@@ -62,7 +62,13 @@ class RouterConfig:
     ``reputation`` enables the reputation-weighted priors (exactly neutral
     without an audit channel, so leaving it on costs honest runs nothing);
     ``audit_ledger`` attaches the append-only hash-chained settlement
-    ledger (`repro.core.ledger`) for replay audits."""
+    ledger (`repro.core.ledger`) for replay audits.
+
+    ``fused=True`` runs the whole per-batch routing step — ledger gather,
+    Eq.-4 affinity, Eq.-5 prediction, Eq.-1 values and the column auction —
+    as ONE device-resident jitted program (`repro.core.routing_fused`);
+    requires ``n_hubs == 1`` and a staged-family solver (``dense-jax`` or
+    ``pallas``), enforced at router construction."""
     solver: str = "mcmf"
     payment_mode: str = "warmstart"
     n_hubs: int = 1
@@ -74,6 +80,7 @@ class RouterConfig:
     predictor_backend: str = "numpy"
     reputation: bool = True
     audit_ledger: bool = False
+    fused: bool = False
 
     def router_kwargs(self) -> dict:
         import dataclasses

@@ -10,15 +10,25 @@ reuse ANY common prefix; recurrent agents (rwkv/zamba backbones) can only
 reuse an EXACT extension of the previous prompt (the state cannot be rewound),
 so their affinity is |prev| / |p_j| if p_j extends prev, else 0.
 
-``affinity_matrix`` computes the full N x M request-agent matrix; the padded
-batched form is backed by the Pallas LCP kernel (repro.kernels) when
-``use_kernel=True`` — the beyond-paper fast path benchmarked in §Perf.
+Entries live in a persistent padded token arena (`PaddedLedgerStore`): one
+(S, L) int32 matrix whose rows are (agent, session) entries, updated in place
+on ``update``/``evict`` instead of being re-materialized from Python dicts
+every batch. ``affinity_matrix`` computes the full N x M request-agent matrix;
+the padded batched form gathers rows straight out of the arena and is backed
+by the Pallas LCP kernel (repro.kernels) when ``use_kernel=True``. The fused
+routing step (`core/routing_fused.py`) mirrors the same arena on device and
+performs the gather there.
 """
 from __future__ import annotations
 
 import heapq
 
 import numpy as np
+
+from .buckets import pow2_bucket
+
+PAD_PROMPT = -1   # prompt padding token (never a real token)
+PAD_LEDGER = -2   # ledger padding token (never matches PAD_PROMPT)
 
 
 def lcp_length(a: np.ndarray, b: np.ndarray) -> int:
@@ -30,6 +40,108 @@ def lcp_length(a: np.ndarray, b: np.ndarray) -> int:
     return int(neq[0]) if len(neq) else n
 
 
+class PaddedLedgerStore:
+    """Persistent padded token arena behind `PrefixLedger`.
+
+    One ``(S, L)`` int32 matrix holds every (agent, session) ledger entry as
+    a row (padded with ``PAD_LEDGER``), plus a parallel ``lens`` vector. Rows
+    are written in place on record and recycled on evict; both dimensions
+    grow by pow-2 doubling (`core/buckets.pow2_bucket`) so the arena's shape
+    — and therefore any jit program traced over it — changes O(log) times
+    over a run, not per batch.
+
+    Row 0 is a reserved all-pad sentinel with length 0: batch gathers map
+    "no entry for this (agent, session)" to row 0, which scores affinity 0
+    through the shared LCP post-processing without any masking.
+
+    ``dirty_rows``/``consume_dirty`` expose the rows written since the last
+    drain so a device mirror (the fused routing step) can scatter just the
+    changed rows instead of re-uploading the arena; ``shape_version`` bumps
+    on regrow, signalling the mirror to re-allocate.
+    """
+
+    def __init__(self, floor_rows: int = 8, floor_width: int = 8):
+        self.tokens = np.full((floor_rows, floor_width), PAD_LEDGER, np.int32)
+        self.lens = np.zeros((floor_rows,), np.int32)
+        self.row_of: dict[tuple, int] = {}
+        self._free: list[int] = []
+        self._next = 1                       # row 0 = absent sentinel
+        self._dirty: set[int] = set()
+        self.version = 0                     # bumps on every write
+        self.shape_version = 0               # bumps on regrow
+
+    @property
+    def width(self) -> int:
+        """Current padded token width L of the arena."""
+        return self.tokens.shape[1]
+
+    def _regrow(self, rows: int, width: int) -> None:
+        """Reallocate the arena to at least (rows, width), pow-2 bucketed."""
+        s = pow2_bucket(max(rows, self.tokens.shape[0]))
+        w = pow2_bucket(max(width, self.width))
+        if (s, w) == self.tokens.shape:
+            return
+        grown = np.full((s, w), PAD_LEDGER, np.int32)
+        grown[: self.tokens.shape[0], : self.width] = self.tokens
+        self.tokens = grown
+        self.lens = np.concatenate(
+            [self.lens, np.zeros((s - len(self.lens),), np.int32)])
+        self.shape_version += 1
+        self.version += 1
+        # every row moved to a fresh buffer: device mirrors must re-upload
+        self._dirty = set(range(self._next))
+
+    def put(self, key: tuple, toks: np.ndarray) -> int:
+        """Write (or overwrite) the entry for ``key``; returns its row."""
+        k = len(toks)
+        row = self.row_of.get(key)
+        if row is None:
+            row = self._free.pop() if self._free else self._next
+            if row == self._next:
+                self._next += 1
+            self.row_of[key] = row
+        self._regrow(self._next, max(k, 1))
+        self.tokens[row, :k] = toks
+        self.tokens[row, k:] = PAD_LEDGER    # clear stale tail on row reuse
+        self.lens[row] = k
+        self._dirty.add(row)
+        self.version += 1
+        return row
+
+    def drop(self, key: tuple) -> None:
+        """Recycle the row for ``key`` (no-op if absent)."""
+        row = self.row_of.pop(key, None)
+        if row is None:
+            return
+        self.lens[row] = 0
+        self.tokens[row, :] = PAD_LEDGER
+        self._free.append(row)
+        self._dirty.add(row)
+        self.version += 1
+
+    def get(self, key: tuple) -> np.ndarray | None:
+        """The stored token row for ``key`` (a view), or None."""
+        row = self.row_of.get(key)
+        if row is None:
+            return None
+        return self.tokens[row, : self.lens[row]]
+
+    def rows_for(self, sessions: list, agent_ids: list) -> np.ndarray:
+        """(len(sessions), len(agent_ids)) row indices; 0 where absent."""
+        out = np.zeros((len(sessions), len(agent_ids)), np.int32)
+        get = self.row_of.get
+        for i, a in enumerate(agent_ids):
+            for j, d in enumerate(sessions):
+                out[j, i] = get((a, d), 0)
+        return out
+
+    def consume_dirty(self) -> np.ndarray:
+        """Rows written since the last drain (then clears the set)."""
+        rows = np.fromiter(self._dirty, np.int32, len(self._dirty))
+        self._dirty.clear()
+        return rows
+
+
 class PrefixLedger:
     """Per-(agent, dialogue) record of the last prompt each agent served.
 
@@ -37,7 +149,10 @@ class PrefixLedger:
     ``recent_sessions`` every batch, ``evict``/``sessions`` on membership
     events — cost O(sessions of that agent), not O(every ledger entry ever
     written): at 10k streamed dialogues the flat scan made Phase 1 grow
-    quadratically over a serving run.
+    quadratically over a serving run. Token payloads live in the persistent
+    padded arena ``store`` (`PaddedLedgerStore`), updated incrementally on
+    ``update``/``evict`` so batch paths gather rows instead of rebuilding
+    padded tiles from dicts.
 
     ``max_sessions_per_agent`` (None = unbounded, the default) LRU-caps the
     tracked sessions per agent, bounding ledger memory on streamed runs.
@@ -50,9 +165,9 @@ class PrefixLedger:
     """
 
     def __init__(self, max_sessions_per_agent: int | None = None):
-        self._store: dict[tuple, np.ndarray] = {}
+        self.store = PaddedLedgerStore()
         # agent_id -> {dialogue_id: last-touch clock}, kept in sync with
-        # _store (the per-agent LRU index; insertion order tracks recency
+        # the store (the per-agent LRU index; insertion order tracks recency
         # because every touch deletes + reinserts)
         self._by_agent: dict[str, dict[str, int]] = {}
         self.max_sessions_per_agent = max_sessions_per_agent
@@ -61,8 +176,8 @@ class PrefixLedger:
     def update(self, agent_id: str, dialogue_id: str, prompt_tokens) -> None:
         """Record the prompt agent ``agent_id`` just executed (Phase 4)."""
         self._clock += 1
-        self._store[(agent_id, dialogue_id)] = np.asarray(prompt_tokens,
-                                                          dtype=np.int32)
+        self.store.put((agent_id, dialogue_id),
+                       np.asarray(prompt_tokens, dtype=np.int32))
         touched = self._by_agent.setdefault(agent_id, {})
         touched.pop(dialogue_id, None)   # re-insert at the recent end
         touched[dialogue_id] = self._clock
@@ -70,7 +185,7 @@ class PrefixLedger:
         if cap is not None and len(touched) > cap:
             victim = next(iter(touched))  # oldest (dict preserves order)
             del touched[victim]
-            self._store.pop((agent_id, victim), None)
+            self.store.drop((agent_id, victim))
 
     def recent_sessions(self, agent_id: str, limit: int) -> set:
         """The ``limit`` most-recently-served sessions of an agent — a local
@@ -84,6 +199,19 @@ class PrefixLedger:
         return {d for d, _ in heapq.nlargest(limit, touched.items(),
                                              key=lambda kv: kv[1])}
 
+    def keep_mask(self, dialogue_ids: list, agent_ids: list,
+                  cache_slots: list) -> np.ndarray:
+        """(n, m) bool: True where agent i still has session j resident
+        under the LRU cache model (always True for unbounded agents)."""
+        n, m = len(dialogue_ids), len(agent_ids)
+        keep = np.ones((n, m), bool)
+        for i, (aid, slots) in enumerate(zip(agent_ids, cache_slots)):
+            if slots > 0:
+                recent = self.recent_sessions(aid, slots)
+                keep[:, i] = np.fromiter((d in recent for d in dialogue_ids),
+                                         dtype=bool, count=n)
+        return keep
+
     def apply_lru(self, o: np.ndarray, dialogue_ids: list,
                   agent_ids: list, cache_slots: list) -> np.ndarray:
         """LRU cache model (§4.4 published cache summaries): zero, in place,
@@ -91,12 +219,8 @@ class PrefixLedger:
         the ``cache_slots[i]`` most-recent sessions keep their score
         (``cache_slots[i] <= 0`` means unbounded). One column masking per
         agent instead of the per-(request, agent) Python loop."""
-        for i, (aid, slots) in enumerate(zip(agent_ids, cache_slots)):
-            if slots > 0:
-                recent = self.recent_sessions(aid, slots)
-                keep = np.fromiter((d in recent for d in dialogue_ids),
-                                   dtype=bool, count=len(dialogue_ids))
-                o[:, i] = np.where(keep, o[:, i], 0.0)
+        keep = self.keep_mask(dialogue_ids, agent_ids, cache_slots)
+        o[:] = np.where(keep, o, 0.0)
         return o
 
     def parent_credit(self, o: np.ndarray, prompts: list,
@@ -117,7 +241,55 @@ class PrefixLedger:
         ``cache_slots[i] > 0`` only agent i's ``cache_slots[i]``
         most-recent sessions can contribute (§4.4 published cache
         summaries).
+
+        Vectorized: all (row, parent) candidate pairs are flattened, their
+        ledger rows gathered from the padded arena, the LCP matrix computed
+        in one batched pass, and the per-row maximum folded into ``o`` with
+        a masked segment-max (``np.maximum.at``). The retired per-pair
+        Python loop survives as ``_parent_credit_scalar`` (test oracle).
         """
+        cand = [(j, s) for j, ps in enumerate(parent_sessions) for s in ps]
+        if not cand:
+            return o
+        cj = np.array([j for j, _ in cand], np.int64)
+        sess = [s for _, s in cand]
+        crows = self.store.rows_for(sess, agent_ids)          # (C, m)
+        clen = self.store.lens[crows]
+        plens = np.array([len(prompts[j]) for j in cj], np.int64)
+        width = max(int(plens.max()), self.store.width)
+        pmat = np.full((len(cand), width), PAD_PROMPT, np.int32)
+        for r, j in enumerate(cj):
+            pmat[r, : plens[r]] = prompts[j]
+        ctoks = np.full((len(cand), len(agent_ids), width), PAD_LEDGER,
+                        np.int32)
+        ctoks[:, :, : self.store.width] = self.store.tokens[crows]
+        raw = np.logical_and.accumulate(
+            pmat[:, None, :] == ctoks, axis=-1).sum(-1)
+        lcp = np.minimum(raw, np.minimum(plens[:, None], clen))
+        cred = lcp / np.maximum(plens[:, None], 1)
+        if extension_only_mask is not None:
+            ext = np.asarray(extension_only_mask, bool)[None, :]
+            full_prev = (lcp == clen) & (clen > 0)
+            cred = np.where(
+                ext, np.where(full_prev,
+                              clen / np.maximum(plens[:, None], 1), 0.0),
+                cred)
+        if cache_slots is not None:
+            slots = np.asarray(cache_slots)
+            for i, aid in enumerate(agent_ids):
+                if slots[i] > 0:
+                    recent = self.recent_sessions(aid, int(slots[i]))
+                    live = np.fromiter((s in recent for s in sess),
+                                       dtype=bool, count=len(sess))
+                    cred[:, i] = np.where(live, cred[:, i], 0.0)
+        np.maximum.at(o, cj, cred)
+        return o
+
+    def _parent_credit_scalar(self, o: np.ndarray, prompts: list,
+                              parent_sessions: list, agent_ids: list,
+                              extension_only_mask=None,
+                              cache_slots=None) -> np.ndarray:
+        """Per-pair scalar `parent_credit` (the vectorized path's oracle)."""
         rows = [j for j, ps in enumerate(parent_sessions) if ps]
         if not rows:
             return o
@@ -139,18 +311,18 @@ class PrefixLedger:
 
     def get(self, agent_id: str, dialogue_id: str):
         """The last recorded prompt for this (agent, dialogue), or None."""
-        return self._store.get((agent_id, dialogue_id))
+        return self.store.get((agent_id, dialogue_id))
 
     def evict(self, agent_id: str, dialogue_id: str | None = None) -> None:
         """Drop ledger entries (agent cache eviction resync, Appx C.2.2)."""
         if dialogue_id is not None:
-            self._store.pop((agent_id, dialogue_id), None)
+            self.store.drop((agent_id, dialogue_id))
             touched = self._by_agent.get(agent_id)
             if touched is not None:
                 touched.pop(dialogue_id, None)
         else:
             for d in list(self._by_agent.get(agent_id, ())):
-                self._store.pop((agent_id, d), None)
+                self.store.drop((agent_id, d))
             self._by_agent.pop(agent_id, None)
 
     def sessions(self, agent_id: str) -> list[str]:
@@ -187,28 +359,22 @@ class PrefixLedger:
 
     def _affinity_matrix_kernel(self, prompts, dialogue_ids, agent_ids,
                                 extension_only_mask):
-        """Batched LCP via the Pallas kernel (padded token matrices)."""
+        """Batched LCP via the Pallas kernel, gathering padded ledger rows
+        straight from the persistent arena (no per-pair Python rebuild)."""
         from repro.kernels.ops import lcp_affinity_op
 
         n, m = len(prompts), len(agent_ids)
         max_p = max((len(p) for p in prompts), default=1)
-        ledgers = [[self.get(a, d) for a in agent_ids] for d in dialogue_ids]
-        max_l = max((len(l) for row in ledgers for l in row if l is not None),
-                    default=1)
-        length = max(max_p, max_l, 8)
-        pmat = np.full((n, length), -1, np.int32)
+        rows = self.store.rows_for(dialogue_ids, agent_ids)   # (n, m)
+        llen = self.store.lens[rows]
+        length = max(max_p, self.store.width, 8)
+        pmat = np.full((n, length), PAD_PROMPT, np.int32)
         plen = np.zeros((n,), np.int32)
         for j, p in enumerate(prompts):
             pmat[j, : len(p)] = p
             plen[j] = len(p)
-        lmat = np.full((n, m, length), -2, np.int32)  # -2 never matches -1
-        llen = np.zeros((n, m), np.int32)
-        for j in range(n):
-            for i in range(m):
-                led = ledgers[j][i]
-                if led is not None:
-                    lmat[j, i, : len(led)] = led
-                    llen[j, i] = len(led)
+        lmat = np.full((n, m, length), PAD_LEDGER, np.int32)
+        lmat[:, :, : self.store.width] = self.store.tokens[rows]
         lcp = np.asarray(lcp_affinity_op(pmat, lmat))  # [N, M]
         lcp = np.minimum(lcp, np.minimum(plen[:, None], llen))
         o = lcp / np.maximum(plen[:, None], 1)

@@ -44,7 +44,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from repro.core.affinity import PrefixLedger
-from repro.core.auction import SPILL_HUB, run_sharded_auction
+from repro.core.auction import SPILL_HUB, _spill_round, run_sharded_auction
 from repro.core.hub import (Hub, SlotPriceBook, cluster_agents, route_to_hub)
 from repro.core.ledger import SettlementLedger
 from repro.core.solvers import get_solver
@@ -126,7 +126,8 @@ class IEMASRouter:
                  use_kernel_affinity: bool = False,
                  batched: bool = True, predictor_backend: str = "numpy",
                  predictor_kw: dict | None = None,
-                 reputation: bool = True, audit_ledger: bool = False):
+                 reputation: bool = True, audit_ledger: bool = False,
+                 fused: bool = False):
         self.agents = list(agents)
         self.valuation = valuation or ValuationConfig()
         self.payment_mode = payment_mode
@@ -168,6 +169,25 @@ class IEMASRouter:
         self.price_book = SlotPriceBook()
         self._rebuild_hubs()
         self.quarantined: set[str] = set()
+        # fused device-resident routing step (core/routing_fused.py): one
+        # jitted program replaces _phase1 + the hub-0 solve; host-side spill,
+        # price-book splice and payments are shared with the staged path
+        self.fused = fused
+        self._fused = None
+        if fused:
+            from repro.core.routing_fused import (FUSED_SOLVERS,
+                                                  FusedRoutingStep)
+            if n_hubs != 1:
+                raise ValueError(
+                    "fused=True runs one global device-resident column "
+                    f"market and requires n_hubs=1 (got {n_hubs}); use the "
+                    "staged path for hub sharding")
+            if solver not in FUSED_SOLVERS:
+                raise ValueError(
+                    "fused=True requires a solver whose bidding loop stages "
+                    f"inside the fused program {FUSED_SOLVERS}; got "
+                    f"{solver!r}")
+            self._fused = FusedRoutingStep(self)
 
     # ---------------- elastic membership ----------------
     def _refresh_ledger_cap(self):
@@ -350,11 +370,9 @@ class IEMASRouter:
             return self._finish_window(prov, decisions, shadow)
         n, m = len(all_reqs), len(live)
 
-        with self._phase("phase1_predict"):
-            lat, cst, qual, values, X, xs = self._phase1(all_reqs, live,
-                                                         telemetry)
-
-        # Phase 1c/2/3 per hub
+        # Phase 1c/2/3 per hub (capacities, hub blocks and warm-start seeds
+        # are pure functions of membership/telemetry, so they are assembled
+        # before Phase 1 — the fused path feeds them INTO its single program)
         caps = []
         for a in live:
             free = (free_slots or {}).get(a.agent_id, a.capacity)
@@ -401,13 +419,36 @@ class IEMASRouter:
                     if seed is not None:
                         start_prices[h] = seed
 
-        results = run_sharded_auction(values, cst, caps, blocks,
-                                      payment_mode=self.payment_mode,
-                                      solver=self.solver,
-                                      start_prices=start_prices,
-                                      spill=self.spill,
-                                      spill_agents=sorted(hub_of_agent),
-                                      profiler=self.profiler)
+        if self._fused is not None:
+            # one device-resident program from the ledger gather to the
+            # settled auction (n_hubs == 1, so block 0 IS the global market);
+            # the cross-hub spill helper still runs host-side for parity
+            # with the staged path (it is vacuous unless capacity ran out)
+            with self._phase("fused_route"):
+                lat, cst, qual, values, X, result = self._fused.step(
+                    all_reqs, live, telemetry, caps,
+                    start_prices=start_prices.get(0))
+            xs = None
+            results = {0: result}
+            if self.spill:
+                with self._phase("phase2_spill"):
+                    sres = _spill_round(values, cst, caps, blocks, results,
+                                        get_solver(self.solver),
+                                        self.payment_mode,
+                                        sorted(hub_of_agent))
+                if sres is not None:
+                    results[SPILL_HUB] = sres
+        else:
+            with self._phase("phase1_predict"):
+                lat, cst, qual, values, X, xs = self._phase1(all_reqs, live,
+                                                             telemetry)
+            results = run_sharded_auction(values, cst, caps, blocks,
+                                          payment_mode=self.payment_mode,
+                                          solver=self.solver,
+                                          start_prices=start_prices,
+                                          spill=self.spill,
+                                          spill_agents=sorted(hub_of_agent),
+                                          profiler=self.profiler)
 
         def _record_match(j, i, pay, weight, pred_cost, h):
             """Decision (+ a pending-feedback entry for real batch members —

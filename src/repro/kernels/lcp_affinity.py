@@ -9,6 +9,12 @@ flow (DESIGN.md §3).
 Tiling: grid over (N/bn, M/bm); each program holds a [bn, L] prompt tile and
 a [bn, bm, L] ledger tile in VMEM. With bn=8, bm=8, L=1024 int32 that is
 8*1024*4 + 8*8*1024*4 = 288 KiB — comfortably within a v5e core's VMEM.
+
+``interpret`` follows the `auction_bid` tile-plan convention: the default
+(None) resolves backend-aware — compiled Pallas on TPU, interpret mode
+everywhere else — and the padding plan depends on the resolved mode (the
+token axis is padded to the LANE width only off-interpret, where the VPU
+needs 128-multiple lanes; interpret mode keeps the caller's width).
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BN, BM = 8, 8
+LANE = 128      # token-axis padding multiple on real hardware
 
 
 def _lcp_kernel(p_ref, l_ref, o_ref):
@@ -30,21 +37,33 @@ def _lcp_kernel(p_ref, l_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def lcp_affinity(prompts, ledgers, *, interpret: bool = True):
+def lcp_affinity(prompts, ledgers, *, interpret: bool | None = None):
     """prompts: [N, L] int32; ledgers: [N, M, L] int32 -> lcp [N, M] int32.
 
-    N and M are padded to the block sizes internally.
+    N and M are padded to the block sizes internally (and L to the lane
+    width when running compiled). ``interpret=None`` resolves backend-aware:
+    compiled on TPU, interpret elsewhere.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n, l = prompts.shape
     m = ledgers.shape[1]
     pn = (-n) % BN
     pm = (-m) % BM
+    pl_tok = 0 if interpret else (-l) % LANE
     if pn:
         prompts = jnp.pad(prompts, ((0, pn), (0, 0)), constant_values=-1)
         ledgers = jnp.pad(ledgers, ((0, pn), (0, 0), (0, 0)), constant_values=-2)
     if pm:
         ledgers = jnp.pad(ledgers, ((0, 0), (0, pm), (0, 0)), constant_values=-2)
+    if pl_tok:
+        # pad tokens diverge (-1 vs -2), so the cumprod chain cannot extend
+        # past the real width
+        prompts = jnp.pad(prompts, ((0, 0), (0, pl_tok)), constant_values=-1)
+        ledgers = jnp.pad(ledgers, ((0, 0), (0, 0), (0, pl_tok)),
+                          constant_values=-2)
     nn, mm = prompts.shape[0], ledgers.shape[1]
+    l = prompts.shape[1]
 
     out = pl.pallas_call(
         _lcp_kernel,

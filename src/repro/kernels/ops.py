@@ -29,7 +29,9 @@ def auction_bid_op(W, ask, ask2, active, eps, *, bn=8):
 
 
 def lcp_affinity_op(prompts, ledgers):
-    """prompts [N, L], ledgers [N, M, L] -> lcp [N, M]."""
+    """prompts [N, L], ledgers [N, M, L] -> lcp [N, M]. Backend-aware:
+    compiled Pallas on TPU, interpret mode elsewhere (the kernel's own
+    ``interpret=None`` default resolves the same way)."""
     return lcp_affinity(prompts, ledgers, interpret=_interpret())
 
 

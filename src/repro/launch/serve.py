@@ -33,14 +33,16 @@ def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
                  solver: str = "mcmf", warm_start: bool = False,
                  spill: bool = True, batched: bool = True,
                  predictor_backend: str = "numpy", seed: int = 0,
-                 reputation: bool = True, audit_ledger: bool = False):
+                 reputation: bool = True, audit_ledger: bool = False,
+                 fused: bool = False):
     """Build the IEMAS router (or a named baseline) over ``infos``."""
     if name == "iemas":
         return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
                            solver=solver, warm_start=warm_start, spill=spill,
                            batched=batched,
                            predictor_backend=predictor_backend,
-                           reputation=reputation, audit_ledger=audit_ledger)
+                           reputation=reputation, audit_ledger=audit_ledger,
+                           fused=fused)
     return BASELINES[name](infos, seed=seed)
 
 
@@ -73,6 +75,11 @@ def main():
                     help="event mode: micro-batch size per router call")
     ap.add_argument("--batch-window", type=float, default=0.02,
                     help="event mode: batching delay in virtual seconds")
+    ap.add_argument("--fused", action="store_true",
+                    help="run the whole routing step (affinity, prediction, "
+                         "values, column auction) as one device-resident "
+                         "jitted program (core/routing_fused); needs --hubs "
+                         "1 and a staged solver (dense-jax or pallas)")
     ap.add_argument("--incremental", action="store_true",
                     help="event mode: newly ready work bids into the "
                          "standing per-agent duals and dispatches "
@@ -128,6 +135,18 @@ def main():
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
+    if args.fused:
+        from repro.core.routing_fused import FUSED_SOLVERS
+        if args.router != "iemas":
+            ap.error("--fused is an IEMAS routing path; baselines have no "
+                     "fused step")
+        if args.hubs != 1 or args.solver not in FUSED_SOLVERS:
+            ap.error("--fused runs one global device-resident column market; "
+                     "pass --hubs 1 with a staged solver "
+                     f"({', '.join(FUSED_SOLVERS)})")
+        if args.incremental:
+            ap.error("--fused batches whole rounds through one program and "
+                     "cannot dispatch provisionally; drop --incremental")
     if args.incremental:
         from repro.core.solvers import get_solver
         if args.sim_mode != "event":
@@ -160,7 +179,8 @@ def main():
                           predictor_backend=args.predictor_backend,
                           seed=args.seed,
                           reputation=not args.no_reputation,
-                          audit_ledger=args.audit_ledger)
+                          audit_ledger=args.audit_ledger,
+                          fused=args.fused)
     spec = WorkloadSpec(args.workload, n_dialogues=args.dialogues,
                         seed=args.seed + 1)
     if args.workload in DAG_WORKLOADS and args.sim_mode != "event":

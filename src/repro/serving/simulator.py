@@ -91,6 +91,13 @@ class RoutingProfiler:
         self.engine_compute = 0.0   # virtual engine busy seconds
         self.route_requests = 0     # requests seen across route_batch calls
         self.empty_route_calls = 0  # route_batch invocations with 0 requests
+        # fused routing step counters (core/routing_fused.py): device->host
+        # materialization boundaries, syncs that fired BEFORE decisions
+        # materialized (must stay 0 — the no-mid-sync contract), and fused
+        # jit-cache growth (the pow-2 retrace bound)
+        self.fused_host_transfers = 0
+        self.fused_mid_syncs = 0
+        self.fused_retraces = 0
 
     @contextmanager
     def phase(self, name: str):
@@ -119,6 +126,22 @@ class RoutingProfiler:
         if n_requests == 0:
             self.empty_route_calls += 1
 
+    def note_fused_step(self, host_transfers: int = 0, mid_syncs: int = 0,
+                        retraces: int = 0) -> None:
+        """Record one fused routing step's host-boundary accounting.
+
+        Called by `repro.core.routing_fused.FusedRoutingStep` after its
+        single materialization: ``host_transfers`` counts device->host
+        boundaries (exactly one per fused batch), ``mid_syncs`` counts any
+        sync performed before RouteDecisions materialized (zero by
+        construction — a nonzero value means the fused program was split),
+        and ``retraces`` is the fused jit-cache growth since the last step
+        (bounded by the pow-2 shape buckets).
+        """
+        self.fused_host_transfers += int(host_transfers)
+        self.fused_mid_syncs += int(mid_syncs)
+        self.fused_retraces += int(retraces)
+
     def attach(self, cluster, router) -> "RoutingProfiler":
         """Hook this profiler into a cluster + router pair; returns self."""
         cluster.profiler = self
@@ -144,6 +167,11 @@ class RoutingProfiler:
             "overhead_frac": (routing / ec) if ec > 0 else None,
             "route_requests": self.route_requests,
             "empty_route_calls": self.empty_route_calls,
+            "fused": {
+                "host_transfers": self.fused_host_transfers,
+                "mid_pipeline_syncs": self.fused_mid_syncs,
+                "retraces": self.fused_retraces,
+            },
             "phases": {
                 name: {
                     "wall_s": wall,

@@ -110,3 +110,84 @@ def test_router_sizes_ledger_cap_from_published_caches():
     r.add_agent(agents([0, 0])[0].__class__("a-new", TokenPrices(0.01, 0.001, 0.03), 2,
                                             ("dialogue",), cache_slots=0))
     assert r.ledger.max_sessions_per_agent is None
+
+
+def test_padded_store_incremental_dirty_tracking():
+    """consume_dirty exposes exactly the rows written since the last drain
+    (the device-mirror scatter contract of the fused routing step)."""
+    from repro.core.affinity import PAD_LEDGER, PaddedLedgerStore
+
+    st_ = PaddedLedgerStore()
+    r1 = st_.put(("a", "d1"), np.arange(3, dtype=np.int32))
+    r2 = st_.put(("a", "d2"), np.arange(5, dtype=np.int32))
+    assert set(st_.consume_dirty()) == {r1, r2}
+    assert st_.consume_dirty().size == 0          # drained
+    st_.put(("a", "d2"), np.arange(4, dtype=np.int32))  # overwrite in place
+    assert set(st_.consume_dirty()) == {r2}
+    assert st_.lens[r2] == 4
+    assert np.all(st_.tokens[r2, 4:] == PAD_LEDGER)  # stale tail cleared
+    st_.drop(("a", "d1"))
+    assert set(st_.consume_dirty()) == {r1}
+    assert st_.lens[r1] == 0
+    # recycled row is reused for the next entry
+    r3 = st_.put(("b", "d9"), np.arange(2, dtype=np.int32))
+    assert r3 == r1
+
+
+def test_padded_store_regrow_bumps_shape_and_dirties_all():
+    """A pow-2 regrow moves every row to a fresh buffer: shape_version bumps
+    and the whole live row range re-enters the dirty set so device mirrors
+    re-upload instead of scattering into a stale arena."""
+    from repro.core.affinity import PAD_LEDGER, PaddedLedgerStore
+
+    st_ = PaddedLedgerStore(floor_rows=8, floor_width=8)
+    for k in range(3):
+        st_.put(("a", f"d{k}"), np.arange(4, dtype=np.int32))
+    st_.consume_dirty()
+    sv = st_.shape_version
+    st_.put(("a", "wide"), np.arange(20, dtype=np.int32))   # width regrow
+    assert st_.shape_version == sv + 1
+    assert st_.width == 32                     # pow2_bucket(20)
+    dirty = set(st_.consume_dirty())
+    assert {st_.row_of[("a", f"d{k}")] for k in range(3)} <= dirty
+    # old payloads survived the move, padded with PAD_LEDGER
+    row = st_.row_of[("a", "d0")]
+    assert np.array_equal(st_.tokens[row, :4], np.arange(4))
+    assert np.all(st_.tokens[row, 4:] == PAD_LEDGER)
+    # row-count regrow: row 0 stays the reserved all-pad sentinel
+    for k in range(12):
+        st_.put(("b", f"d{k}"), np.arange(2, dtype=np.int32))
+    assert st_.lens[0] == 0
+    assert np.all(st_.tokens[0] == PAD_LEDGER)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10**6), st.integers(2, 5), st.integers(2, 8))
+def test_parent_credit_vectorized_matches_scalar(seed, m, n):
+    """The flattened batched `parent_credit` (segment-max over gathered
+    arena rows) is bit-equal to the retired per-pair scalar oracle, across
+    extension-only agents, LRU caps and absent parent entries."""
+    rng = np.random.default_rng(seed)
+    led = PrefixLedger()
+    agents = [f"a{i}" for i in range(m)]
+    sessions = [f"s{k}" for k in range(6)]
+    for s in sessions:
+        for i, a in enumerate(agents):
+            if rng.random() < 0.6:
+                led.update(a, s, rng.integers(0, 6, rng.integers(1, 15))
+                           .astype(np.int32))
+    prompts = [rng.integers(0, 6, rng.integers(1, 20)).astype(np.int32)
+               for _ in range(n)]
+    parent_sessions = [
+        [sessions[k] for k in rng.choice(6, rng.integers(0, 4),
+                                         replace=False)]
+        for _ in range(n)]
+    ext = rng.random(m) < 0.4
+    slots = rng.integers(0, 4, m)
+    o0 = rng.random((n, m)) * 0.3
+    vec = led.parent_credit(o0.copy(), prompts, parent_sessions, agents,
+                            extension_only_mask=ext, cache_slots=slots)
+    ref = led._parent_credit_scalar(o0.copy(), prompts, parent_sessions,
+                                    agents, extension_only_mask=ext,
+                                    cache_slots=slots)
+    assert np.allclose(vec, ref, atol=1e-12), np.abs(vec - ref).max()

@@ -28,6 +28,7 @@ TIER1_MODULES = {
     "test_mechanism",
     "test_models",
     "test_predictor_batch",
+    "test_routing_fused",
     "test_run_workload",
     "test_sharding",
     "test_simulator",
