@@ -35,10 +35,10 @@ import argparse
 import time
 
 from benchmarks.common import QUICK, emit
-from repro.configs.iemas_cluster import SCALE_128
+from repro.configs.iemas_cluster import SCALE_1K, SCALE_128
 from repro.serving import (EventSimulator, PoissonArrivals, RoutingProfiler,
-                           SimCluster, WorkloadSpec, iter_dialogues,
-                           make_router)
+                           SimCluster, WorkloadSpec, build_federation,
+                           iter_dialogues, make_router)
 from repro.serving.workload import WORKLOADS
 
 #: (n_agents, n_dialogues) sweep — dialogues scale with the fleet so every
@@ -48,6 +48,15 @@ SIZES = [(16, 1000), (32, 2000), (64, 5000),
          (SCALE_128.n_agents, SCALE_128.n_dialogues)]
 SMOKE_SIZES = [(16, 150)]
 CROSSOVER = 0.10
+
+#: federation study grid: (n_agents, n_dialogues, super_hubs); the first
+#: cell — the single-heap sweep's flagship 128 × 10k size — also runs
+#: S=1 for the welfare/overhead comparison, and the last entry is the
+#: SCALE_1K headline (1024 agents, 100k dialogues, 8 super-hub shards in
+#: their own OS processes)
+FED_SIZES = [(128, 10_000, 4),
+             (SCALE_1K.n_agents, SCALE_1K.n_dialogues, SCALE_1K.super_hubs)]
+FED_SMOKE = [(32, 300, 4)]
 
 
 def run_cell(family: str, n_agents: int, n_dialogues: int, *,
@@ -161,6 +170,128 @@ def _incremental_study(family: str, n_agents: int, n_dialogues: int,
             f"incremental welfare/req {wf_i:.4f} < 90% of batch {wf_b:.4f}"
 
 
+def run_federation_cell(family: str, n_agents: int, n_dialogues: int,
+                        super_hubs: int, *, seed: int = 0,
+                        parallel: str = "inline",
+                        epoch: float | None = None) -> dict:
+    """One federation cell at the `SCALE_1K` preset knobs.
+
+    The admission window scales with the fleet (SCALE_1K's 2 dialogues
+    per agent); ``super_hubs=1`` is the bit-exact single-heap oracle
+    (same `EventSimulator` semantics), which is how the comparison rows
+    are produced.  Audit ledgers stay on: the exactly-once gates replay
+    every shard's hash chain.
+    """
+    cfg = SCALE_1K
+    spec = WorkloadSpec(family, n_dialogues=n_dialogues, seed=seed + 1)
+    fed = build_federation(
+        iter_dialogues(spec), n_agents=n_agents,
+        super_hubs=super_hubs,
+        arrivals=PoissonArrivals(rate=cfg.arrival_rate(n_agents),
+                                 seed=seed + 2),
+        seed=seed, engine_mode=cfg.engine_mode,
+        agents_per_hub=cfg.agents_per_hub,
+        max_inflight=max(64, cfg.max_inflight * n_agents // cfg.n_agents),
+        router_kwargs=dict(solver=cfg.solver, warm_start=cfg.warm_start,
+                           audit_ledger=True),
+        loop_kwargs=dict(batch_cap=cfg.batch_cap,
+                         batch_window=cfg.batch_window,
+                         max_new_tokens=cfg.max_new_tokens, lean=True,
+                         max_events=20_000_000, max_rounds=2_000_000),
+        cluster_kwargs=dict(max_new_tokens=cfg.max_new_tokens),
+        epoch=epoch if epoch is not None else cfg.epoch, parallel=parallel)
+    t0 = time.perf_counter()
+    out = fed.run()
+    out["bench_wall_s"] = time.perf_counter() - t0
+    return out
+
+
+def _fed_row(family: str, n_agents: int, n_dialogues: int, s: int,
+             out: dict) -> None:
+    """Emit one federation CSV row (routing + boundary-phase attribution,
+    spill/gossip health, exactly-once verdict)."""
+    rep = out["routing"]
+    fed = out["federation"]
+    eo = fed["exactly_once"]
+    wf = out["accounts"]["welfare_realized"] / max(out.get("n", 1), 1)
+    cols = [
+        f"overhead_pct={100.0 * (rep['overhead_frac'] or 0.0):.2f}",
+        f"gossip_pct={_pct(rep, 'federation_gossip'):.3f}",
+        f"fed_spill_pct={_pct(rep, 'federation_spill'):.3f}",
+        f"migrate_pct={_pct(rep, 'federation_migrate'):.3f}",
+        f"engine_s={rep['engine_compute_s']:.1f}",
+        f"epochs={out['epochs']}",
+        f"spilled={fed['spill_migrated']}/{fed['spill_candidates']}",
+        f"stale_max={fed['gossip']['max_staleness_epochs']}",
+        f"welfare_per_req={wf:.4f}",
+        f"n={out.get('n', 0)}",
+        f"wait_ms={1e3 * out.get('queue_wait_mean_s', 0.0):.1f}",
+        f"done={out.get('dialogues_completed', 0)}"
+        f"/{out.get('dialogues_arrived', 0)}",
+        f"eo={eo['ok']}",
+        f"truncated={out.get('truncated', False)}",
+    ]
+    emit(f"servingscale/fed_{family}_a{n_agents}_d{n_dialogues}_s{s}",
+         out["bench_wall_s"] * 1e6, " ".join(cols))
+
+
+def _gate_federation(out: dict, n_dialogues: int, super_hubs: int) -> None:
+    """Structural federation gates: exactly-once settlement verified by
+    ledger replay, nothing lost or double-settled, migrations balanced,
+    spill never consumed a digest staler than one epoch, and the epoch
+    boundaries' own cost stayed inside the routing-overhead bound."""
+    eo = out["federation"]["exactly_once"]
+    assert eo["ok"], f"exactly-once audit failed: {eo}"
+    assert eo["ledger_replay_ok"] and eo["ledgers_attached"] == super_hubs
+    assert eo["lost_dialogues"] == 0 and eo["dialogues_conserved"]
+    assert eo["migrations_balanced"]
+    assert out["dialogues_completed"] + out["unfinished_dialogues"] \
+        == n_dialogues
+    assert not out["truncated"], "federation cell truncated"
+    assert out["federation"]["gossip"]["max_staleness_epochs"] <= 1
+    assert 0 < out["routing"]["overhead_frac"] < 0.5, \
+        f"routing+boundary overhead {out['routing']['overhead_frac']:.3f} " \
+        f"out of the (0, 0.5) regression bound"
+
+
+def run_federation(smoke: bool = False):
+    """The hubs-of-hubs study: federated vs single-heap serving.
+
+    Smoke: one reduced cell, S=1 vs S=4, with the exactly-once /
+    staleness / welfare-retention gates.  Full: the FED_SIZES grid —
+    a 256-agent comparison pair plus the SCALE_1K headline row (1024
+    agents / 100k dialogues / 8 process-parallel shards), gated on
+    exactly-once settlement and completion but not compared against a
+    single heap (sustaining that cell on one heap is the problem
+    federation exists to solve).
+    """
+    family = WORKLOADS[0]
+    sizes = FED_SMOKE if (smoke or QUICK) else FED_SIZES
+    for i, (n_agents, n_dialogues, s) in enumerate(sizes):
+        headline = not smoke and i == len(sizes) - 1
+        fed = run_federation_cell(
+            family, n_agents, n_dialogues, s,
+            parallel="process" if headline else "inline")
+        _fed_row(family, n_agents, n_dialogues, s, fed)
+        _gate_federation(fed, n_dialogues, s)
+        if headline:
+            continue   # no single-heap twin at 1k agents (see docstring)
+        single = run_federation_cell(family, n_agents, n_dialogues, 1)
+        _fed_row(family, n_agents, n_dialogues, 1, single)
+        wf_s = single["accounts"]["welfare_realized"] / max(single["n"], 1)
+        wf_f = fed["accounts"]["welfare_realized"] / max(fed["n"], 1)
+        emit(f"servingscale/fed_{family}_a{n_agents}_welfare_retention",
+             fed["bench_wall_s"] * 1e6,
+             f"single={wf_s:.4f} federated={wf_f:.4f} "
+             f"ratio={wf_f / wf_s if wf_s else 0.0:.3f}")
+        # partitioned markets + spill penalties cost a bounded welfare
+        # slice vs the global auction; 0.75 catches a structural break
+        # (e.g. spill routing everything through the penalty) while
+        # leaving room for partition noise at small fleets
+        assert wf_f >= 0.75 * wf_s, \
+            f"federated welfare/req {wf_f:.4f} < 75% of single-heap {wf_s:.4f}"
+
+
 def run(smoke: bool = False, oracle: bool = False):
     """Sweep the (family x fleet-size) grid and report 10% crossovers."""
     quick = smoke or QUICK
@@ -223,8 +354,15 @@ def main():
                     help="one reduced cell + structural gates (CI)")
     ap.add_argument("--oracle", action="store_true",
                     help="add an exact-MCMF comparison row per family")
+    ap.add_argument("--federation", action="store_true",
+                    help="run the hubs-of-hubs study (federated vs "
+                         "single-heap; SCALE_1K headline row) instead of "
+                         "the single-heap sweep")
     args = ap.parse_args()
-    run(smoke=args.smoke, oracle=args.oracle)
+    if args.federation:
+        run_federation(smoke=args.smoke)
+    else:
+        run(smoke=args.smoke, oracle=args.oracle)
 
 
 if __name__ == "__main__":

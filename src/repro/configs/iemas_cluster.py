@@ -68,7 +68,13 @@ class RouterConfig:
     Eq.-4 affinity, Eq.-5 prediction, Eq.-1 values and the column auction —
     as ONE device-resident jitted program (`repro.core.routing_fused`);
     requires ``n_hubs == 1`` and a staged-family solver (``dense-jax`` or
-    ``pallas``), enforced at router construction."""
+    ``pallas``), enforced at router construction.
+
+    ``explore_bonus`` is the predictor optimism knob against affinity
+    entrenchment (tests/test_exploration.py): predicted quality is lifted
+    by ``explore_bonus / sqrt(1 + n_obs)`` so a never-sampled in-domain
+    specialist can outbid a cache-warm mismatched incumbent.  The default
+    0.0 is an exact no-op."""
     solver: str = "mcmf"
     payment_mode: str = "warmstart"
     n_hubs: int = 1
@@ -81,11 +87,17 @@ class RouterConfig:
     reputation: bool = True
     audit_ledger: bool = False
     fused: bool = False
+    explore_bonus: float = 0.0
 
     def router_kwargs(self) -> dict:
         import dataclasses
 
-        return dataclasses.asdict(self)
+        kw = dataclasses.asdict(self)
+        # IEMASRouter takes the predictor knob via predictor_kw
+        explore = kw.pop("explore_bonus")
+        if explore:
+            kw["predictor_kw"] = {"explore": explore}
+        return kw
 
 
 DEFAULT_ROUTER = RouterConfig()
@@ -116,13 +128,20 @@ class ClusterScaleConfig:
     agents_per_hub: int = 16       # n_hubs = max(1, n_agents // this)
     solver: str = "dense"
     warm_start: bool = True
+    # hubs-of-hubs federation (repro.serving.federation): number of
+    # independently-advancing super-hub shards and the virtual seconds
+    # between price-book-gossip / cross-super-hub-spill boundaries.
+    # super_hubs=1 is the single-heap EventSimulator (bit-exact oracle).
+    super_hubs: int = 1
+    epoch: float = 0.25
 
     def arrival_rate(self, n_agents: int | None = None) -> float:
         """Open-loop arrival rate (dialogues/s) for a given fleet size."""
         return self.rate_per_agent * (n_agents or self.n_agents)
 
     def n_hubs(self, n_agents: int | None = None) -> int:
-        """Hub count for a given fleet size."""
+        """Hub count for a given fleet size (inner hubs per shard when
+        federated: each super-hub recuts its slice by ``agents_per_hub``)."""
         return max(1, (n_agents or self.n_agents) // self.agents_per_hub)
 
     def router_config(self, n_agents: int | None = None) -> RouterConfig:
@@ -133,6 +152,13 @@ class ClusterScaleConfig:
 
 #: the 128-agent / 10k-dialogue headline scale preset
 SCALE_128 = ClusterScaleConfig()
+
+#: the federation scale preset: a 1024-agent fleet serving 100k dialogues
+#: across 8 super-hub shards — the regime one event heap cannot sustain
+#: (the routing benchmark's overhead crossover) and the headline row of
+#: `benchmarks/serving_scale.py --federation`
+SCALE_1K = ClusterScaleConfig(n_agents=1024, n_dialogues=100_000,
+                              max_inflight=2048, super_hubs=8, epoch=0.5)
 
 MODEL_CLASSES = {
     # name: (n_layers, d_model, n_heads, d_ff, relative scale)

@@ -72,7 +72,7 @@ def feature_tensor(prompt_lens, turns, affinity, *, router_inflight=0.0,
 
 
 def _blend_with_prior(X, *, lpt, lb, miss, hit, out, ewma, n_obs, warm_n,
-                      prior_q, rep, raw_lat, raw_cst, raw_q):
+                      prior_q, rep, raw_lat, raw_cst, raw_q, explore=0.0):
     """Structural cold-start prior + ``w = min(1, n_obs/60)`` tree blend as
     array ops — the single vectorized transcription of the scalar
     ``AgentPredictor.predict`` math (kept bit-equivalent: same op order,
@@ -81,7 +81,10 @@ def _blend_with_prior(X, *, lpt, lb, miss, hit, out, ewma, n_obs, warm_n,
     ((m,) per-agent param arrays broadcast against (n, m) features).
     ``rep`` is the reputation weight: it scales the tree-blend weight and
     multiplies quality in both warm and cold branches (exactly neutral at
-    1.0, the honest fixed point)."""
+    1.0, the honest fixed point).  ``explore`` is the per-agent optimism
+    bonus (`AgentPredictor.explore`); quality is lifted by
+    ``explore / sqrt(1 + n_obs)`` (capped at 1.0) ONLY for agents whose
+    bonus is nonzero, so the default 0.0 leaves the arrays untouched."""
     pl, aff, util = X[..., 0], X[..., 2], X[..., 8]
     uncached = pl * (1.0 - aff)
     prior_lat = (lb + lpt * uncached) * (1.0 + util)
@@ -92,9 +95,15 @@ def _blend_with_prior(X, *, lpt, lb, miss, hit, out, ewma, n_obs, warm_n,
     lat = (1 - w) * prior_lat + w * np.maximum(0.0, raw_lat)
     cst = (1 - w) * prior_cst + w * np.maximum(0.0, raw_cst)
     cold = n_obs < warm_n
+    qual = np.where(cold, prior_q * rep, np.clip(raw_q, 0.0, 1.0) * rep)
+    expl = np.asarray(explore, dtype=np.float64)
+    if np.any(expl != 0.0):
+        qual = np.where(expl != 0.0,
+                        np.minimum(1.0, qual + expl / np.sqrt(1.0 + n_obs)),
+                        qual)
     return (np.where(cold, prior_lat, lat),
             np.where(cold, prior_cst, cst),
-            np.where(cold, prior_q * rep, np.clip(raw_q, 0.0, 1.0) * rep))
+            qual)
 
 
 @dataclass
@@ -137,7 +146,7 @@ class AgentPredictor:
     def __init__(self, agent_id: str, prices: TokenPrices, *,
                  warm_n: int = 6, prior_latency_per_tok: float = 1e-3,
                  prior_latency_base: float = 0.02, prior_quality: float = 0.6,
-                 rep_alpha: float = 0.25):
+                 rep_alpha: float = 0.25, explore: float = 0.0):
         self.agent_id = agent_id
         self.prices = prices
         self.lat = HoeffdingTreeRegressor(N_FEATURES)
@@ -151,6 +160,18 @@ class AgentPredictor:
         self.ewma_gen = 32.0  # expected generation length
         self.reputation = 1.0  # report-trust weight in [0, 1]; 1.0 = honest
         self.rep_alpha = rep_alpha
+        # optimism bonus against affinity entrenchment (PR 7 pathology):
+        # predicted quality is lifted by explore/sqrt(1+n_obs), capped at
+        # 1.0, so a rarely-sampled specialist can outbid an entrenched
+        # cache-warm generalist until real observations arrive.  The
+        # default 0.0 is an exact IEEE no-op (the lift is never applied).
+        self.explore = float(explore)
+
+    def _optimism(self, q: float) -> float:
+        """Apply the exploration lift (exact passthrough at ``explore=0``)."""
+        if self.explore == 0.0:
+            return q
+        return min(1.0, q + self.explore / float(np.sqrt(1.0 + self.n_obs)))
 
     def note_residual(self, residual: float) -> None:
         """Fold one settled report-vs-audit residual into reputation.
@@ -174,7 +195,8 @@ class AgentPredictor:
                                    self.ewma_gen)
         rep = self.reputation
         if self.n_obs < self.warm_n:
-            return QoSEstimate(prior_lat, prior_cst, self.prior_q * rep)
+            return QoSEstimate(prior_lat, prior_cst,
+                               self._optimism(self.prior_q * rep))
         v = x.vector()
         # blend structural prior -> tree as evidence accumulates: the Eq.6
         # cost prior is nearly exact given affinity, so a barely-trained tree
@@ -187,7 +209,8 @@ class AgentPredictor:
         return QoSEstimate(
             latency=lat,
             cost=cst,
-            quality=float(np.clip(self.quality.predict_one(v), 0.0, 1.0)) * rep,
+            quality=self._optimism(
+                float(np.clip(self.quality.predict_one(v), 0.0, 1.0)) * rep),
         )
 
     def predict_rows(self, X, backend: str = "numpy"):
@@ -205,7 +228,8 @@ class AgentPredictor:
             prior_q=np.full(X.shape[0], self.prior_q), rep=self.reputation,
             raw_lat=self.lat.predict_batch(X, backend),
             raw_cst=self.cost.predict_batch(X, backend),
-            raw_q=self.quality.predict_batch(X, backend))
+            raw_q=self.quality.predict_batch(X, backend),
+            explore=self.explore)
 
     def update(self, x: PredictorInput, latency_obs: float, cost_obs: float,
                quality_obs: float) -> None:
@@ -217,15 +241,41 @@ class AgentPredictor:
         self.n_obs += 1
 
 
+def identity_fingerprint(agent_id: str, prices: TokenPrices) -> str:
+    """Stable identity key for reputation persistence across churn.
+
+    An agent that leaves and rejoins under the same id and published
+    token prices is the SAME market identity — ``float.hex`` makes the
+    price part exact (no repr rounding), so the fingerprint never
+    aliases two distinct price points.  Changing any published price
+    creates a fresh identity (and a fresh reputation): re-entering at a
+    different market position is a new offer, not a laundered one.
+    """
+    return "|".join((str(agent_id), float(prices.miss).hex(),
+                     float(prices.hit).hex(), float(prices.out).hex()))
+
+
 class PredictorPool:
-    """Independent AgentPredictor per backend (Appendix C.2.3)."""
+    """Independent AgentPredictor per backend (Appendix C.2.3).
+
+    Reputation is keyed on `identity_fingerprint` and survives
+    leave/rejoin churn: `remove_agent` parks the departing predictor's
+    reputation in a pool-lifetime ledger and `add_agent` restores it for
+    a matching fingerprint, so the PR 8 laundering move — decay your
+    reputation, churn out, rejoin with fresh 1.0 trust — inherits the
+    decayed weight instead.  Honest agents (reputation exactly 1.0) are
+    bit-unaffected: restoring 1.0 equals the fresh-predictor default.
+    """
 
     def __init__(self, prices_by_agent: dict[str, TokenPrices], **kw):
+        self._default_kw = dict(kw)
         self._preds = {aid: AgentPredictor(aid, pr, **kw)
                        for aid, pr in prices_by_agent.items()}
         # per-target stacked-forest cache, invalidated by membership or any
         # tree version change (any learn_one shifts leaf means)
         self._stacks: dict[str, dict] = {}
+        # identity_fingerprint -> parked reputation of departed agents
+        self._rep_ledger: dict[str, float] = {}
 
     def __getitem__(self, agent_id: str) -> AgentPredictor:
         return self._preds[agent_id]
@@ -234,16 +284,33 @@ class PredictorPool:
         return agent_id in self._preds
 
     def add_agent(self, agent_id: str, prices: TokenPrices, **kw) -> None:
-        """Elastic scale-out: a new agent joins mid-flight."""
-        self._preds[agent_id] = AgentPredictor(agent_id, prices, **kw)
+        """Elastic scale-out: a new agent joins mid-flight.
+
+        Predictor knobs default to the pool's construction-time ``**kw``
+        (so e.g. an exploration bonus survives churn); a rejoining
+        identity inherits its parked reputation (see class docstring).
+        """
+        kw = {**self._default_kw, **kw}
+        pred = AgentPredictor(agent_id, prices, **kw)
+        parked = self._rep_ledger.get(identity_fingerprint(agent_id, prices))
+        if parked is not None:
+            pred.reputation = parked
+        self._preds[agent_id] = pred
         # a re-added id gets FRESH trees whose version counters restart, so
         # a version-keyed cache entry could collide with the old trees' —
         # membership changes always drop the stacks
         self._stacks.clear()
 
     def remove_agent(self, agent_id: str) -> None:
-        """Elastic scale-in: drop an agent and its stacked-forest caches."""
-        self._preds.pop(agent_id, None)
+        """Elastic scale-in: drop an agent and its stacked-forest caches.
+
+        The departing reputation is parked under the agent's identity
+        fingerprint so churn cannot reset it (anti-laundering layer).
+        """
+        pred = self._preds.pop(agent_id, None)
+        if pred is not None:
+            fp = identity_fingerprint(pred.agent_id, pred.prices)
+            self._rep_ledger[fp] = pred.reputation
         self._stacks.clear()
 
     def agents(self):
@@ -329,4 +396,5 @@ class PredictorPool:
             warm_n=np.array([p.warm_n for p in preds], dtype=np.float64),
             prior_q=np.array([p.prior_q for p in preds]),
             rep=np.array([p.reputation for p in preds]),
-            raw_lat=raw["lat"], raw_cst=raw["cost"], raw_q=raw["quality"])
+            raw_lat=raw["lat"], raw_cst=raw["cost"], raw_q=raw["quality"],
+            explore=np.array([p.explore for p in preds]))

@@ -271,7 +271,8 @@ def _build_program(warm: bool, has_parents: bool, budget: int,
         raw_q = desc(f_q, dq)
 
         # transcription of predictor._blend_with_prior (same op order)
-        lpt, lb_, miss, hit, out_, ewma, n_obs, warm_n, prior_q, rep = blend
+        (lpt, lb_, miss, hit, out_, ewma, n_obs, warm_n, prior_q, rep,
+         expl) = blend
         pl_, aff, util2 = X[..., 0], X[..., 2], X[..., 8]
         uncached = pl_ * (1.0 - aff)
         prior_lat = (lb_ + lpt * uncached) * (1.0 + util2)
@@ -286,6 +287,13 @@ def _build_program(warm: bool, has_parents: bool, budget: int,
         cst = jnp.where(cold, prior_cst, cst)
         qual = jnp.where(cold, prior_q * rep,
                          jnp.clip(raw_q, 0.0, 1.0) * rep)
+        # optimism bonus (predictor._optimism): applied only where the
+        # per-agent explore knob is nonzero, so the default-0 fleet keeps
+        # the exact pre-bonus values (no min-clamp is ever taken)
+        qual = jnp.where(expl != 0.0,
+                         jnp.minimum(1.0, qual
+                                     + expl / jnp.sqrt(1.0 + n_obs)),
+                         qual)
 
         # ---- Eq.-1 client value -> pruned welfare (valuation.client_value)
         delta, lscale, vscale = val_cfg[0], val_cfg[1], val_cfg[2]
@@ -461,12 +469,13 @@ class FusedRoutingStep:
 
         # per-agent blend parameters (padded agents: all-zero params with
         # warm_n=1 -> cold prior-only -> value 0, masked out regardless)
-        blend = np.zeros((10, mb), np.float32)
+        blend = np.zeros((11, mb), np.float32)
         for i, aid in enumerate(agent_ids):
             p = r.pool[aid]
             blend[:, i] = (p.prior_lpt, p.prior_lb, p.prices.miss,
                            p.prices.hit, p.prices.out, p.ewma_gen,
-                           p.n_obs, p.warm_n, p.prior_q, p.reputation)
+                           p.n_obs, p.warm_n, p.prior_q, p.reputation,
+                           p.explore)
         blend[7, m:] = 1.0
 
         f_lat, dl = self.forests["lat"].sync(r.pool, "lat", agent_ids, mb)

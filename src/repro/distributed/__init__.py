@@ -1,3 +1,6 @@
+"""Distribution layer: logical-axis sharding rules (`sharding`) and the
+process-parallel super-hub shard workers of the hubs-of-hubs federation
+(`federation`)."""
 from repro.distributed.sharding import (
     ShardingPolicy,
     apply_policy,

@@ -88,6 +88,12 @@ DECODE_PARAM_RULES = {
 
 @dataclass(frozen=True)
 class ShardingPolicy:
+    """Maps logical axis names to mesh axes for activations and params.
+
+    ``acts`` holds the activation rules consulted by `shard`; ``params``
+    overlays parameter-specific rules (FSDP/ZeRO assignments) on top of
+    them.  Resolution applies divisibility fallback and never assigns one
+    mesh axis to two dims of the same tensor."""
     mesh: Mesh
     acts: dict = field(default_factory=lambda: dict(DEFAULT_RULES))
     params: dict = field(default_factory=dict)
@@ -127,21 +133,26 @@ class ShardingPolicy:
         return P(*spec)
 
     def act_spec(self, logical_axes, dims=None) -> P:
+        """PartitionSpec for an activation under the ``acts`` rules."""
         rules = dict(self.acts)
         return self._resolve(logical_axes, dims, rules)
 
     def param_spec(self, logical_axes, dims=None) -> P:
+        """PartitionSpec for a parameter (``params`` overlaid on ``acts``)."""
         rules = dict(self.acts)
         rules.update(self.params)
         return self._resolve(logical_axes, dims, rules)
 
     def act_sharding(self, logical_axes, dims=None) -> NamedSharding:
+        """`act_spec` bound to this policy's mesh as a NamedSharding."""
         return NamedSharding(self.mesh, self.act_spec(logical_axes, dims))
 
     def param_sharding(self, logical_axes, dims=None) -> NamedSharding:
+        """`param_spec` bound to this policy's mesh as a NamedSharding."""
         return NamedSharding(self.mesh, self.param_spec(logical_axes, dims))
 
     def with_rules(self, acts=None, params=None) -> "ShardingPolicy":
+        """A copy of this policy with rule overrides merged in."""
         new_acts = dict(self.acts)
         new_acts.update(acts or {})
         new_params = dict(self.params)
@@ -160,11 +171,13 @@ _state = threading.local()
 
 
 def current_policy() -> ShardingPolicy | None:
+    """The thread-local active policy (None outside `apply_policy`)."""
     return getattr(_state, "policy", None)
 
 
 @contextlib.contextmanager
 def apply_policy(policy: ShardingPolicy | None):
+    """Make ``policy`` the thread-local active policy for the block."""
     prev = current_policy()
     _state.policy = policy
     try:

@@ -14,6 +14,18 @@ Two serving loops:
 
         python -m repro.launch.serve --sim-mode event --agents 128 \\
             --n-dialogues 10000 --arrival-rate 60 --hubs 8 --solver dense
+
+    ``--super-hubs K`` (event mode) federates the simulator itself:
+    K super-hub shards, each with its own router, price book and event
+    heap, advance independently and synchronize every ``--epoch`` virtual
+    seconds via price-book gossip, cross-super-hub spill and exactly-once
+    dialogue migration (`repro.serving.federation`).  Federation scale
+    example (the SCALE_1K preset's shape)::
+
+        python -m repro.launch.serve --sim-mode event --agents 1024 \\
+            --n-dialogues 100000 --arrival-rate 768 --solver dense \\
+            --warm-start --super-hubs 8 --epoch 0.5 \\
+            --federation-parallel process --max-inflight 2048
 """
 from __future__ import annotations
 
@@ -25,8 +37,9 @@ from repro.core.adversary import POLICIES, AdversaryMix
 from repro.core.baselines import BASELINES
 from repro.core.solvers import available_solvers
 from repro.serving import (DAG_WORKLOADS, EventSimulator, RoutingProfiler,
-                           SimCluster, WorkloadSpec, generate, iter_dialogues,
-                           load_trace, make_arrivals, run_workload)
+                           SimCluster, WorkloadSpec, build_federation,
+                           generate, iter_dialogues, load_trace,
+                           make_arrivals, run_workload)
 
 
 def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
@@ -34,15 +47,18 @@ def build_router(name: str, infos, *, n_hubs: int = 1, payment_mode="warmstart",
                  spill: bool = True, batched: bool = True,
                  predictor_backend: str = "numpy", seed: int = 0,
                  reputation: bool = True, audit_ledger: bool = False,
-                 fused: bool = False):
+                 fused: bool = False, explore_bonus: float = 0.0):
     """Build the IEMAS router (or a named baseline) over ``infos``."""
     if name == "iemas":
+        kw = {}
+        if explore_bonus:
+            kw["predictor_kw"] = {"explore": explore_bonus}
         return IEMASRouter(infos, n_hubs=n_hubs, payment_mode=payment_mode,
                            solver=solver, warm_start=warm_start, spill=spill,
                            batched=batched,
                            predictor_backend=predictor_backend,
                            reputation=reputation, audit_ledger=audit_ledger,
-                           fused=fused)
+                           fused=fused, **kw)
     return BASELINES[name](infos, seed=seed)
 
 
@@ -85,6 +101,26 @@ def main():
                          "standing per-agent duals and dispatches "
                          "provisionally instead of waiting out the "
                          "batch window (needs --warm-start)")
+    ap.add_argument("--super-hubs", type=int, default=1,
+                    help="event mode: shard the fleet into K super-hubs, "
+                         "each with its own router/price-book/event heap "
+                         "advancing independently between epochs "
+                         "(repro.serving.federation); 1 = the single-heap "
+                         "EventSimulator (bit-exact oracle)")
+    ap.add_argument("--epoch", type=float, default=0.25,
+                    help="federation: virtual seconds between "
+                         "synchronization boundaries (price-book gossip, "
+                         "cross-super-hub spill, dialogue migration)")
+    ap.add_argument("--federation-parallel", default="inline",
+                    choices=["inline", "process"],
+                    help="federation: advance shards inline, or give each "
+                         "super-hub its own OS process with the epoch "
+                         "advances overlapped (bit-identical either way)")
+    ap.add_argument("--explore-bonus", type=float, default=0.0,
+                    help="optimism bonus on predicted quality, "
+                         "explore/sqrt(1+n_obs): breaks KV-affinity "
+                         "entrenchment of cold-start mismatches "
+                         "(0.0 = exact no-op)")
     ap.add_argument("--engine-mode", default=None,
                     choices=["real", "analytic"],
                     help="engine backend (default: real in closed mode, "
@@ -147,6 +183,21 @@ def main():
         if args.incremental:
             ap.error("--fused batches whole rounds through one program and "
                      "cannot dispatch provisionally; drop --incremental")
+    if args.super_hubs > 1:
+        if args.sim_mode != "event":
+            ap.error("--super-hubs federates the event-driven simulator; "
+                     "pass --sim-mode event")
+        if args.router != "iemas":
+            ap.error("federation shards the IEMAS router's price books; "
+                     "baselines run single-heap only")
+        if args.fused:
+            ap.error("--fused runs one global device-resident market and "
+                     "cannot be sharded across super-hub event heaps; "
+                     "drop one of the two")
+        if args.adversary != "none":
+            ap.error("--adversary seeds its population over one global "
+                     "cluster; strategic-agent studies run single-heap "
+                     "(benchmarks/adversarial.py)")
     if args.incremental:
         from repro.core.solvers import get_solver
         if args.sim_mode != "event":
@@ -160,6 +211,52 @@ def main():
 
     engine_mode = args.engine_mode or (
         "analytic" if args.sim_mode == "event" else "real")
+    spec = WorkloadSpec(args.workload, n_dialogues=args.dialogues,
+                        seed=args.seed + 1)
+    if args.workload in DAG_WORKLOADS and args.sim_mode != "event":
+        ap.error(f"workload {args.workload!r} is a workflow DAG; precedence "
+                 f"scheduling needs --sim-mode event")
+    arrivals = None
+    if args.sim_mode == "event":
+        if args.trace_file:
+            arrivals = make_arrivals("trace",
+                                     trace=load_trace(args.trace_file))
+        else:
+            arrivals = make_arrivals(
+                "poisson" if args.arrival_rate else "sync",
+                rate=args.arrival_rate or 8.0, seed=args.seed + 2)
+
+    if args.super_hubs > 1:
+        # hubs-of-hubs: the federation builds its own per-shard
+        # cluster/router/loop triples (repro.serving.federation)
+        rkw = dict(payment_mode=args.payment_mode, solver=args.solver,
+                   warm_start=args.warm_start, spill=not args.no_spill,
+                   batched=not args.scalar_phase1,
+                   predictor_backend=args.predictor_backend,
+                   reputation=not args.no_reputation,
+                   audit_ledger=args.audit_ledger)
+        if args.hubs != 1:      # default: recut each shard by agents_per_hub
+            rkw["n_hubs"] = args.hubs
+        if args.explore_bonus:
+            rkw["predictor_kw"] = {"explore": args.explore_bonus}
+        fed = build_federation(
+            iter_dialogues(spec), n_agents=args.agents,
+            super_hubs=args.super_hubs, arrivals=arrivals, seed=args.seed,
+            engine_mode=engine_mode, max_inflight=args.max_inflight,
+            router_kwargs=rkw,
+            loop_kwargs=dict(batch_cap=args.batch_cap,
+                             batch_window=args.batch_window,
+                             incremental=args.incremental, lean=True),
+            cluster_kwargs=dict(fail_prob=args.fail_prob,
+                                straggle_prob=args.straggle_prob),
+            epoch=args.epoch, parallel=args.federation_parallel)
+        metrics = fed.run()
+        print(json.dumps(metrics, indent=2, default=float))
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(metrics, f, indent=2, default=float)
+        return
+
     mix = None
     if args.adversary != "none":
         mix = AdversaryMix(policy=args.adversary,
@@ -180,20 +277,9 @@ def main():
                           seed=args.seed,
                           reputation=not args.no_reputation,
                           audit_ledger=args.audit_ledger,
-                          fused=args.fused)
-    spec = WorkloadSpec(args.workload, n_dialogues=args.dialogues,
-                        seed=args.seed + 1)
-    if args.workload in DAG_WORKLOADS and args.sim_mode != "event":
-        ap.error(f"workload {args.workload!r} is a workflow DAG; precedence "
-                 f"scheduling needs --sim-mode event")
+                          fused=args.fused,
+                          explore_bonus=args.explore_bonus)
     if args.sim_mode == "event":
-        if args.trace_file:
-            arrivals = make_arrivals("trace",
-                                     trace=load_trace(args.trace_file))
-        else:
-            arrivals = make_arrivals(
-                "poisson" if args.arrival_rate else "sync",
-                rate=args.arrival_rate or 8.0, seed=args.seed + 2)
         sim = EventSimulator(cluster, router, iter_dialogues(spec),
                              arrivals=arrivals, batch_cap=args.batch_cap,
                              batch_window=args.batch_window,

@@ -3,8 +3,10 @@ from repro.serving.analytic import AnalyticEngine
 from repro.serving.cluster import SimCluster, make_router, run_workload
 from repro.serving.engine import AgentEngine, ServeResult
 from repro.serving.evaluator import SimulatedSkillEvaluator, TokenSpanEvaluator
+from repro.serving.federation import (FederatedSimulator, InlineShard,
+                                      build_federation)
 from repro.serving.simulator import (EventSimulator, RoutingProfiler,
-                                     simulate_workload)
+                                     ShardEventLoop, simulate_workload)
 from repro.serving.telemetry import TelemetryTracker
 from repro.serving.workload import (DAG_WORKLOADS, WORKLOADS, ArrivalProcess,
                                     DagScript, DagStep, DialogueScript,

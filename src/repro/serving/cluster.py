@@ -106,7 +106,8 @@ class SimCluster:
                  straggle_prob: float = 0.0, cache_slots: int | None = None,
                  quarantine_cooldown: float = 30.0, warmup: bool = False,
                  engine_mode: str = "real",
-                 adversary_mix: AdversaryMix | None = None):
+                 adversary_mix: AdversaryMix | None = None,
+                 profiles: list[AgentProfile] | None = None):
         if engine_mode not in ("real", "analytic"):
             raise ValueError(f"engine_mode must be real|analytic, "
                              f"got {engine_mode!r}")
@@ -120,7 +121,11 @@ class SimCluster:
         # receives add_engine_compute() per dispatch + phase() around Phase 4
         self.profiler = None
         self.agents: dict[str, AgentRuntime] = {}
-        for prof in agent_profiles(n_agents, seed=seed):
+        # ``profiles`` overrides the generated population: federated shards
+        # pass their partition of the GLOBAL agent_profiles() list so ids,
+        # prices and engine seeds match the single-heap fleet exactly
+        for prof in (profiles if profiles is not None
+                     else agent_profiles(n_agents, seed=seed)):
             self._add_runtime(prof, fail_prob, straggle_prob, cache_slots,
                               max_new_tokens)
         # strategic-agent injection (repro.core.adversary): policies keyed by

@@ -61,9 +61,10 @@ from repro.serving.workload import (ArrivalProcess, DagScript, DialogueScript,
                                     SyncArrivals)
 from repro.utils.timing import phase_scope
 
-# heap-event kinds; completions live in the cluster's heap.  ARRIVAL < ROUTE
-# so same-instant arrivals are admitted before the batch is formed.
-_ARRIVAL, _ROUTE = 0, 1
+# heap-event kinds; completions live in the cluster's heap.  ARRIVAL <
+# MIGRATE < ROUTE so same-instant arrivals and migration hand-offs are
+# admitted before the batch is formed.
+_ARRIVAL, _MIGRATE, _ROUTE = 0, 1, 2
 _EMPTY = np.zeros(0, np.int32)
 
 
@@ -210,10 +211,19 @@ class _Dialogue:
     children: dict = field(default_factory=dict)      # step -> child steps
     inflight: set = field(default_factory=set)        # dispatched step ids
     remaining: int = 0                                # steps not yet done
+    migrations: int = 0   # cross-super-hub hand-offs this dialogue survived
 
 
-class EventSimulator:
+class ShardEventLoop:
     """Open-loop event-driven serving driver (see module docstring).
+
+    This class is the reusable *shard* event loop: one heap, one clock,
+    one ready deque, one admission window over ONE ``(cluster, router)``
+    pair.  `EventSimulator` (the public single-heap simulator) is a thin
+    subclass that treats the whole fleet as a single shard;
+    `repro.serving.federation.FederatedSimulator` composes S of these —
+    one per super-hub — and advances them independently between
+    synchronization epochs via `advance_until`.
 
     Parameters
     ----------
@@ -252,6 +262,14 @@ class EventSimulator:
         processed (bounds memory on 10k-dialogue runs; decisions are
         unaffected — the ledger/engines hold their own copies).
     on_round : optional callback ``(n_rounds, cluster)`` after each ROUTE.
+    rid_prefix : prepended to every request id (``"s3:r17"``); federated
+        shards pass ``"s{k}:"`` so ids stay globally unique across shard
+        ledgers.  The default ``""`` keeps the historical ``r{N}`` ids
+        (and thereby ledger-head parity) for single-heap runs.
+    external_arrivals : when True the loop never pulls from ``dialogues``
+        or ``arrivals`` itself — a parent driver feeds arrivals through
+        `inject_arrival` and signals end-of-stream via `close_arrivals`
+        (the `FederatedSimulator` S>1 partitioning mode).
     """
 
     def __init__(self, cluster, router, dialogues, *,
@@ -266,7 +284,9 @@ class EventSimulator:
                  max_events: int = 5_000_000,
                  horizon: float | None = None,
                  lean: bool = False,
-                 on_round=None):
+                 on_round=None,
+                 rid_prefix: str = "",
+                 external_arrivals: bool = False):
         self.cluster = cluster
         self.router = router
         self.arrivals = arrivals if arrivals is not None else SyncArrivals()
@@ -286,6 +306,8 @@ class EventSimulator:
         self.horizon = horizon
         self.lean = lean
         self.on_round = on_round
+        self.rid_prefix = str(rid_prefix)
+        self._external = bool(external_arrivals)
 
         if max_inflight is not None and max_inflight < 1:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
@@ -307,10 +329,15 @@ class EventSimulator:
         self._arrival_times = self.arrivals.times()
         self._arrivals_open = True
         self._truncated_reason: str | None = None
+        self._started = False
+        self._stopped = False
+        self._wall0 = 0.0
         # aggregates (bounded memory — no per-dialogue lists)
         self.n_arrived = 0
         self.peak_inflight = 0
         self.n_completed_dialogues = 0
+        self.migrated_in = 0
+        self.migrated_out = 0
         self._dlg_latency_sum = 0.0
         self._wait_sum = 0.0
         self._wait_n = 0
@@ -321,8 +348,8 @@ class EventSimulator:
         self._seq += 1
 
     def _schedule_next_arrival(self) -> None:
-        if not self._arrivals_open:
-            return
+        if self._external or not self._arrivals_open:
+            return      # federation mode: the parent feeds inject_arrival
         script = next(self._dialogue_iter, None)
         if script is None:
             self._arrivals_open = False
@@ -360,6 +387,129 @@ class EventSimulator:
     def _work_remains(self) -> bool:
         return bool(self._arrivals_open or self.backlog or self.ready
                     or self.states)
+
+    # ---------------- federation hooks (external arrivals + migration) ----
+    def inject_arrival(self, t: float, script) -> None:
+        """Driver-fed arrival (``external_arrivals`` mode): push one ARRIVAL.
+
+        Mirrors `_schedule_next_arrival`'s normalization (clamp to >= 0,
+        quantize rounds up to the next boundary) so a parent driver
+        partitioning one global arrival stream across shards preserves
+        single-heap arrival semantics: same-time arrivals keep stream
+        order (heap seq), and ARRIVAL still sorts before same-instant
+        ROUTE ticks.
+        """
+        t = max(float(t), 0.0)
+        if self.quantize is not None:
+            q = self.quantize
+            t = math.ceil(t / q - 1e-9) * q
+        self._push(t, _ARRIVAL, script)
+
+    def close_arrivals(self) -> None:
+        """Signal end of the parent's global dialogue stream (federation).
+
+        Already-injected ARRIVAL events still process; this only lets the
+        loop's termination/truncation logic know no further work will be
+        fed, exactly like the internal iterator drying up.
+        """
+        self._arrivals_open = False
+
+    def residual_units(self, now: float, min_wait: float,
+                       max_migrations: int = 2) -> list[dict]:
+        """Dialogues stuck in this shard's ready queue >= ``min_wait``.
+
+        A dialogue qualifies when it has NO in-flight engine work (the
+        migration precondition — a completion racing the hand-off would
+        settle twice) and its longest-waiting ready unit has queued at
+        least ``min_wait`` virtual seconds.  Returns one summary row per
+        dialogue (domain, difficulty, queued-unit count, max wait, and
+        the stuck unit's prompt length — the cost driver for a remote
+        bid); the federation prices these rows against gossiped remote
+        capacity.  ``max_migrations`` stops spill ping-pong: a dialogue
+        that already migrated that many times stays put.
+        """
+        agg: dict[str, dict] = {}
+        for did, step in self.ready:
+            st = self.states.get(did)
+            if st is None or st.busy or st.inflight or \
+                    st.migrations >= max_migrations:
+                continue
+            if step is None:
+                since = st.ready_since
+                plen = len(st.history) + len(st.pending)
+            else:
+                since = st.step_ready_since[step]
+                plen = len(st.step_prompt[step])
+            waited = now - since
+            row = agg.setdefault(did, {
+                "dialogue_id": did, "domain": st.script.domain,
+                "difficulty": st.script.difficulty, "units": 0,
+                "waited": waited, "prompt_len": plen})
+            row["units"] += 1
+            if waited > row["waited"]:
+                row["waited"], row["prompt_len"] = waited, plen
+        return [r for r in agg.values() if r["waited"] >= min_wait]
+
+    def extract_dialogue(self, did: str) -> _Dialogue:
+        """Surrender one dialogue's session state for migration.
+
+        Only dialogues with no in-flight work may leave (enforced);
+        every queued ready unit is withdrawn with it.  The arrived count
+        and dispatch attribution stay on this shard — exactly-once
+        accounting counts an arrival where it was admitted and a
+        completion wherever the dialogue finishes.  Vacating the window
+        slot admits from the backlog, same as a local finish.
+        """
+        st = self.states.pop(did)
+        if st.busy or st.inflight:
+            self.states[did] = st       # restore before failing loudly
+            raise RuntimeError(f"cannot migrate {did!r}: in-flight work")
+        self.ready = deque(k for k in self.ready if k[0] != did)
+        self.migrated_out += 1
+        st.migrations += 1
+        if self.backlog:
+            self._admit(self.backlog.popleft())
+        return st
+
+    def admit_migrant(self, st: _Dialogue, t: float) -> None:
+        """Schedule adoption of a migrated dialogue at virtual time ``t``.
+
+        Queued as a MIGRATE event (admitted before any same-instant ROUTE
+        tick) so shard clocks are never touched at the hand-off — epoch
+        boundaries stay pure pauses and S=1 federation parity holds.
+        """
+        self._push(max(float(t), 0.0), _MIGRATE, st)
+
+    def _admit_migrant(self, st: _Dialogue) -> None:
+        """Adopt a migrated dialogue's state (cross-super-hub hand-off).
+
+        The dialogue was counted as arrived on its home shard, so
+        ``n_arrived`` is untouched; its ready units re-enter this queue
+        with fresh wait clocks (remote placement starts a new queueing
+        episode) and bid incrementally like any local admission.
+        Migrants bypass the ``max_inflight`` window — they were admitted
+        globally on their home shard, and parking them in the local
+        backlog could strand a dialogue behind a shard that never
+        drains.
+        """
+        now = self.cluster.now
+        self.migrated_in += 1
+        did = st.script.dialogue_id
+        self.states[did] = st
+        self.peak_inflight = max(self.peak_inflight, len(self.states))
+        if isinstance(st.script, DagScript):
+            # ready = prompt built, not completed (migration precondition
+            # already guarantees nothing is in flight)
+            for sid in sorted(st.step_prompt):
+                if sid in st.step_ctx:
+                    continue
+                st.step_ready_since[sid] = now
+                self.ready.append((did, sid))
+                self._try_incremental()
+            return
+        st.ready_since = now
+        self.ready.append((did, None))
+        self._try_incremental()
 
     # ---------------- dialogue lifecycle ----------------
     def _admit(self, script) -> None:
@@ -500,7 +650,7 @@ class EventSimulator:
                                              for p in sorted(s.parents)),
                     "step_id": step, "role": s.role}
         req = Request(
-            request_id=f"r{self._rid}", dialogue_id=did,
+            request_id=f"{self.rid_prefix}r{self._rid}", dialogue_id=did,
             tokens=prompt.astype(np.int32), turn=turn, domain=domain,
             max_new_tokens=self.max_new_tokens, meta=meta)
         self._rid += 1
@@ -583,27 +733,51 @@ class EventSimulator:
         self.ready.extendleft(reversed(unmatched))
 
     # ---------------- main loop ----------------
-    def run(self) -> dict:
-        """Run to completion (or truncation) and return the metrics dict."""
-        wall0 = time.perf_counter()
+    def start(self) -> None:
+        """Idempotent initial scheduling (first arrival + quantize tick 0)."""
+        if self._started:
+            return
+        self._started = True
+        self._wall0 = time.perf_counter()
         self._schedule_next_arrival()
         if self.quantize is not None:
             self._schedule_route(0.0)
-        while True:
+
+    def _truncate(self, reason: str) -> None:
+        """Record a truncation and stop the loop for good (sticky)."""
+        self._truncated_reason = reason
+        self._stopped = True
+
+    def advance_until(self, t_end: float | None) -> None:
+        """Process every event at virtual time ``<= t_end``, then pause.
+
+        The workhorse behind both `run` (``t_end=None``: run to
+        completion/truncation) and `FederatedSimulator` epochs.  Pausing
+        is pure — no clock is touched, no event reordered — so advancing
+        in epoch segments replays the exact event sequence of one
+        continuous run (the S=1 federation bit-parity contract).  Once a
+        truncation fires the loop is stopped for good; further calls
+        return immediately.
+        """
+        self.start()
+        while not self._stopped:
             if self._n_processed >= self.max_events:
-                self._truncated_reason = f"max_events ({self.max_events})"
+                self._truncate(f"max_events ({self.max_events})")
                 break
             t = self._next_time()
             if t is None:
+                if self._external and self._arrivals_open:
+                    break       # idle shard: awaiting injected arrivals
                 if self._work_remains():
                     # e.g. an admission window far smaller than the stream:
                     # arrivals drained with the backlog still populated —
                     # never exit silently with work on the floor
-                    self._truncated_reason = "event queue drained with " \
-                        "work remaining"
+                    self._truncate("event queue drained with work remaining")
                 break
+            if t_end is not None and t > t_end:
+                break           # next event lies beyond this epoch
             if self.horizon is not None and t > self.horizon:
-                self._truncated_reason = f"horizon ({self.horizon}s)"
+                self._truncate(f"horizon ({self.horizon}s)")
                 break
             self._handle_completions(t)
             run_route = False
@@ -613,6 +787,8 @@ class EventSimulator:
                 if kind == _ARRIVAL:
                     self._on_arrival(payload)
                     self._schedule_next_arrival()
+                elif kind == _MIGRATE:
+                    self._admit_migrant(payload)
                 else:
                     self._route_at = None
                     run_route = True
@@ -634,7 +810,7 @@ class EventSimulator:
                 if self.on_round is not None:
                     self.on_round(self._rounds, self.cluster)
                 if self._rounds >= self.max_rounds:
-                    self._truncated_reason = f"max_rounds ({self.max_rounds})"
+                    self._truncate(f"max_rounds ({self.max_rounds})")
                     break
             # keep exactly one ROUTE event pending whenever work remains
             if self.quantize is not None:
@@ -642,7 +818,12 @@ class EventSimulator:
                     self._schedule_route(self.cluster.now + self.quantize)
             elif self.ready and self._route_at is None:
                 self._schedule_route(self.cluster.now + self.batch_window)
-        return self._finalize(time.perf_counter() - wall0)
+
+    def run(self) -> dict:
+        """Run to completion (or truncation) and return the metrics dict."""
+        self.start()
+        self.advance_until(None)
+        return self._finalize(time.perf_counter() - self._wall0)
 
     def _finalize(self, wall_s: float) -> dict:
         out = self.cluster.metrics()
@@ -659,6 +840,8 @@ class EventSimulator:
             "truncated": self._truncated_reason is not None,
             "dispatched_requests": self.n_dispatched,
             "incremental_dispatched": self.n_incremental,
+            "migrated_in": self.migrated_in,
+            "migrated_out": self.migrated_out,
         })
         # turns completed = completed request records (retries excluded)
         out["completed_turns"] = out.get("n", 0)
@@ -677,7 +860,8 @@ class EventSimulator:
             out["utilization"] = busy / (now * max(1, len(self.cluster.agents)))
         if self._truncated_reason is not None:
             warnings.warn(
-                f"EventSimulator: truncated by {self._truncated_reason} with "
+                f"{type(self).__name__}: truncated by "
+                f"{self._truncated_reason} with "
                 f"{out['unfinished_dialogues']} admitted/backlogged dialogues "
                 f"unfinished (arrivals "
                 f"{'still open' if self._arrivals_open else 'drained'}); "
@@ -689,6 +873,16 @@ class EventSimulator:
         if self.profiler is not None:
             out["routing"] = self.profiler.report()
         return out
+
+
+class EventSimulator(ShardEventLoop):
+    """The public single-heap simulator: the whole fleet as ONE shard.
+
+    Pure façade — every knob and behavior lives in `ShardEventLoop`; this
+    name is what launchers, benchmarks and the parity suite construct for
+    non-federated runs, and what `FederatedSimulator(S=1)` must reproduce
+    bit-for-bit.
+    """
 
 
 def simulate_workload(cluster, router, dialogues, *, profile: bool = True,

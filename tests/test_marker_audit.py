@@ -20,6 +20,8 @@ TIER1_MODULES = {
     "test_column_market",
     "test_dag_workload",
     "test_docs",
+    "test_exploration",
+    "test_federation",
     "test_hoeffding",
     "test_hoeffding_batch",
     "test_hub_sharding",
@@ -28,6 +30,7 @@ TIER1_MODULES = {
     "test_mechanism",
     "test_models",
     "test_predictor_batch",
+    "test_reputation_identity",
     "test_routing_fused",
     "test_run_workload",
     "test_sharding",

@@ -1,0 +1,109 @@
+"""Identity-persistent reputation: the churn-laundering hole is closed.
+
+Before this layer, an agent whose reported quality had been audited down
+could `remove_agent` + `add_agent` itself back and rejoin at the honest
+1.0 reputation — leave/rejoin was a full pardon.  Reputation is now
+parked under a stable identity fingerprint (agent id + exact posted
+prices) when an agent departs, and restored when the same market identity
+rejoins; only a genuinely different identity (changed prices = a new
+posted offer) starts fresh.
+"""
+import numpy as np
+
+from repro.core import IEMASRouter
+from repro.core.mechanism import AgentInfo, CompletionObs, Request
+from repro.core.predictor import PredictorPool, identity_fingerprint
+from repro.core.pricing import TokenPrices
+
+P = TokenPrices(0.01, 0.002, 0.03)
+
+
+def _decay(pool, aid, k=6, residual=0.4):
+    for _ in range(k):
+        pool.note_residual(aid, residual)
+    return pool[aid].reputation
+
+
+def test_fingerprint_binds_id_and_prices():
+    """Same id + same prices = same identity; any price change (or id
+    change) is a different identity."""
+    assert identity_fingerprint("a", P) == identity_fingerprint(
+        "a", TokenPrices(0.01, 0.002, 0.03))
+    assert identity_fingerprint("a", P) != identity_fingerprint("b", P)
+    assert identity_fingerprint("a", P) != identity_fingerprint(
+        "a", TokenPrices(0.0100001, 0.002, 0.03))
+
+
+def test_rejoin_inherits_decayed_reputation():
+    """The laundering path: decay -> leave -> rejoin must NOT reset."""
+    pool = PredictorPool({"adv": P})
+    rep = _decay(pool, "adv")
+    assert rep < 0.9
+    pool.remove_agent("adv")
+    pool.add_agent("adv", P)
+    assert pool["adv"].reputation == rep      # inherited, not pardoned
+
+
+def test_new_identity_starts_fresh():
+    """A different posted-price vector is a different market identity and
+    rightfully starts at the honest 1.0 (entry is not punished)."""
+    pool = PredictorPool({"adv": P})
+    _decay(pool, "adv")
+    pool.remove_agent("adv")
+    pool.add_agent("adv", TokenPrices(0.02, 0.002, 0.03))
+    assert pool["adv"].reputation == 1.0
+
+
+def test_honest_agents_unaffected_by_churn():
+    """An agent that never drew a residual churns in and out at exactly
+    1.0 — the honest fixed point is bit-preserved."""
+    pool = PredictorPool({"h": P})
+    pool.remove_agent("h")
+    pool.add_agent("h", P)
+    assert pool["h"].reputation == 1.0
+
+
+def test_launderer_no_longer_recovers_honest_tier_weight():
+    """Router-level regression: after audits crush a misreporter's
+    reputation, leave/rejoin no longer restores honest-tier w-blend
+    weight — its reputation-scaled quality (and hence bid values) stays
+    at the decayed tier."""
+    agents = [
+        AgentInfo("hon", P, capacity=4, domains=("qa",)),
+        AgentInfo("adv", P, capacity=4, domains=("qa",)),
+    ]
+    router = IEMASRouter(agents, solver="dense", n_hubs=1, warm_start=True)
+    telem = {"router_inflight": 0, "router_rps": 0.0,
+             "agent_inflight": {}, "agent_rps": {}}
+    rng = np.random.default_rng(0)
+    # the adversary inflates its reports; the audit channel exposes it
+    # (free_slots pins each probe onto the adversary so the decay runs
+    # through the real Phase-4 settlement path)
+    for t in range(8):
+        req = Request(f"r{t}", "d0", rng.integers(1, 255, 24, np.int32), t,
+                      domain="qa")
+        [dec] = router.route_batch([req], telem,
+                                   free_slots={"hon": 0, "adv": 4})
+        assert dec.agent_id == "adv"
+        router.on_complete(req.request_id, CompletionObs(
+            latency=0.05, n_prompt=24, n_hit=0, n_gen=4,
+            quality=0.95, audit_quality=0.45))
+    rep_before = router.pool["adv"].reputation
+    assert rep_before < 0.9
+    router.remove_agent("adv")
+    router.add_agent(AgentInfo("adv", P, capacity=4, domains=("qa",)))
+    assert router.pool["adv"].reputation == rep_before
+    # and the w-blend weight it bids with reflects the decayed tier: the
+    # rejoined adversary's cold-start quality is its prior scaled by the
+    # inherited reputation, strictly below the honest agent's
+    q_adv = router.pool["adv"].predict(_x()).quality
+    q_hon = router.pool["hon"].predict(_x()).quality
+    assert q_adv < q_hon
+
+
+def _x():
+    from repro.core.predictor import PredictorInput
+    return PredictorInput(prompt_len=24, turn=0, affinity=0.0,
+                          router_inflight=0, router_rps=0.0,
+                          agent_inflight=0, agent_rps=0.0, capacity=4,
+                          utilization=0.0, domain_match=1.0)
